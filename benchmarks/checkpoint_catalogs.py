@@ -1,0 +1,53 @@
+"""Arch-applicability (DESIGN.md §4): the paper's planner on every arch.
+
+For each of the 10 assigned architectures, build the ABSTRACT parameter
+tree (eval_shape — no allocation, works for the 671B model), pack it into
+shard-group "files", and run Algorithm JLCM to choose (n_i, S_i, pi_ij)
+over the 12-node testbed. Emits per-arch catalog stats: total checkpoint
+bytes, #groups, chosen redundancy, restore-latency bound, storage cost.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, testbed
+from repro.checkpoint import plan_for_params
+from repro.configs.registry import ARCHS, get_config
+from repro.launch.steps import build_model
+
+
+def run():
+    cl = testbed()
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        model = build_model(cfg, None, dtype=jnp.bfloat16, remat="none")
+        abstract = jax.eval_shape(model.init, jax.random.key(0))
+        nbytes = sum(
+            int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+            for x in jax.tree.leaves(abstract)
+        )
+        # plan over the abstract tree; chunk/group sizes scaled per arch so
+        # the planner works the same regime for 135M..671B params
+        group_mb = max(64.0, nbytes / 2**20 / 200)  # <= ~200 groups
+        plan = plan_for_params(
+            abstract, cl, group_mb=group_mb, chunk_mb=group_mb / 8, theta=0.5
+        )
+        ns = np.asarray([g.n for g in plan.groups], float)
+        ks = np.asarray([g.k for g in plan.groups], float)
+        rows.append(
+            dict(
+                arch=arch,
+                ckpt_gb=round(nbytes / 2**30, 2),
+                groups=len(plan.groups),
+                mean_k=round(float(ks.mean()), 2),
+                mean_n=round(float(ns.mean()), 2),
+                redundancy=round(float((ns / ks).mean()), 2),
+                restore_bound_s=round(plan.latency_bound, 1),
+                storage_cost=round(plan.storage_cost, 1),
+            )
+        )
+        # every group must tolerate >= 2 failures (durability floor)
+        assert all(g.n - g.k >= 2 or g.n == cl.m for g in plan.groups), arch
+    emit(rows, "checkpoint_catalogs")
+    return rows

@@ -1,0 +1,56 @@
+"""Shared benchmark scaffolding: the paper's testbed scenario + CSV sink."""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.storage import tahoe_testbed
+
+RESULTS = Path(__file__).parent / "results"
+RESULTS.mkdir(exist_ok=True)
+
+
+def emit(rows: list[dict], name: str) -> None:
+    """Write rows to results/<name>.csv and echo `name,metric,value` lines."""
+    if not rows:
+        return
+    keys = list(rows[0])
+    path = RESULTS / f"{name}.csv"
+    with path.open("w") as f:
+        f.write(",".join(keys) + "\n")
+        for r in rows:
+            f.write(",".join(str(r[k]) for k in keys) + "\n")
+    for r in rows[: min(len(rows), 12)]:
+        print(f"{name}," + ",".join(f"{k}={r[k]}" for k in keys))
+    if len(rows) > 12:
+        print(f"{name},... ({len(rows)} rows -> {path})")
+
+
+def paper_catalog(r: int = 1000, file_mb: float = 150.0):
+    """The §V.B experiment: r files in four quarters with k = 6,7,6,4
+    (different chunk-size choices), paper arrival rates (~0.118/s agg)."""
+    ks = np.zeros(r, np.int32)
+    ks[0::4], ks[1::4], ks[2::4], ks[3::4] = 6, 7, 6, 4
+    lam = np.zeros(r)
+    lam[0::3] = 1.25 / 10000
+    lam[1::3] = 1.25 / 10000
+    lam[2::3] = 1.25 / 12000
+    chunk_mb = file_mb / ks  # per-file chunk size
+    return jnp.asarray(lam), jnp.asarray(ks, jnp.float32), np.asarray(chunk_mb)
+
+
+def timer(fn, *args, repeats: int = 3, **kw):
+    fn(*args, **kw)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") or isinstance(out, jax.Array) else None
+    return (time.perf_counter() - t0) / repeats
+
+
+def testbed():
+    return tahoe_testbed()

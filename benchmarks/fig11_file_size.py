@@ -1,0 +1,38 @@
+"""Fig. 11: latency grows super-linearly with file size (queueing), and
+the analytic bound tightly tracks simulated latency at every size."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import JLCMProblem, mean_latency_bound, solve
+from repro.storage import simulate
+from benchmarks.common import emit, paper_catalog, testbed
+
+
+def run():
+    cl = testbed()
+    r = 1000  # paper load: queueing delay must dominate for super-linearity
+    rows = []
+    prev = None
+    for file_mb in (50, 100, 150, 200):
+        lam, ks, chunk_mb = paper_catalog(r=r, file_mb=file_mb)
+        eff_chunk = float(np.average(chunk_mb, weights=np.asarray(lam)))
+        mom = cl.moments(eff_chunk)
+        prob = JLCMProblem(lam=lam, k=ks, moments=mom, cost=cl.cost, theta=2.0)
+        sol = solve(prob, max_iters=400)
+        bound = float(mean_latency_bound(sol.pi, lam, mom))
+        sim = float(simulate(jax.random.key(4), sol.pi, lam, cl, eff_chunk, 25000,
+                             per_file_chunk_mb=jnp.asarray(chunk_mb)).mean_latency())
+        growth = None if prev is None else round((sim - prev[1]) / (file_mb - prev[0]), 4)
+        rows.append(dict(file_mb=file_mb, latency_sim=round(sim, 2),
+                         latency_bound=round(bound, 2),
+                         bound_gap_pct=round(100 * (bound - sim) / sim, 1),
+                         marginal_s_per_mb=growth))
+        prev = (file_mb, sim)
+    emit(rows, "fig11_file_size")
+    # super-linear growth: marginal latency per MB increases with size
+    margs = [r_["marginal_s_per_mb"] for r_ in rows if r_["marginal_s_per_mb"]]
+    assert margs[-1] > margs[0], f"expected super-linear latency growth {margs}"
+    for r_ in rows:
+        assert r_["latency_sim"] <= r_["latency_bound"] * 1.03
+    return rows

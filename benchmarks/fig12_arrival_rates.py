@@ -1,0 +1,30 @@
+"""Fig. 12: as arrival rates grow, JLCM buys MORE redundancy (higher
+storage cost) to keep latency near-linear — autonomous latency/cost
+management under load."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import JLCMProblem, solve
+from benchmarks.common import emit, paper_catalog, testbed
+
+
+def run():
+    cl = testbed()
+    r = 1000
+    lam0, ks, chunk_mb = paper_catalog(r=r, file_mb=200)
+    eff_chunk = float(np.average(chunk_mb, weights=np.asarray(lam0)))
+    mom = cl.moments(eff_chunk)
+    rows = []
+    for scale in (0.55, 0.7, 0.85, 1.0):
+        lam = lam0 * scale
+        prob = JLCMProblem(lam=lam, k=ks, moments=mom, cost=cl.cost, theta=2.0)
+        sol = solve(prob, max_iters=400)
+        rows.append(dict(agg_rate_per_s=round(float(jnp.sum(lam)), 4),
+                         latency_bound=round(float(sol.latency_tight), 2),
+                         storage_cost=round(float(sol.cost), 1),
+                         mean_n=round(float(jnp.mean(sol.n.astype(jnp.float32))), 2)))
+    emit(rows, "fig12_arrival_rates")
+    assert rows[-1]["storage_cost"] >= rows[0]["storage_cost"] - 1e-6, \
+        "higher load should not buy less redundancy"
+    assert rows[-1]["latency_bound"] > rows[0]["latency_bound"]
+    return rows

@@ -1,0 +1,28 @@
+"""JLCM solver scaling: wall time and iterations vs catalog size r
+(the paper demonstrates r=1000; we sweep to 4000)."""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import JLCMProblem, solve
+from benchmarks.common import emit, paper_catalog, testbed
+
+
+def run():
+    cl = testbed()
+    rows = []
+    for r in (50, 200, 1000, 4000):
+        lam, ks, chunk_mb = paper_catalog(r=r)
+        eff = float(np.average(chunk_mb, weights=np.asarray(lam)))
+        prob = JLCMProblem(lam=lam, k=ks, moments=cl.moments(eff),
+                           cost=cl.cost, theta=2.0)
+        t0 = time.perf_counter()
+        sol = solve(prob, max_iters=300, eps=0.01)
+        wall = time.perf_counter() - t0
+        rows.append(dict(r=r, iterations=len(sol.objective_trace) - 1,
+                         wall_s=round(wall, 2),
+                         us_per_file_iter=round(wall / r / max(len(sol.objective_trace) - 1, 1) * 1e6, 2),
+                         objective=round(float(sol.objective), 2)))
+    emit(rows, "jlcm_scaling")
+    return rows

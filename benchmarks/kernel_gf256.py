@@ -1,0 +1,41 @@
+"""GF(256) encode throughput: ref (jnp scan) vs bitplane (MXU path) vs
+Pallas (interpret on CPU — correctness harness; TPU is the perf target)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import gf256_matmul, gf256_matmul_pallas
+from benchmarks.common import emit
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+    for (n, k, nbytes) in ((9, 6, 1 << 18), (12, 8, 1 << 20)):
+        from repro.storage.rs import cauchy_parity_matrix
+        G = jnp.asarray(cauchy_parity_matrix(n, k))
+        D = jnp.asarray(rng.integers(0, 256, (k, nbytes // k), dtype=np.uint8))
+        for backend in ("ref", "bitplane"):
+            f = jax.jit(lambda a, b, be=backend: gf256_matmul(a, b, backend=be))
+            f(G, D).block_until_ready()
+            t0 = time.perf_counter()
+            for _ in range(3):
+                f(G, D).block_until_ready()
+            dt = (time.perf_counter() - t0) / 3
+            rows.append(dict(backend=backend, n=n, k=k, payload_mb=round(nbytes / 2**20, 2),
+                             us_per_call=round(dt * 1e6, 1),
+                             encode_mb_s=round(nbytes / 2**20 / dt, 1)))
+    # pallas interpret: correctness-scale only (interpret mode is a Python
+    # interpreter — report, do not compare raw speed)
+    D = jnp.asarray(rng.integers(0, 256, (6, 4096), dtype=np.uint8))
+    from repro.storage.rs import cauchy_parity_matrix
+    G = jnp.asarray(cauchy_parity_matrix(9, 6))
+    t0 = time.perf_counter()
+    gf256_matmul_pallas(G, D, interpret=True).block_until_ready()
+    rows.append(dict(backend="pallas_interpret", n=9, k=6, payload_mb=round(6*4096/2**20, 3),
+                     us_per_call=round((time.perf_counter() - t0) * 1e6, 1),
+                     encode_mb_s="n/a (interpreter)"))
+    emit(rows, "kernel_gf256")
+    return rows

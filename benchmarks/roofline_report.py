@@ -1,0 +1,101 @@
+"""Render the §Dry-run / §Roofline markdown tables from dryrun JSONs."""
+import json
+import sys
+from pathlib import Path
+
+RES = Path(__file__).parent / "results"
+
+
+def fmt(x, nd=4):
+    return f"{x:.{nd}f}" if isinstance(x, (int, float)) else str(x)
+
+
+def roofline_table(path="dryrun_v2.json", opt=None):
+    rs = json.loads((RES / path).read_text())
+    rows = [r for r in rs if r["status"] == "ok" and "roofline" in r]
+    if opt:
+        rows = [r for r in rows if r.get("opt", "O0") == opt]
+    out = [
+        "| arch | shape | opt | compute s | memory s (fused) | collective s | dominant | MODEL_FLOPS | useful ratio | roofline frac | per-dev GB | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        rf = r["roofline"]
+        out.append(
+            "| {arch} | {shape} | {opt} | {c} | {m} | {co} | {dom} | {mf:.2e} | {ur} | {frac} | {gb:.1f} | {fits} |".format(
+                arch=r["arch"],
+                shape=r["shape"],
+                opt=r.get("opt", "O0"),
+                c=fmt(rf["compute_s"]),
+                m=fmt(rf["memory_s"]),
+                co=fmt(rf["collective_s"], 5),
+                dom=rf["dominant"],
+                mf=r["model_flops"],
+                ur=fmt(r.get("useful_flops_ratio") or 0, 3),
+                frac=f"{(r.get('roofline_fraction') or 0):.2%}",
+                gb=r["per_device_bytes"] / 1e9,
+                fits="yes" if r["fits_v5e_16g"] else "NO",
+            )
+        )
+    return "\n".join(out)
+
+
+def skip_table(path="dryrun_v2.json"):
+    rs = json.loads((RES / path).read_text())
+    rows = [r for r in rs if r["status"] == "skipped"]
+    out = ["| arch | shape | reason |", "|---|---|---|"]
+    for r in rows:
+        out.append(f"| {r['arch']} | {r['shape']} | {r['reason']} |")
+    return "\n".join(out)
+
+
+def multi_pod_table(path="dryrun_multi_v2.json"):
+    rs = json.loads((RES / path).read_text())
+    rows = [r for r in rs if r.get("mesh") == "multi" and r["status"] == "ok"]
+    out = [
+        "| arch | shape | compile s | per-dev GB | collective bytes/dev |",
+        "|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('compile_s','-')} | "
+            f"{r['per_device_bytes']/1e9:.1f} | {r['raw']['collective_bytes']:.2e} |"
+        )
+    return "\n".join(out)
+
+
+def hillclimb_table(path="hillclimb.json", base="dryrun_v2.json"):
+    hc = json.loads((RES / path).read_text()) if (RES / path).exists() else []
+    base_rs = json.loads((RES / base).read_text())
+    cells = {(r["arch"], r["shape"]) for r in hc}
+    out = [
+        "| cell | opt | compute s | memory s | collective s | dominant | bound s | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch, shape in sorted(cells):
+        rows = [r for r in base_rs if r["arch"] == arch and r["shape"] == shape and r["status"] == "ok"]
+        rows += [r for r in hc if r["arch"] == arch and r["shape"] == shape and r["status"] == "ok"]
+        for r in sorted(rows, key=lambda r: r.get("opt", "O0")):
+            rf = r["roofline"]
+            out.append(
+                f"| {arch} x {shape} | {r.get('opt','O0')} | {fmt(rf['compute_s'])} | "
+                f"{fmt(rf['memory_s'])} | {fmt(rf['collective_s'],5)} | {rf['dominant']} | "
+                f"{fmt(rf['bound_step_s'])} | {(r.get('roofline_fraction') or 0):.2%} |"
+            )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "roofline"):
+        print("### Roofline (single-pod 16x16, O0 baseline)\n")
+        print(roofline_table())
+    if which in ("all", "skips"):
+        print("\n### Skipped cells\n")
+        print(skip_table())
+    if which in ("all", "multi"):
+        print("\n### Multi-pod (2x16x16) compile proof\n")
+        print(multi_pod_table())
+    if which in ("all", "hillclimb"):
+        print("\n### Hillclimb\n")
+        print(hillclimb_table())

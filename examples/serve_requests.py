@@ -1,0 +1,68 @@
+"""End-to-end serving driver (the paper's kind: latency-optimal dispatch).
+
+Serves batched generation requests from a small real model across
+heterogeneous replicas, dispatching every request with the paper's
+probabilistic scheduling (Theorem-1 Madow sampling over JLCM-optimized
+probabilities). Compares mean/p99 latency against uniform dispatch and
+shows hedged dispatch (straggler mitigation).
+
+Run:  PYTHONPATH=src python examples/serve_requests.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_smoke_config
+from repro.core import exponential_moments
+from repro.models import Model
+from repro.serving import ReplicaPool, Router, simulate_serving
+
+
+def main():
+    # a real (reduced) model with a jitted decode path = the "service"
+    cfg = get_smoke_config("smollm-135m")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    caches = model.empty_caches(batch_size=4, cache_len=32)
+    decode = jax.jit(model.decode_step)
+    step = {"token": jnp.zeros((4,), jnp.int32), "pos": jnp.zeros((4,), jnp.int32)}
+    logits, _ = decode(params, caches, step)  # compile
+    t0 = time.perf_counter()
+    for t in range(8):
+        logits, caches = decode(
+            params, caches, {"token": jnp.argmax(logits, -1).astype(jnp.int32),
+                             "pos": jnp.full((4,), t, jnp.int32)}
+        )
+    base_ms = (time.perf_counter() - t0) / 8 * 1e3
+    print(f"measured decode step: {base_ms:.2f} ms/token (batch 4, real model)")
+
+    # heterogeneous replica pool: per-replica service rate scaled from the
+    # measured step time (e.g. contended hosts / different accelerators)
+    speed = jnp.asarray([1.0, 0.9, 0.75, 1.3, 0.6, 1.1])
+    mu = 1000.0 / (base_ms * 24) * speed  # ~24-token responses, req/s
+    pool = ReplicaPool(moments=exponential_moments(mu), cost=jnp.ones((6,)))
+    rates = jnp.asarray([0.55 * float(mu.sum()) / 2, 0.25 * float(mu.sum()) / 2])
+    sampler = lambda k, s: jax.random.exponential(k, s + (6,)) / mu
+
+    opt = Router.plan(pool, rates)
+    uni = Router(pool=pool, pi=np.full((2, 6), 1 / 6), latency_bound=float("nan"))
+    hedged = Router.plan(pool, rates * 0.3, hedge=1)
+
+    lat_o, _ = simulate_serving(jax.random.key(1), opt, rates, sampler)
+    lat_u, _ = simulate_serving(jax.random.key(1), uni, rates, sampler)
+    lat_h, _ = simulate_serving(jax.random.key(1), hedged, rates * 0.3, sampler)
+
+    print(f"\n{'policy':28s} {'mean':>8s} {'p99':>8s}")
+    print(f"{'uniform dispatch':28s} {lat_u.mean():8.3f} {np.quantile(lat_u, .99):8.3f}")
+    print(f"{'JLCM probabilistic (paper)':28s} {lat_o.mean():8.3f} {np.quantile(lat_o, .99):8.3f}")
+    print(f"{'  + hedge=1 (low load)':28s} {lat_h.mean():8.3f} {np.quantile(lat_h, .99):8.3f}")
+    print(f"\nanalytic bound for JLCM policy: {opt.latency_bound:.3f}s "
+          f"(simulated mean {lat_o.mean():.3f}s)")
+    assert lat_o.mean() <= lat_u.mean() * 1.02
+    print("probabilistic scheduling beats uniform dispatch — as optimized.")
+
+
+if __name__ == "__main__":
+    main()

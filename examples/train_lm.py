@@ -1,0 +1,45 @@
+"""Fault-tolerant LM training with erasure-coded checkpoints.
+
+Trains a reduced smollm-135m for a few hundred steps; every 50 steps the
+full TrainState is RS-encoded and scattered over the 12-node storage model
+with a JLCM-optimized placement. Mid-run a storage node is killed; at the
+end we simulate a full trainer crash and restore bit-exactly from the
+degraded store, then continue training — loss continues from where it was.
+
+Run:  PYTHONPATH=src python examples/train_lm.py
+"""
+import tempfile
+
+import numpy as np
+
+from repro.launch.train import train
+
+
+def main():
+    with tempfile.TemporaryDirectory() as ckpt:
+        state, losses, store = train(
+            "smollm-135m",
+            steps=150,
+            ckpt_dir=ckpt,
+            ckpt_every=50,
+            fail_node_at=75,  # a storage node dies mid-run
+            lr=3e-3,
+        )
+        assert losses[-1] < losses[0] - 0.5, "training did not learn"
+
+        # full trainer crash: restart from the (degraded) EC store
+        print("\n-- simulated crash: restarting from EC checkpoints --")
+        state2, losses2, _ = train(
+            "smollm-135m",
+            steps=170,
+            ckpt_dir=ckpt,
+            ckpt_every=50,
+            resume=True,
+            lr=3e-3,
+        )
+        print(f"\nresumed at step 100 -> 170; loss tail {losses2[-1]:.3f}")
+        assert losses2[-1] < losses[0] - 0.5
+
+
+if __name__ == "__main__":
+    main()

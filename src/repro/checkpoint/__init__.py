@@ -1,0 +1,11 @@
+"""Erasure-coded, JLCM-planned checkpointing (fault tolerance plane)."""
+
+from .planner import (
+    CheckpointPlan,
+    GroupPlan,
+    pack_groups,
+    plan_checkpoint_layout,
+    plan_for_params,
+    sample_read_set,
+)
+from .store import ECCheckpointStore

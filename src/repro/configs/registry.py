@@ -1,0 +1,50 @@
+"""Assigned architecture registry: ``get_config(arch_id)`` / ``ARCHS``.
+
+Each entry matches the assigned spec exactly (layers / d_model / heads /
+kv heads / d_ff / vocab + family mechanism); public per-arch details
+(head_dim, windows, MoE shapes, MLA ranks) follow the cited sources.
+Reduced smoke variants live next to each config for CPU tests.
+"""
+from __future__ import annotations
+
+from repro.models.config import MLAConfig, ModelConfig, MoEConfig
+
+from . import (
+    deepseek_v3_671b,
+    gemma3_27b,
+    phi4_mini_3p8b,
+    qwen2_vl_2b,
+    qwen3_moe_30b_a3b,
+    recurrentgemma_2b,
+    rwkv6_1p6b,
+    seamless_m4t_medium,
+    smollm_135m,
+    starcoder2_15b,
+)
+
+_MODULES = {
+    "smollm-135m": smollm_135m,
+    "starcoder2-15b": starcoder2_15b,
+    "phi4-mini-3.8b": phi4_mini_3p8b,
+    "gemma3-27b": gemma3_27b,
+    "qwen3-moe-30b-a3b": qwen3_moe_30b_a3b,
+    "deepseek-v3-671b": deepseek_v3_671b,
+    "seamless-m4t-medium": seamless_m4t_medium,
+    "recurrentgemma-2b": recurrentgemma_2b,
+    "qwen2-vl-2b": qwen2_vl_2b,
+    "rwkv6-1.6b": rwkv6_1p6b,
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCHS}")
+    return _MODULES[arch].CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCHS}")
+    return _MODULES[arch].SMOKE

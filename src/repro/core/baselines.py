@@ -1,0 +1,61 @@
+"""Prior-work latency baselines used in the paper's comparisons (Fig. 7).
+
+[43] Joshi, Liu, Soljanin, "On the Delay-Storage Trade-off in Content
+Download from Coded Distributed Storage Systems" — single file, (n,k)
+fork-join queue, exponential service. Their upper bound is the
+*split-merge* relaxation: all n servers stay blocked until the k-th chunk
+completes, making the system an M/G/1 queue whose service time is the k-th
+order statistic of n iid Exp(mu):
+
+    S_{(k)} = sum_{j=0}^{k-1} Z_j / ((n - j) mu),  Z_j iid Exp(1)
+
+so  E[S] = (H_n - H_{n-k})/mu  and  Var[S] = (H2_n - H2_{n-k})/mu^2 with
+H2 the generalized harmonic numbers of order 2. P-K then yields the mean
+sojourn bound. Valid only for lam * E[S] < 1 — beyond that the bound blows
+up to +inf (exactly the regime where the paper's Fig. 7 shows its own bound
+keeps working).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import Array
+
+
+def _harmonic_range(lo: Array, hi: Array, order: int, nmax: int = 4096) -> Array:
+    """sum_{i=lo+1}^{hi} 1/i^order, elementwise (lo, hi integer arrays)."""
+    i = jnp.arange(1, nmax + 1, dtype=jnp.float32)
+    terms = 1.0 / i**order
+    csum = jnp.concatenate([jnp.zeros((1,)), jnp.cumsum(terms)])
+    return csum[hi] - csum[lo]
+
+
+def split_merge_bound(n: Array, k: Array, mu: Array, lam: Array) -> Array:
+    """Fork-join upper bound of [43] (split-merge M/G/1), single file.
+
+    Returns mean file latency; +inf where the split-merge queue is unstable.
+    """
+    n = jnp.asarray(n, jnp.int32)
+    k = jnp.asarray(k, jnp.int32)
+    mu = jnp.asarray(mu, jnp.float32)
+    lam = jnp.asarray(lam, jnp.float32)
+    mean_s = _harmonic_range(n - k, n, 1) / mu
+    var_s = _harmonic_range(n - k, n, 2) / mu**2
+    m2_s = var_s + mean_s**2
+    rho = lam * mean_s
+    wait = lam * m2_s / (2.0 * (1.0 - rho))
+    t = mean_s + wait
+    return jnp.where(rho < 1.0, t, jnp.inf)
+
+
+def fork_join_exact_nn(n: Array, mu: Array, lam: Array) -> Array:
+    """Classic exact result for the (n,n) fork-join with exp service is not
+    closed-form for n>2; Nelson-Tantawi approximation retained for sanity
+    checks only:  T_n ~ (H_n/mu) * scaling of M/M/1. Used in tests to sanity
+    check orderings, not in benchmarks."""
+    n = jnp.asarray(n, jnp.float32)
+    mu = jnp.asarray(mu, jnp.float32)
+    lam = jnp.asarray(lam, jnp.float32)
+    h_n = jnp.cumsum(1.0 / jnp.arange(1, 64))[jnp.asarray(n, jnp.int32) - 1]
+    rho = lam / mu
+    t_mm1 = 1.0 / (mu - lam)
+    return jnp.where(rho < 1.0, h_n * t_mm1 * (4.0 / 4.0), jnp.inf)

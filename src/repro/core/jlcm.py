@@ -1,0 +1,290 @@
+"""Algorithm JLCM (paper §IV): joint latency + storage-cost minimization.
+
+Problem JLCM (Eq. 9-14) minimizes, over dispatch probabilities pi (r, m)
+and the auxiliary z,
+
+  z + sum_j Lambda_j/(2 lam_hat) [X_j + sqrt(X_j^2 + Y_j)]
+    + theta * sum_i sum_j V_j 1(pi_ij > 0)
+
+subject to Theorem-1 feasibility (capped simplex per file). Placement S_i
+and code length n_i are recovered from the support of pi (Lemma 4).
+
+The discontinuous cost indicator is handled exactly as in the paper: a
+log-smoothed surrogate  V_j log(beta pi + 1)/log(beta)  (Eq. 20) whose
+linearization around the reference point pi^(t) is Eq. (17); iterating
+"linearize -> solve convex subproblem -> re-linearize" is the DC-programming
+outer loop, with the inner convex subproblem solved by projected gradient
+descent (paper Fig. 4 routine). Gradients come from JAX autodiff instead of
+hand-derived formulas; the projection is `project_capped_simplex`.
+
+Two modes:
+  * ``nested``  — faithful Algorithm JLCM structure (outer linearization,
+    inner PGD to convergence, then the z-minimization step);
+  * ``merged``  — all updates on one time-scale (single loop), which is
+    what the paper itself uses for the r=1000 experiment (§V.B, Fig. 8).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+from .latency_bound import (
+    file_latency_bounds,
+    optimal_shared_z,
+    shared_z_latency,
+)
+from .projection import feasible_uniform, project_capped_simplex
+from .queueing import (
+    ServiceMoments,
+    node_arrival_rates,
+    pk_sojourn_moments,
+    stability_penalty,
+)
+
+SUPPORT_TOL = 1e-3  # pi below this counts as "not placed" when reading S_i
+
+
+class JLCMProblem(NamedTuple):
+    lam: Array  # (r,) request arrival rates
+    k: Array  # (r,) MDS k_i per file
+    moments: ServiceMoments  # per-node service moments, arrays of (m,)
+    cost: Array  # (m,) per-chunk storage price V_j
+    theta: float  # tradeoff factor (sec/dollar)
+    mask: Array | None = None  # (r, m) optional allowed-placement support
+
+    @property
+    def r(self) -> int:
+        return self.lam.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.cost.shape[0]
+
+
+class JLCMSolution(NamedTuple):
+    pi: Array  # (r, m) dispatch probabilities
+    z: Array  # shared auxiliary variable at optimum
+    objective: Array  # latency + theta * true (indicator) cost
+    latency: Array  # shared-z mean latency bound
+    latency_tight: Array  # per-file-z mean latency bound (reporting)
+    cost: Array  # true storage cost sum_i sum_{S_i} V_j
+    n: Array  # (r,) chosen code lengths n_i
+    placement: Array  # (r, m) boolean S_i
+    objective_trace: Array  # per-iteration smoothed objective (monitoring)
+
+
+def _true_cost(pi: Array, cost: Array, tol: float = SUPPORT_TOL) -> Array:
+    return jnp.sum((pi > tol) * cost[None, :])
+
+
+def _smoothed_cost(pi: Array, cost: Array, beta: float) -> Array:
+    """Eq. (20): sum_ij V_j log(beta pi + 1) / log(beta)."""
+    return jnp.sum(cost[None, :] * jnp.log(beta * pi + 1.0) / jnp.log(beta))
+
+
+def _linearized_cost(pi: Array, pi_ref: Array, cost: Array, beta: float) -> Array:
+    """Eq. (17): value at ref + gradient of the log surrogate at ref."""
+    base = jnp.sum((pi_ref > 0.0) * cost[None, :])
+    slope = cost[None, :] / ((pi_ref + 1.0 / beta) * jnp.log(beta))
+    return base + jnp.sum(slope * (pi - pi_ref))
+
+
+def _latency_term(pi: Array, z: Array, prob: JLCMProblem) -> Array:
+    lat = shared_z_latency(pi, z, prob.lam, prob.moments)
+    rates = node_arrival_rates(pi, prob.lam)
+    return lat + stability_penalty(rates, prob.moments)
+
+
+def smoothed_objective(pi: Array, z: Array, prob: JLCMProblem, beta: float) -> Array:
+    """Descent-monitored objective z + sum_j F(Lambda_j) + theta*C_hat (Thm 2)."""
+    return _latency_term(pi, z, prob) + prob.theta * _smoothed_cost(
+        pi, prob.cost, beta
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "inner_steps", "lr"))
+def _inner_pgd(
+    pi: Array,
+    z: Array,
+    pi_ref: Array,
+    prob: JLCMProblem,
+    mask: Array,
+    *,
+    beta: float,
+    inner_steps: int,
+    lr: float,
+) -> Array:
+    """Projected gradient descent on Eq. (19) for a fixed reference point."""
+
+    def sub_obj(p):
+        return _latency_term(p, z, prob) + prob.theta * _linearized_cost(
+            p, pi_ref, prob.cost, beta
+        )
+
+    grad = jax.grad(sub_obj)
+
+    def step(s, p):
+        g = grad(p)
+        step_lr = lr / jnp.sqrt(1.0 + s)
+        return project_capped_simplex(p - step_lr * g, prob.k, mask)
+
+    return jax.lax.fori_loop(0, inner_steps, step, pi)
+
+
+@functools.partial(jax.jit, static_argnames=("beta",))
+def _merged_step(
+    pi: Array, z: Array, prob: JLCMProblem, mask: Array, lr: Array, *, beta: float
+):
+    """One merged-timescale update: linearize at current pi, one PGD step
+    (inf-norm-normalized gradient -> scale-free step size), then refresh z
+    (the paper's single-loop speedup for large r)."""
+
+    def sub_obj(p):
+        return _latency_term(p, z, prob) + prob.theta * _linearized_cost(
+            p, jax.lax.stop_gradient(p), prob.cost, beta
+        )
+
+    g = jax.grad(sub_obj)(pi)
+    pi = project_capped_simplex(pi - lr * g, prob.k, mask)
+    z = optimal_shared_z(pi, prob.lam, prob.moments)
+    obj = smoothed_objective(pi, z, prob, beta)
+    return pi, z, obj, jnp.max(jnp.abs(g))
+
+
+def solve(
+    prob: JLCMProblem,
+    *,
+    beta: float = 1e3,
+    mode: str = "merged",
+    max_iters: int = 300,
+    inner_steps: int = 40,
+    lr: float = 0.1,
+    eps: float = 1e-5,
+    pi0: Array | None = None,
+    verbose: bool = False,
+) -> JLCMSolution:
+    """Run Algorithm JLCM. Returns the solution plus convergence trace."""
+    mask = (
+        jnp.ones((prob.r, prob.m), bool)
+        if prob.mask is None
+        else jnp.asarray(prob.mask, bool)
+    )
+    pi = feasible_uniform(mask, prob.k) if pi0 is None else jnp.asarray(pi0)
+    pi = project_capped_simplex(pi, prob.k, mask)
+    z = optimal_shared_z(pi, prob.lam, prob.moments)
+
+    trace = []
+    prev = smoothed_objective(pi, z, prob, beta)
+    trace.append(float(prev))
+    lr0 = None  # calibrated on the first step from the gradient scale
+    lr_cap = None
+    for t in range(max_iters):
+        if mode == "merged":
+            if lr0 is None:
+                _, _, _, g0 = _merged_step(
+                    pi, z, prob, mask, jnp.asarray(0.0, jnp.float32), beta=beta
+                )
+                lr0 = lr / max(float(g0), 1e-9)  # first step moves ~lr in pi
+                lr_cap = lr0 * 16
+            cand = _merged_step(
+                pi, z, prob, mask, jnp.asarray(lr0, jnp.float32), beta=beta
+            )
+            if float(cand[2]) > float(prev) + 1e-9:  # backtrack (two levels)
+                cand = _merged_step(
+                    pi, z, prob, mask, jnp.asarray(lr0 / 4, jnp.float32), beta=beta
+                )
+            if float(cand[2]) > float(prev) + 1e-9:
+                cand = _merged_step(
+                    pi, z, prob, mask, jnp.asarray(lr0 / 16, jnp.float32), beta=beta
+                )
+            if float(cand[2]) > float(prev) + 1e-9:  # persistent shrink
+                lr0 *= 0.5
+                obj = prev
+                if lr0 > lr_cap * 1e-6:
+                    trace.append(float(obj))
+                    prev = obj
+                    continue  # stalled step: shrink and retry, don't stop
+            else:
+                pi, z, obj, _ = cand
+                lr0 = min(lr0 * 1.1, lr_cap)  # adaptive re-growth
+        elif mode == "nested":
+            pi = _inner_pgd(
+                pi, z, pi, prob, mask, beta=beta, inner_steps=inner_steps, lr=lr
+            )
+            z = optimal_shared_z(pi, prob.lam, prob.moments)
+            obj = smoothed_objective(pi, z, prob, beta)
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+        trace.append(float(obj))
+        if verbose and t % 20 == 0:
+            print(f"[jlcm] iter {t:4d} objective {float(obj):.6f}")
+        # relative stopping rule (paper: tolerance on normalized objective)
+        if abs(float(prev) - float(obj)) < eps * max(1.0, abs(float(obj))):
+            prev = obj
+            break
+        prev = obj
+
+    placement = pi > SUPPORT_TOL
+    n = jnp.sum(placement, axis=-1)
+    rates = node_arrival_rates(pi, prob.lam)
+    eq, varq = pk_sojourn_moments(rates, prob.moments)
+    tight = jnp.sum(prob.lam * file_latency_bounds(pi, eq, varq)) / jnp.sum(prob.lam)
+    latency = shared_z_latency(pi, z, prob.lam, prob.moments)
+    cost = _true_cost(pi, prob.cost)
+    return JLCMSolution(
+        pi=pi,
+        z=z,
+        objective=latency + prob.theta * cost,
+        latency=latency,
+        latency_tight=tight,
+        cost=cost,
+        n=n,
+        placement=placement,
+        objective_trace=jnp.asarray(trace),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Oblivious baselines from §V.B Fig. 9 (for the comparison benchmark).
+# ---------------------------------------------------------------------------
+
+
+def proportional_lb_pi(mask: Array, k: Array, moments: ServiceMoments) -> Array:
+    """'Oblivious LB': dispatch proportional to service rates on a given
+    placement (then projected to the feasible polytope)."""
+    mask = jnp.asarray(mask, bool)
+    mu = jnp.broadcast_to(moments.mu, mask.shape)
+    w = jnp.where(mask, mu, 0.0)
+    pi = jnp.asarray(k)[:, None] * w / jnp.sum(w, axis=-1, keepdims=True)
+    return project_capped_simplex(pi, k, mask)
+
+
+def random_placement_mask(key: Array, r: int, m: int, n: Array) -> Array:
+    """'Random CP': each file picks n_i nodes uniformly at random."""
+    def one(key, n_i):
+        perm = jax.random.permutation(key, m)
+        return jnp.zeros((m,), bool).at[perm].set(jnp.arange(m) < n_i)
+
+    keys = jax.random.split(key, r)
+    return jax.vmap(one)(keys, jnp.asarray(n))
+
+
+def max_ec_solution(prob: JLCMProblem, **kw) -> JLCMSolution:
+    """'Maximum EC': n_i = m (all nodes), optimize scheduling only.
+
+    Implemented as JLCM with theta = 0 and full support, so the optimizer
+    never prunes placements (cost is whatever full placement costs)."""
+    full = prob._replace(theta=0.0, mask=jnp.ones((prob.r, prob.m), bool))
+    sol = solve(full, **kw)
+    cost = jnp.sum(jnp.broadcast_to(prob.cost, (prob.r, prob.m)))
+    return sol._replace(
+        cost=cost,
+        objective=sol.latency + prob.theta * cost,
+        n=jnp.full((prob.r,), prob.m),
+        placement=jnp.ones((prob.r, prob.m), bool),
+    )

@@ -1,0 +1,70 @@
+"""Euclidean projection onto the capped simplex (paper's feasibility set).
+
+The probabilistic-scheduling polytope for file i (Theorem 1) is
+
+  P_i = { x in [0,1]^m : sum_j x_j = k_i, x_j = 0 for j not in S_i }.
+
+Projection of v onto P_i is x = clip(v - tau, 0, 1) on the allowed support,
+where tau solves g(tau) = sum_j clip(v_j - tau, 0, 1) = k_i. g is
+nonincreasing and piecewise-linear; we solve by bisection, vectorized over
+files and jit/vmap-friendly (used inside the projected-gradient loop of
+Algorithm JLCM).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+
+def project_capped_simplex(
+    v: Array,
+    k: Array,
+    mask: Array | None = None,
+    *,
+    iters: int = 60,
+) -> Array:
+    """Project rows of ``v`` (r, m) onto {x in [0,1]^m, sum x = k_row}.
+
+    ``mask`` (r, m) restricts support: masked-out entries are pinned to 0
+    (chunk placement constraint pi_ij = 0 for j not in S_i). ``k`` may be a
+    scalar or (r,) array; requires k <= #allowed per row for feasibility.
+    """
+    v = jnp.asarray(v)
+    k = jnp.broadcast_to(jnp.asarray(k, v.dtype), v.shape[:-1])
+    if mask is None:
+        mask = jnp.ones_like(v, dtype=bool)
+    else:
+        mask = jnp.broadcast_to(jnp.asarray(mask, bool), v.shape)
+
+    neg = jnp.asarray(jnp.finfo(v.dtype).min, v.dtype)
+    vm = jnp.where(mask, v, neg)
+
+    lo = jnp.min(jnp.where(mask, v, jnp.inf), axis=-1) - 1.0  # g(lo) = #allowed >= k
+    hi = jnp.max(jnp.where(mask, v, -jnp.inf), axis=-1)  # g(hi) = 0 <= k
+
+    def g(tau):
+        x = jnp.clip(vm - tau[..., None], 0.0, 1.0)
+        return jnp.sum(jnp.where(mask, x, 0.0), axis=-1)
+
+    def step(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        too_big = g(mid) > k  # need larger tau
+        lo = jnp.where(too_big, mid, lo)
+        hi = jnp.where(too_big, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, step, (lo, hi))
+    tau = 0.5 * (lo + hi)
+    x = jnp.clip(vm - tau[..., None], 0.0, 1.0)
+    return jnp.where(mask, x, 0.0)
+
+
+def feasible_uniform(mask: Array, k: Array) -> Array:
+    """A strictly feasible interior start: pi_ij = k_i / |S_i| on support."""
+    mask = jnp.asarray(mask, bool)
+    k = jnp.asarray(k, jnp.float32)
+    n_allowed = jnp.sum(mask, axis=-1).astype(jnp.float32)
+    val = (k / n_allowed)[..., None]
+    return jnp.where(mask, jnp.minimum(val, 1.0), 0.0)

@@ -1,0 +1,109 @@
+"""Probabilistic scheduling (paper §III.A, Theorem 1).
+
+Theorem 1 says: a subset distribution P(A_i) over k_i-subsets of S_i with
+per-node inclusion marginals pi_{i,j} exists iff sum_j pi_{i,j} = k_i and
+pi in [0,1]. Two executable counterparts:
+
+* :func:`madow_sample` — Madow's systematic sampling. Draws a k-subset with
+  *exactly* the inclusion probabilities pi (the classic piPS design). This
+  is what the request router / simulator uses per arriving batch: O(m),
+  jit- and vmap-friendly.
+
+* :func:`decompose_subsets` — an explicit convex decomposition
+  pi = sum_s alpha_s 1_{A_s} into at most m+1 subsets (Caratheodory on the
+  uniform-matroid base polytope), mirroring the constructive induction in
+  the paper's Appendix B. Useful for audit/inspection and tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+
+def madow_sample(key: Array, pi: Array) -> Array:
+    """Sample a subset with inclusion probabilities exactly ``pi``.
+
+    ``pi`` is (m,) with integral sum k (up to fp error). Returns a boolean
+    (m,) mask with exactly k True entries. Systematic sampling: lay the
+    pi_j end-to-end on [0, k); a uniform grid {u, u+1, ..., u+k-1} with
+    u ~ U[0,1) hits segment j with probability exactly pi_j (pi_j <= 1
+    guarantees at most one hit per segment).
+    """
+    pi = jnp.asarray(pi)
+    c = jnp.concatenate([jnp.zeros((1,), pi.dtype), jnp.cumsum(pi)])
+    u = jax.random.uniform(key, (), dtype=pi.dtype)
+    # segment j = [c_j, c_{j+1}) is hit iff floor(c_{j+1}-u) > floor(c_j-u)
+    hits = jnp.floor(c[1:] - u) - jnp.floor(c[:-1] - u)
+    return hits >= 1.0
+
+
+def madow_sample_batch(key: Array, pi: Array) -> Array:
+    """vmap of :func:`madow_sample` over rows of (r, m) pi."""
+    keys = jax.random.split(key, pi.shape[0])
+    return jax.vmap(madow_sample)(keys, pi)
+
+
+def decompose_subsets(
+    pi: np.ndarray, *, tol: float = 1e-9, max_iter: int | None = None
+) -> list[tuple[float, np.ndarray]]:
+    """Explicit P(A) decomposition of marginals ``pi`` (Theorem 1).
+
+    Greedy Caratheodory walk on the base polytope of the uniform matroid
+    U(k, support): at each step pick the k currently-largest coordinates as
+    the subset A, and take the largest step alpha keeping the residual in
+    alpha' * P (i.e. 0 <= residual and residual_j <= remaining mass / k
+    scaled): alpha = min( min_{j in A} pi_j , remaining - max_{j not in A} pi_j ).
+
+    Returns a list of (probability, boolean subset mask) summing to ~1.
+    Pure numpy (host-side planner utility, not in a jit path).
+    """
+    pi = np.asarray(pi, np.float64).copy()
+    k = int(round(pi.sum()))
+    if k == 0:
+        return []
+    if np.any(pi < -tol) or np.any(pi > 1 + tol):
+        raise ValueError("pi outside [0,1]")
+    if abs(pi.sum() - k) > 1e-6:
+        raise ValueError("sum(pi) must be integral (= k)")
+    m = pi.size
+    out: list[tuple[float, np.ndarray]] = []
+    remaining = 1.0
+    max_iter = max_iter or (2 * m + 4)
+    for _ in range(max_iter):
+        if remaining <= tol:
+            break
+        order = np.argsort(-pi, kind="stable")
+        subset = np.zeros(m, dtype=bool)
+        subset[order[:k]] = True
+        in_a = pi[subset]
+        not_a = pi[~subset]
+        # keep residual feasible for the shrunken polytope:
+        #   residual_j >= 0                (step <= min_{j in A} pi_j)
+        #   residual_j <= remaining-alpha  (step <= remaining - max_{j not in A} pi_j)
+        alpha = float(in_a.min())
+        if not_a.size:
+            alpha = min(alpha, remaining - float(not_a.max()))
+        alpha = min(alpha, remaining)
+        if alpha <= tol:  # numerical corner: dump the rest on this subset
+            alpha = remaining
+        pi[subset] -= alpha
+        pi = np.maximum(pi, 0.0)
+        remaining -= alpha
+        out.append((alpha, subset))
+    if remaining > 1e-6:
+        raise RuntimeError(f"decomposition failed to converge: {remaining} left")
+    return out
+
+
+def check_feasible(pi: Array, k: Array, mask: Array | None = None, *, atol=1e-4):
+    """Assert Theorem-1 feasibility: support, box and sum constraints."""
+    pi = np.asarray(pi)
+    k = np.asarray(k)
+    ok_box = (pi >= -atol).all() and (pi <= 1 + atol).all()
+    ok_sum = np.allclose(pi.sum(-1), k, atol=atol * pi.shape[-1])
+    ok_mask = True
+    if mask is not None:
+        ok_mask = (pi[~np.asarray(mask, bool)] <= atol).all()
+    return bool(ok_box and ok_sum and ok_mask)

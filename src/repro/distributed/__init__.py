@@ -1,0 +1,8 @@
+from .sharding import (
+    batch_specs,
+    cache_shardings,
+    cache_spec_for_leaf,
+    mesh_axes,
+    param_shardings,
+    spec_for_leaf,
+)

@@ -1,0 +1,209 @@
+"""Sharding rules: logical axes -> mesh axes, divisibility-aware.
+
+Parallelism scheme (DESIGN.md §6):
+  * batch/DP     -> ('pod', 'data')   (or ('data',) on a single pod)
+  * TP ("tp")    -> 'model'           heads / d_ff / vocab / experts
+  * FSDP ("fsdp")-> DP axes           the non-TP dim of every large param
+  * EP           -> 'model'           MoE experts (moe.py shard_map island)
+  * SP           -> DP axes           long-context decode KV cache seq dim
+
+Every rule is *divisibility-aware*: if a dim does not divide by the mesh
+axes assigned to it, those axes are dropped (replicated) — e.g.
+smollm-135m's 9 heads cannot split 16-way TP, so its attention is
+replicated while its MLP/vocab still shard (the fallback is per-dim, not
+per-model).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# leaf-name -> logical spec (one entry per trailing dim; leading stacked
+# period dims are padded with None automatically)
+_RULES: dict[str, tuple[str | None, ...]] = {
+    # embeddings / head
+    "embed": ("tp", "fsdp"),  # (vocab, d)
+    "lm_head": ("fsdp", "tp"),  # (d, vocab)
+    # attention
+    "wq": ("fsdp", "tp"),
+    "wk": ("fsdp", "tp"),
+    "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    # MLA
+    "wq_a": ("fsdp", None),
+    "wq_b": (None, "tp"),
+    "wkv_a": ("fsdp", None),
+    "w_uk": (None, "tp"),
+    "w_uv": (None, "tp"),
+    # dense mlp
+    "w_gate": ("fsdp", "tp"),
+    "w_up": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),
+    # moe (expert-stacked; name collision with dense mlp resolved by rank)
+    "router": (None, None),
+    # rglru
+    "w_y": ("fsdp", "tp"),
+    "w_x": ("fsdp", "tp"),
+    "conv_w": (None, "tp"),
+    "conv_b": ("tp",),
+    "w_i": (None, "tp"),
+    "w_a": (None, "tp"),
+    "lam": ("tp",),
+    "w_out": ("tp", "fsdp"),
+    # rwkv
+    "w_r": ("fsdp", "tp"),
+    "w_k": ("fsdp", "tp"),
+    "w_v": ("fsdp", "tp"),
+    "w_g": ("fsdp", "tp"),
+    "w_o": ("tp", "fsdp"),
+    "decay_w0": (None,),
+    "decay_a": ("fsdp", None),
+    "decay_b": (None, "tp"),
+    "bonus_u": (None, None),
+    "ln_scale": (None, None),
+    "mix": (None, None),
+    "cm_mix": (None, None),
+    "cm_k": ("fsdp", "tp"),
+    "cm_v": ("tp", "fsdp"),
+    "cm_r": ("fsdp", "tp"),
+    # norms / scalars
+    "scale": (None,),
+    "ln_tm": (None,),
+    "ln_cm": (None,),
+}
+
+# MoE expert tensors are rank-3 (E, d, ff) and must match moe.EPSpec:
+_MOE_RULES = {
+    "w_gate": ("tp", None, "fsdp"),  # experts over model, ff over fsdp
+    "w_up": ("tp", None, "fsdp"),
+    "w_down": ("tp", "fsdp", None),
+}
+_MOE_SHARED_RULES = {
+    "w_gate": (None, "tp"),
+    "w_up": (None, "tp"),
+    "w_down": ("tp", None),
+}
+
+
+def mesh_axes(mesh: Mesh) -> dict[str, tuple[str, ...]]:
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    return {"tp": ("model",) if "model" in names else (), "fsdp": dp, "dp": dp}
+
+
+def _axes_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def _resolve(logical: str | None, dim: int, mesh: Mesh) -> Any:
+    if logical is None:
+        return None
+    axes = mesh_axes(mesh).get(logical, ())
+    # greedily drop trailing axes until divisible (e.g. 9 heads vs 16-way tp)
+    while axes and dim % _axes_size(mesh, axes) != 0:
+        axes = axes[:-1]
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def spec_for_leaf(path: tuple, leaf, mesh: Mesh) -> P:
+    """PartitionSpec for one param leaf, based on its dict-key name."""
+    names = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+    name = next((n for n in reversed(names) if isinstance(n, str)), None)
+    shape = leaf.shape
+    in_moe = "moe" in names
+    in_shared = in_moe and "shared" in names
+    if in_shared and name in _MOE_SHARED_RULES:
+        rule = _MOE_SHARED_RULES[name]
+    elif in_moe and name in _MOE_RULES and len(shape) >= 3:
+        rule = _MOE_RULES[name]
+    else:
+        rule = _RULES.get(name)
+    if rule is None:
+        return P()  # replicate unknown leaves
+    # pad for leading stacked dims (period scan stacking)
+    pad = len(shape) - len(rule)
+    rule = (None,) * pad + tuple(rule)
+    entries = [
+        _resolve(r, int(shape[i]), mesh) if r is not None else None
+        for i, r in enumerate(rule)
+    ]
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_shardings(abstract_params, mesh: Mesh):
+    """Tree of NamedShardings for a (possibly abstract) param tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, spec_for_leaf(path, leaf, mesh)),
+        abstract_params,
+    )
+
+
+# ------------------------------------------------------------------ batches
+def batch_specs(batch_shapes: dict, mesh: Mesh) -> dict:
+    """PartitionSpec per batch entry: shard batch dim over DP axes when it
+    divides, else fall back to sequence sharding (long-context decode)."""
+    dp = mesh_axes(mesh)["dp"]
+    dp_n = _axes_size(mesh, dp)
+    out = {}
+    for k, v in batch_shapes.items():
+        shape = v.shape
+        if k == "positions" and len(shape) == 3:  # (3, B, S)
+            out[k] = P(None, dp if shape[1] % dp_n == 0 else None, None)
+            continue
+        if not shape:
+            out[k] = P()
+            continue
+        if shape[0] % dp_n == 0 and dp:
+            out[k] = P(dp, *(None,) * (len(shape) - 1))
+        elif len(shape) >= 2 and shape[1] % dp_n == 0 and dp:
+            out[k] = P(None, dp, *(None,) * (len(shape) - 2))
+        else:
+            out[k] = P(*(None,) * len(shape))
+    return out
+
+
+def cache_spec_for_leaf(path: tuple, leaf, mesh: Mesh) -> P:
+    """Decode/prefill cache sharding: batch over DP if divisible, else the
+    sequence dim over DP (sequence parallelism for long-context caches);
+    kv-head dim over TP when divisible."""
+    names = [getattr(k, "key", None) for k in path]
+    name = next((n for n in reversed(names) if isinstance(n, str)), None)
+    shape = leaf.shape
+    dp = mesh_axes(mesh)["dp"]
+    tp = mesh_axes(mesh)["tp"]
+    dp_n = _axes_size(mesh, dp)
+    # caches may carry a leading (n_periods,) stacked dim: detect by name
+    lead = 1 if len(shape) >= 1 and name in ("k", "v", "ckv", "kpe", "state", "h", "conv", "shift_tm", "shift_cm") and _looks_stacked(path) else 0
+    entries: list[Any] = [None] * len(shape)
+    b_ax, s_ax = lead, lead + 1
+    if len(shape) > b_ax and shape[b_ax] % dp_n == 0 and dp:
+        entries[b_ax] = dp if len(dp) > 1 else dp[0]
+    elif name in ("k", "v", "ckv", "kpe") and len(shape) > s_ax and shape[s_ax] % dp_n == 0 and dp:
+        entries[s_ax] = dp if len(dp) > 1 else dp[0]
+    if name in ("k", "v") and len(shape) >= s_ax + 3:
+        kh = int(shape[s_ax + 1])
+        if tp and kh % _axes_size(mesh, tp) == 0:
+            entries[s_ax + 1] = tp[0]
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def _looks_stacked(path) -> bool:
+    # period caches sit under a tuple index inside {"period": (...)}
+    return any(getattr(k, "key", None) == "period" for k in path)
+
+
+def cache_shardings(abstract_caches, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, cache_spec_for_leaf(path, leaf, mesh)),
+        abstract_caches,
+    )

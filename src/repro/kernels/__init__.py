@@ -1,0 +1,5 @@
+"""TPU kernels for the GF(256) erasure-coding hot path."""
+
+from .gf256_matmul import gf256_matmul_pallas
+from .ops import gf256_matmul, gf256_matmul_bitplane, rs_decode, rs_encode
+from .ref import gf256_matmul_dense_ref, gf256_matmul_ref

@@ -1,0 +1,22 @@
+"""Pure-jnp oracles for the GF(256) kernels (ground truth for allclose)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import Array
+
+from repro.storage.gf256 import gf_matmul_ref, gf_mul_xtime
+
+
+def gf256_matmul_ref(a: Array, b: Array) -> Array:
+    """out[i, j] = XOR_k a[i, k] *GF b[k, j]; uint8 in/out, K-scan oracle."""
+    return gf_matmul_ref(a, b)
+
+
+def gf256_matmul_dense_ref(a: Array, b: Array) -> Array:
+    """Fully-materialized (M, K, N) variant for small shapes — a second,
+    structurally different oracle so the scan oracle is itself checked."""
+    a = jnp.asarray(a, jnp.uint8)
+    b = jnp.asarray(b, jnp.uint8)
+    prod = gf_mul_xtime(a[:, :, None], b[None, :, :])  # (M, K, N)
+    # XOR-reduce over K via bit-twiddling-free fold
+    return jnp.bitwise_xor.reduce(prod, axis=1)

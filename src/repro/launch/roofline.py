@@ -1,0 +1,347 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+IMPORTANT semantics (verified empirically on this jax/XLA build): for an
+SPMD-partitioned program, ``compiled.cost_analysis()`` reports PER-DEVICE
+quantities (shard shapes), and HLO collective shapes are per-device
+payloads. The three roofline terms are therefore per-chip:
+
+  compute    = HLO_FLOPs(per-dev) / (197e12 bf16 FLOP/s)
+  memory     = HLO_bytes(per-dev) / (819e9 B/s HBM)
+  collective = collective_bytes(per-dev) / (n_links * 50e9 B/s ICI)
+
+and MODEL_FLOPS comparisons divide the global 6ND by the chip count.
+
+Sources: ``compiled.cost_analysis()`` for FLOPs/bytes; an HLO-text parser
+for collective operand bytes (not present in cost_analysis).
+
+CPU-lowering caveats (documented in EXPERIMENTS.md §Roofline):
+  * `bytes accessed` is pre-fusion: TPU fusion would not re-touch HBM for
+    every elementwise op, so the memory term is an upper bound. Relative
+    deltas across optimization steps remain meaningful.
+  * `jax.lax.ragged_dot` falls back to a DENSE all-experts matmul on CPU
+    (E_local x the true grouped-matmul FLOPs); on TPU it lowers to gmm.
+    `moe_cpu_excess` computes the analytic inflation so the roofline can
+    report a TPU-adjusted compute term.
+
+Loop correction: XLA cost analysis counts a while-loop body ONCE, but our
+stacks scan over `n_periods` (and GSPMD keeps collectives inside the loop).
+We therefore lower each cell at two small unrolled depths (1 and 2 periods
+of the SAME period pattern), take the per-period delta of every term, and
+extrapolate: total = fixed + n_periods * per_period. This also corrects
+`bytes accessed`. RWKV's inner time-scan is additionally corrected
+analytically (~8*B*T*H*hd^2 FLOPs/layer for the WKV recurrence; see
+EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+ICI_LINKS = 4  # torus links per chip engaged per collective step (v5e 2D)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# Ops whose operands/outputs genuinely transit HBM on TPU even under full
+# fusion: MXU work (dot), data movement, and reductions. Pure elementwise
+# chains fuse into their producers/consumers (VMEM-resident) and are
+# EXCLUDED — this makes `fused_bytes` a TPU-realistic memory-traffic
+# estimate, unlike the pre-fusion `bytes accessed` of the CPU pipeline.
+_HBM_OPS_INOUT = ("dot(", "convolution(")
+_HBM_OPS_OUT = (
+    "gather(",
+    "scatter(",
+    "dynamic-slice(",
+    "dynamic-update-slice(",
+    "concatenate(",
+    "pad(",
+    "copy(",
+    "transpose(",
+    "reduce(",
+    "reduce-window(",
+    "sort(",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[8,128]{1,0}' -> bytes. Tuples handled by the caller."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_by_computation(hlo_text: str) -> dict[str, float]:
+    """Sum collective *output* bytes per HLO computation.
+
+    Output-shape bytes are what must cross the wire for all-gather and
+    all-to-all; for all-reduce the payload equals the operand size (~= the
+    output size); reduce-scatter moves the (larger) input, use input. We
+    approximate with the max of output/operand bytes parsed from the line.
+    """
+    per_comp: dict[str, float] = {}
+    comp = "entry"
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.endswith("{") and (s.startswith("%") or s.startswith("ENTRY")):
+            comp = "entry" if s.startswith("ENTRY") else s.split()[0].lstrip("%")
+            continue
+        hit = any(c + "(" in s or c + "-start(" in s for c in _COLLECTIVES)
+        if not hit or "-done(" in s:
+            continue  # async -done pairs re-state the shape; count -start only
+        m = _INSTR_RE.match(line)
+        if m:  # sync form: result shape right of '=': `%x = f32[..] all-...(..)`
+            payload = float(_shape_bytes(m.group(2)))
+        else:  # async -start with tuple result `(in_shape, out_shape)`
+            payload = float(_shape_bytes(s)) / 2.0
+        per_comp[comp] = per_comp.get(comp, 0.0) + payload
+    return per_comp
+
+
+def total_collective_bytes(hlo_text: str) -> float:
+    return sum(collective_bytes_by_computation(hlo_text).values())
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%\S+)\s*=\s*(\S+)\s+([a-z][a-z0-9\-._]*)\(([^)]*)"
+)
+_NAME_RE = re.compile(r"%[\w.\-]+")
+
+
+def fused_hbm_bytes(hlo_text: str) -> float:
+    """TPU-fusion-aware HBM traffic estimate (see _HBM_OPS_* above).
+
+    Two passes: build a %name -> bytes symbol table from every defining
+    instruction, then charge dot/convolution (operands + output) and
+    data-movement/reduce ops (output) against it.
+    """
+    sizes: dict[str, int] = {}
+    rows = []
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, opname, operands = m.groups()
+        b = _shape_bytes(shape_str)
+        sizes[name] = b
+        rows.append((opname, b, operands))
+    inout = tuple(op[:-1] for op in _HBM_OPS_INOUT)
+    out_only = tuple(op[:-1] for op in _HBM_OPS_OUT)
+    total = 0.0
+    for opname, out_b, operands in rows:
+        if opname in inout:
+            total += out_b + sum(
+                sizes.get(n, 0) for n in _NAME_RE.findall(operands)
+            )
+        elif opname in out_only:
+            total += out_b
+    return total
+
+
+@dataclasses.dataclass
+class CellCosts:
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    peak_memory_bytes: float = 0.0
+    fused_bytes: float = 0.0  # TPU-fusion-aware HBM traffic (see above)
+
+    def roofline(self, chips: int) -> dict[str, float]:
+        # cost_analysis is per-device for SPMD programs: no chip division.
+        compute = self.flops / PEAK_FLOPS
+        memory = self.fused_bytes / HBM_BW  # fusion-aware (TPU-realistic)
+        memory_prefusion = self.bytes_accessed / HBM_BW  # upper bound
+        coll = self.collective_bytes / (ICI_LINKS * ICI_BW)
+        dominant = max(
+            ("compute", compute), ("memory", memory), ("collective", coll),
+            key=lambda kv: kv[1],
+        )[0]
+        return {
+            "compute_s": compute,
+            "memory_s": memory,
+            "memory_prefusion_s": memory_prefusion,
+            "collective_s": coll,
+            "dominant": dominant,
+            "bound_step_s": max(compute, memory, coll),
+        }
+
+
+def costs_from_compiled(compiled, lowered_text: str | None = None) -> CellCosts:
+    ca = compiled.cost_analysis()
+    text = compiled.as_text()
+    coll = total_collective_bytes(text)
+    mem = 0.0
+    try:
+        mam = compiled.memory_analysis()
+        mem = float(
+            getattr(mam, "temp_size_in_bytes", 0)
+            + getattr(mam, "argument_size_in_bytes", 0)
+            + getattr(mam, "output_size_in_bytes", 0)
+        )
+    except Exception:
+        pass
+    return CellCosts(
+        flops=float(ca.get("flops", 0.0)),
+        bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+        collective_bytes=coll,
+        peak_memory_bytes=mem,
+        fused_bytes=fused_hbm_bytes(text),
+    )
+
+
+def extrapolate(c1: CellCosts, c2: CellCosts, n_periods: int) -> CellCosts:
+    """Loop-corrected totals from 1-period and 2-period unrolled compiles:
+    per_period = c2 - c1; total = c1 + (n_periods - 1) * per_period."""
+    d = lambda a, b: max(b - a, 0.0)
+    return CellCosts(
+        flops=c1.flops + (n_periods - 1) * d(c1.flops, c2.flops),
+        bytes_accessed=c1.bytes_accessed
+        + (n_periods - 1) * d(c1.bytes_accessed, c2.bytes_accessed),
+        collective_bytes=c1.collective_bytes
+        + (n_periods - 1) * d(c1.collective_bytes, c2.collective_bytes),
+        peak_memory_bytes=c1.peak_memory_bytes,
+        fused_bytes=c1.fused_bytes + (n_periods - 1) * d(c1.fused_bytes, c2.fused_bytes),
+    )
+
+
+def model_flops(cfg, shape, n_active_params: int, total_params: int) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); decode counts one
+    token per sequence."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active_params * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active_params * tokens
+    return 2.0 * n_active_params * shape.global_batch  # decode: fwd only
+
+
+def rwkv_inner_correction(cfg, shape, chips: int) -> float:
+    """Analytic PER-DEVICE FLOPs of the WKV time recurrence (inside a
+    time-scan the delta method cannot see): ~8 * tokens * d * head_size.
+    The recurrence shards over batch (DP) only."""
+    if "rwkv" not in cfg.period and "rwkv" not in cfg.prefix:
+        return 0.0
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    per_layer = 8.0 * tokens * cfg.d_model * cfg.rwkv_head_size
+    mult = 3.0 if shape.kind == "train" else 1.0  # fwd+bwd
+    dp = max(chips // 16, 1)  # batch shards over the non-model axes
+    return per_layer * cfg.n_layers * mult / dp
+
+
+def flash_io_bytes(cfg, shape, mesh_shape: dict[str, int]) -> float:
+    """Per-device HBM traffic of the Pallas flash-attention core: exactly
+    q + k + v + out per layer (tiles live in VMEM). Train multiplies by ~3
+    (backward re-reads q/k/v/out and writes dq/dk/dv)."""
+    if "rwkv" in cfg.period or shape.kind == "decode":
+        return 0.0
+    dp = 1
+    for a in ("pod", "data"):
+        dp *= mesh_shape.get(a, 1)
+    b_loc = max(shape.global_batch // dp, 1)
+    t = shape.seq_len
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    per_layer = b_loc * t * (2 * h + 2 * kh) * hd * 2  # q+out (H) + k+v (KH), bf16
+    n_attn = sum(
+        1
+        for k in cfg.layer_kinds
+        if k not in ("rglru", "rwkv")
+    )
+    mult = 3.0 if shape.kind == "train" else 1.0
+    return per_layer * n_attn * mult
+
+
+def attention_hbm_adjustment(cfg, shape, mesh_shape: dict[str, int]) -> float:
+    """Per-device HBM bytes of score/prob tiles that the lax-level chunked
+    attention materializes but the Pallas flash kernel
+    (kernels/flash_attention.py) provably keeps in VMEM on TPU.
+
+    Applied only at opt levels using chunked attention (O1+): on TPU the
+    kernel replaces the lax twin 1:1 (bit-validated in interpret mode), so
+    q/k/v/out are the only attention HBM traffic. Accounting per visible
+    (query, key) pair as seen by the fused-bytes parser: fwd ~ 6 B
+    (f32 score out + bf16 prob operand), train adds the backward dots
+    (~ dP out + P, dS reads) ~ 20 B more. Constants documented in
+    EXPERIMENTS.md §Roofline; they only SUBTRACT traffic the parser
+    attributed to attention-internal dots.
+    """
+    if "rwkv" in cfg.period:  # attention-free
+        return 0.0
+    dp = 1
+    for a in ("pod", "data"):
+        dp *= mesh_shape.get(a, 1)
+    b_loc = max(shape.global_batch // dp, 1)
+    t = shape.seq_len
+    if shape.kind == "decode":
+        return 0.0  # decode scores are (B,H,1,S): negligible
+    h = cfg.n_heads
+    pairs = 0.0
+    for kind in cfg.layer_kinds:
+        if kind in ("attn", "dense", "moe") or kind.startswith("mla"):
+            pairs += t * t / 2
+        elif kind == "local":
+            pairs += t * min(cfg.window, t)
+        elif kind == "xattn":
+            pairs += t * t / 2 + t * cfg.encoder_seq
+        elif kind in ("rglru", "rwkv"):
+            continue
+    if cfg.encoder_layers:
+        pairs += cfg.encoder_layers * cfg.encoder_seq**2
+    bytes_per_pair = 26.0 if shape.kind == "train" else 6.0
+    return b_loc * h * pairs * bytes_per_pair
+
+
+def moe_cpu_excess(cfg, shape, mesh_shape: dict[str, int]) -> float:
+    """Analytic PER-DEVICE FLOPs that the CPU dense fallback of ragged_dot
+    executes BEYOND the true grouped matmul (TPU gmm): excess factor
+    (E_local - 1) on the routed expert compute."""
+    if cfg.moe is None:
+        return 0.0
+    mc = cfg.moe
+    ep = mesh_shape.get("model", 1)
+    dp = 1
+    for a in ("pod", "data"):
+        dp *= mesh_shape.get(a, 1)
+    e_local = max(mc.n_experts // ep, 1)
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        t_local = max(b // dp, 1)
+    else:
+        t_local = max(b // dp, 1) * s
+    if t_local * mc.top_k <= 4096:
+        cap = t_local * mc.top_k
+    else:
+        cap = min(
+            int(t_local * mc.top_k / ep * mc.capacity_factor) + 1,
+            t_local * mc.top_k,
+        )
+    n_moe = sum(1 for k in cfg.layer_kinds if k in ("moe", "mla"))
+    per_layer_dense = 3 * 2 * cap * cfg.d_model * mc.d_ff_expert * e_local
+    mult = 3.0 if shape.kind == "train" else 1.0
+    return n_moe * per_layer_dense * (1.0 - 1.0 / e_local) * mult

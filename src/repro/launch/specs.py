@@ -1,0 +1,58 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+
+``input_specs(arch, shape)`` returns (kind, batch_specs) where batch_specs
+are ShapeDtypeStructs — weak-type-correct, shardable, never allocated.
+Decode cells also need cache specs: ``cache_specs(model, shape)``.
+
+Skip policy (DESIGN.md §4): long_500k only for sub-quadratic archs;
+decode shapes skipped for encoder-only archs (none assigned — seamless is
+enc-dec and DOES decode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config
+from repro.models import SHAPES, Model
+from repro.models.config import ModelConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def cell_is_runnable(arch: str, shape_name: str) -> tuple[bool, str]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "pure full-attention arch: 500k decode skipped (DESIGN §4)"
+    return True, ""
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {"tokens": SDS((b, s), jnp.int32)}
+    if cfg.family == "audio":
+        specs["enc_embeds"] = SDS((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        n_patch = min(256, s // 2)
+        specs["patch_embeds"] = SDS((b, n_patch, cfg.d_model), jnp.bfloat16)
+        specs["positions"] = SDS((3, b, s), jnp.int32)
+    return specs
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b = shape.global_batch
+    return {"token": SDS((b,), jnp.int32), "pos": SDS((b,), jnp.int32)}
+
+
+def cache_specs(model: Model, shape: ShapeConfig):
+    """Abstract cache tree for decode cells (never allocated)."""
+    return jax.eval_shape(
+        lambda: model.empty_caches(shape.global_batch, shape.seq_len)
+    )
+
+
+def batch_specs_for(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    if shape.kind == "decode":
+        return decode_batch_specs(cfg, shape)
+    return train_batch_specs(cfg, shape)

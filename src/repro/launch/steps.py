@@ -1,0 +1,148 @@
+"""Jit-able train / prefill / decode steps with full sharding annotations.
+
+These are the functions the dry-run lowers and the examples execute.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (
+    batch_specs,
+    cache_shardings,
+    mesh_axes,
+    param_shardings,
+)
+from repro.models import EPSpec, Model
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim.adamw import AdamW, AdamWState, global_norm
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+# §Perf optimization levels (EXPERIMENTS.md §Perf). O0 is the baseline the
+# roofline table reports; higher levels are the hillclimb steps.
+# (The resident-weight tiny-batch EP path (H5) lives in moe.py and engages
+# automatically for decode-scale token counts in any level's compile.)
+_O1 = dict(attn_impl="chunked", attn_q_blk=1024, attn_k_blk=2048)
+_O2 = dict(_O1, vocab_chunk=32768, pin=True)
+OPT_LEVELS: dict[str, dict] = {
+    "O0": {},
+    # O1 (H1): flash-style chunked attention (no S^2 scores, static skips)
+    "O1": _O1,
+    # O2 (H4 + CE): + GSPMD batch-sharding pins at attention (without them
+    # the partitioner replicates the global batch through attention
+    # einsums whose head dims don't divide the model axis) + chunked CE
+    "O2": _O2,
+    # O3 (H2): + full scan-body remat — trades ~1.3x compute + recompute
+    # traffic for O(periods) activation capacity (fits-HBM flips)
+    "O3": dict(_O2, remat="full"),
+    # O4 (H3): + one-row decode cache writes (dynamic_update_slice)
+    "O4": dict(_O2, remat="full", cache_update="dus"),
+}
+
+
+def build_model(
+    cfg: ModelConfig,
+    mesh: Mesh | None,
+    *,
+    dtype=jnp.bfloat16,
+    remat: str = "dots",
+    opt: str = "O0",
+) -> Model:
+    """Model wired for the mesh: EP island enabled for MoE archs."""
+    ep = None
+    if cfg.moe is not None and mesh is not None and "model" in mesh.axis_names:
+        dp = mesh_axes(mesh)["dp"]
+        ep = EPSpec(mesh=mesh, ep_axis="model", fsdp_axes=dp or ("data",), dp_axes=dp or ("data",))
+    kw = dict(OPT_LEVELS[opt])
+    remat = kw.pop("remat", remat)
+    if kw.pop("pin", False) and mesh is not None:
+        kw["pin_mesh"] = mesh
+        kw["pin_axes"] = mesh_axes(mesh)["dp"]
+    return Model(cfg=cfg, dtype=dtype, ep=ep, remat=remat, **kw)
+
+
+def make_train_step(model: Model, opt: AdamW):
+    def train_step(state: TrainState, batch: dict):
+        loss, grads = jax.value_and_grad(model.loss)(state.params, batch)
+        params, opt_state = opt.update(grads, state.opt, state.params)
+        metrics = {"loss": loss, "grad_norm": global_norm(grads)}
+        return TrainState(params, opt_state), metrics
+
+    return train_step
+
+
+def abstract_train_state(model: Model, opt: AdamW):
+    return jax.eval_shape(
+        lambda k: TrainState(
+            params=model.init(k), opt=opt.init(model.init(k))
+        ),
+        jax.random.key(0),
+    )
+
+
+def train_state_shardings(abstract: TrainState, mesh: Mesh) -> TrainState:
+    p_sh = param_shardings(abstract.params, mesh)
+    return TrainState(
+        params=p_sh,
+        opt=AdamWState(
+            step=NamedSharding(mesh, P()),
+            m=param_shardings(abstract.opt.m, mesh),
+            v=param_shardings(abstract.opt.v, mesh),
+        ),
+    )
+
+
+def jit_train_step(model: Model, opt: AdamW, mesh: Mesh, batch_sds: dict):
+    """Returns (jitted_step, abstract_state, state_shardings, batch_shardings)."""
+    abstract = abstract_train_state(model, opt)
+    state_sh = train_state_shardings(abstract, mesh)
+    b_specs = batch_specs(batch_sds, mesh)
+    batch_sh = {k: NamedSharding(mesh, s) for k, s in b_specs.items()}
+    step = jax.jit(
+        make_train_step(model, opt),
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,),
+    )
+    return step, abstract, state_sh, batch_sh
+
+
+def jit_prefill_step(model: Model, mesh: Mesh, batch_sds: dict):
+    b_specs = batch_specs(batch_sds, mesh)
+    batch_sh = {k: NamedSharding(mesh, s) for k, s in b_specs.items()}
+    abstract_params = jax.eval_shape(model.init, jax.random.key(0))
+    p_sh = param_shardings(abstract_params, mesh)
+
+    def prefill(params, batch):
+        return model.prefill(params, batch)
+
+    step = jax.jit(prefill, in_shardings=(p_sh, batch_sh))
+    return step, abstract_params, p_sh, batch_sh
+
+
+def jit_decode_step(model: Model, mesh: Mesh, batch_sds: dict, cache_sds):
+    b_specs = batch_specs(batch_sds, mesh)
+    batch_sh = {k: NamedSharding(mesh, s) for k, s in b_specs.items()}
+    abstract_params = jax.eval_shape(model.init, jax.random.key(0))
+    p_sh = param_shardings(abstract_params, mesh)
+    c_sh = cache_shardings(cache_sds, mesh)
+
+    def decode(params, caches, batch):
+        return model.decode_step(params, caches, batch)
+
+    step = jax.jit(
+        decode,
+        in_shardings=(p_sh, c_sh, batch_sh),
+        out_shardings=(None, c_sh),
+        donate_argnums=(1,),
+    )
+    return step, abstract_params, p_sh, c_sh, batch_sh

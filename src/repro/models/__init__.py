@@ -1,0 +1,5 @@
+"""Model plane: the 10 assigned architectures on one flexible stack."""
+
+from .config import SHAPES, MLAConfig, ModelConfig, MoEConfig, ShapeConfig
+from .lm import Model
+from .moe import EPSpec

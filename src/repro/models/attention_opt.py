@@ -1,0 +1,120 @@
+"""Chunked (flash-style) attention — the §Perf memory-term optimization.
+
+The baseline `_sdpa` materializes the full (Tq, Tk) score matrix in f32;
+at 32k context that is the dominant HBM term (and remat-"dots" saves it
+for backward, exploding per-device memory). This implementation:
+
+  * processes STATIC q-block x k-block tiles with an online softmax
+    (running max / normalizer), peak live score buffer = one tile;
+  * statically SKIPS fully-masked tiles: causal skips the upper triangle
+    of blocks, sliding-window skips blocks outside the band — for gemma3's
+    local layers this also removes the wasted masked FLOPs the naive
+    version burns;
+  * tiles are unrolled in the HLO (no inner while loop), so the dry-run
+    cost analysis and the layer-delta roofline correction stay exact.
+
+This is the lax-level twin of a Pallas flash kernel: block sizes play the
+BlockSpec role (picked so a tile fits VMEM: q_blk x k_blk f32 scores +
+k/v tiles ~ 2-6 MB), and the MXU sees (q_blk x hd) x (hd x k_blk)
+contractions with hardware-aligned dims.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+NEG = -1e30
+
+
+def chunked_sdpa(
+    q: Array,
+    k: Array,
+    v: Array,
+    scale,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_blk: int = 1024,
+    k_blk: int = 1024,
+) -> Array:
+    """q (B,Tq,H,hd); k/v (B,Tk,KH,*) GQA; returns (B,Tq,H,v_dim).
+
+    Assumes queries are at positions 0..Tq-1 against keys 0..Tk-1 with
+    Tq == Tk (train/prefill self-attention; decode keeps the tiny naive
+    path). Tq need not divide q_blk (last tile is short).
+    """
+    b, tq, h, hd = q.shape
+    tk, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    vd = v.shape[-1]
+    q_blk = min(q_blk, tq)
+    k_blk = min(k_blk, tk)
+
+    out_blocks = []
+    for qs in range(0, tq, q_blk):
+        qe = min(qs + q_blk, tq)
+        qb = q[:, qs:qe].reshape(b, qe - qs, kh, g, hd)
+        m = jnp.full((b, kh, g, qe - qs), NEG, jnp.float32)
+        l = jnp.zeros((b, kh, g, qe - qs), jnp.float32)
+        acc = jnp.zeros((b, qe - qs, kh, g, vd), jnp.float32)
+        for ks_ in range(0, tk, k_blk):
+            ke = min(ks_ + k_blk, tk)
+            if causal and ks_ > qe - 1:
+                continue  # block entirely above the diagonal
+            if window is not None and ke - 1 < qs - window + 1:
+                continue  # block entirely outside the sliding window
+            kb = k[:, ks_:ke]
+            vb = v[:, ks_:ke]
+            s = (
+                jnp.einsum("bqkgd,bskd->bkgqs", qb, kb).astype(jnp.float32)
+                * scale
+            )
+            iq = jnp.arange(qs, qe)[:, None]
+            ik = jnp.arange(ks_, ke)[None, :]
+            mask = jnp.ones((qe - qs, ke - ks_), bool)
+            if causal:
+                mask &= ik <= iq
+            if window is not None:
+                mask &= ik > iq - window
+            s = jnp.where(mask[None, None, None], s, NEG)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha.transpose(0, 3, 1, 2)[..., None] + jnp.einsum(
+                "bkgqs,bskd->bqkgd", p.astype(vb.dtype), vb
+            ).astype(jnp.float32)
+            m = m_new
+        out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        out_blocks.append(out.astype(q.dtype).reshape(b, qe - qs, h, vd))
+    return jnp.concatenate(out_blocks, axis=1)
+
+
+def chunked_softmax_xent(
+    h: Array, w: Array, labels: Array, *, chunk: int = 16384
+) -> Array:
+    """Cross entropy without materializing (B,S,V) f32 logits.
+
+    h (B,S,d), w (d,V), labels (B,S). Unrolled static chunks over vocab:
+    accumulate running max / sum-exp and the gold logit. Returns per-token
+    CE (B,S) in f32 (caller applies masking / mean).
+    """
+    b, s, d = h.shape
+    vtot = w.shape[1]
+    chunk = min(chunk, vtot)
+    m = jnp.full((b, s), NEG, jnp.float32)
+    l = jnp.zeros((b, s), jnp.float32)
+    gold = jnp.zeros((b, s), jnp.float32)
+    for vs in range(0, vtot, chunk):
+        ve = min(vs + chunk, vtot)
+        logits = (h @ w[:, vs:ve]).astype(jnp.float32)  # (B,S,c)
+        m_new = jnp.maximum(m, logits.max(-1))
+        l = l * jnp.exp(m - m_new) + jnp.exp(logits - m_new[..., None]).sum(-1)
+        in_chunk = (labels >= vs) & (labels < ve)
+        idx = jnp.clip(labels - vs, 0, ve - vs - 1)
+        g = jnp.take_along_axis(logits, idx[..., None], axis=-1)[..., 0]
+        gold = jnp.where(in_chunk, g, gold)
+        m = m_new
+    logz = m + jnp.log(l)
+    return logz - gold

@@ -1,0 +1,395 @@
+"""Core layer primitives: norms, RoPE/M-RoPE, GQA attention (+KV cache),
+MLA (DeepSeek latent attention, absorbed decode), dense MLPs.
+
+All layers are pure functions over param pytrees (nested dicts), jit- and
+scan-friendly, dtype-polymorphic (params carry the dtype; activations
+follow). Distribution is GSPMD via sharding constraints applied at the
+train/serve step level, except the MoE expert island (see moe.py).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from .config import ModelConfig
+
+Params = dict[str, Any]
+
+
+class Ctx(NamedTuple):
+    """Per-call context threaded through the stack."""
+
+    mode: str  # "train" | "prefill" | "decode"
+    positions: Array | None = None  # (B,S) or (3,B,S) for M-RoPE
+    decode_pos: Array | None = None  # (B,) current write index for decode
+    enc_out: Array | None = None  # (B, S_enc, d) encoder memory (enc-dec)
+    cache_len: int = 0  # static cache capacity S for decode
+    # perf knobs (§Perf): chunked flash-style attention + cache write mode
+    attn_impl: str = "naive"  # "naive" | "chunked" | "stub"
+    attn_q_blk: int = 1024
+    attn_k_blk: int = 1024
+    cache_update: str = "onehot"  # "onehot" | "dus"
+    # GSPMD activation pinning (§Perf H4): without it the partitioner drops
+    # BATCH sharding through attention einsums whose head dims don't divide
+    # the model axis, silently replicating the global batch per device.
+    pin_mesh: Any = None
+    pin_axes: tuple = ()
+
+
+def _init(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape) / jnp.sqrt(fan_in)).astype(dtype)
+
+
+def _to_cache_layout(x: Array, s: int) -> Array:
+    """Arrange prefill K/V (B, t, ...) into a capacity-s cache buffer.
+
+    If t <= s: pad with zeros (slot p holds token p). If t > s (rolling
+    window buffer): keep the last s tokens, each token p stored at slot
+    p % s — matching the decode-time rolling write."""
+    t = x.shape[1]
+    if t == s:
+        return x
+    if t < s:
+        pad = [(0, 0)] * x.ndim
+        pad[1] = (0, s - t)
+        return jnp.pad(x, pad)
+    keep = x[:, t - s :]
+    slots = jnp.arange(t - s, t) % s
+    return jnp.zeros_like(keep).at[:, slots].set(keep)
+
+
+# --------------------------------------------------------------------- norms
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: Array, eps: float = 1e-6) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return y * p["scale"]
+
+
+# ---------------------------------------------------------------------- rope
+def rope_angles(
+    positions: Array, rot_dim: int, theta: float, sections=None
+) -> tuple[Array, Array]:
+    """positions (B,S) -> cos/sin (B,S,rot_dim/2). M-RoPE: positions (3,B,S)
+    with ``sections`` (t,h,w) splitting the rot_dim/2 frequencies."""
+    half = rot_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    if sections is None:
+        if positions.ndim == 3:  # M-RoPE positions given but plain rope asked
+            positions = positions[0]
+        ang = positions.astype(jnp.float32)[..., None] * freqs  # (B,S,half)
+    else:
+        assert positions.ndim == 3, "M-RoPE needs (3,B,S) positions"
+        sec = jnp.cumsum(jnp.asarray((0,) + tuple(sections)))
+        idx = jnp.searchsorted(sec[1:], jnp.arange(half), side="right")  # 0/1/2
+        # positions (3,B,S): pick section stream per frequency -> (B,S,half)
+        ang = jnp.moveaxis(positions, 0, -1).astype(jnp.float32)[..., idx] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x (B,S,H,hd) with rotating first 2*half dims; cos/sin (B,S,half)."""
+    half = cos.shape[-1]
+    rot, keep = x[..., : 2 * half], x[..., 2 * half :]
+    x1, x2 = rot[..., :half], rot[..., half:]
+    c, s = cos[:, :, None, :], sin[:, :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), keep], axis=-1)
+
+
+# ----------------------------------------------------------------- attention
+def attn_init(key, cfg: ModelConfig, dtype) -> Params:
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": _init(ks[0], (d, h * hd), d, dtype),
+        "wk": _init(ks[1], (d, kh * hd), d, dtype),
+        "wv": _init(ks[2], (d, kh * hd), d, dtype),
+        "wo": _init(ks[3], (h * hd, d), h * hd, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def pin_batch(x: Array, ctx: "Ctx") -> Array:
+    """Re-assert batch-dim sharding over the DP axes (no-op without mesh)."""
+    if ctx.pin_mesh is None or not ctx.pin_axes:
+        return x
+    import numpy as _np
+    from jax.sharding import NamedSharding, PartitionSpec as _P
+
+    dp = int(_np.prod([ctx.pin_mesh.shape[a] for a in ctx.pin_axes]))
+    if x.shape[0] % dp != 0:
+        return x
+    spec = _P(ctx.pin_axes, *(None,) * (x.ndim - 1))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.pin_mesh, spec))
+
+
+def _write_kv(cache: Array, new: Array, pos: Array, mode: str) -> Array:
+    """Write ``new`` (B,1,...) into ``cache`` (B,S,...) at per-batch ``pos``.
+
+    "onehot": arithmetic select — reads+writes the whole cache (baseline).
+    "dus": per-batch dynamic_update_slice — touches one row (§Perf)."""
+    if mode == "dus":
+        def one(c, n, p):
+            start = (p,) + (0,) * (c.ndim - 1)
+            return jax.lax.dynamic_update_slice(c, n, start)
+
+        return jax.vmap(one)(cache, new, pos)
+    oh = jax.nn.one_hot(pos, cache.shape[1], dtype=cache.dtype)
+    oh = oh.reshape(oh.shape + (1,) * (cache.ndim - 2))
+    return cache * (1 - oh) + oh * new
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q (B,Tq,H,hd), k/v (B,Tk,KH,hd) with GQA head grouping."""
+    b, tq, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    q = q.reshape(b, tq, kh, g, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(b, tq, h, v.shape[-1])  # v head dim may differ (MLA)
+
+
+def attn_apply(
+    p: Params,
+    x: Array,
+    ctx: Ctx,
+    cfg: ModelConfig,
+    *,
+    window: int | None = None,
+    cache: Params | None = None,
+    cross: bool = False,
+) -> tuple[Array, Params | None]:
+    """Self (or cross) attention. Returns (y, new_cache)."""
+    b, t, d = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = (x @ p["wq"]).reshape(b, t, h, hd)
+    if cross and ctx.mode == "decode":
+        # encoder memory K/V live in the cross cache; never recomputed
+        assert cache is not None
+        k, v = cache["k"], cache["v"]
+    else:
+        kv_src = ctx.enc_out if cross else x
+        k = (kv_src @ p["wk"]).reshape(b, kv_src.shape[1], kh, hd)
+        v = (kv_src @ p["wv"]).reshape(b, kv_src.shape[1], kh, hd)
+
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        if not (cross and ctx.mode == "decode"):
+            k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+
+    rot_dim = int(cfg.rotary_pct * hd) // 2 * 2
+    if not cross and rot_dim > 0:
+        if ctx.mode == "decode":
+            pos_q = ctx.decode_pos[:, None]  # (B,1)
+            if cfg.mrope_sections is not None:  # text stream: t=h=w position
+                pos_q = jnp.broadcast_to(pos_q[None], (3,) + pos_q.shape)
+        else:
+            pos_q = ctx.positions if ctx.positions is not None else jnp.arange(t)[None, :].repeat(b, 0)
+        cos, sin = rope_angles(pos_q, rot_dim, cfg.rope_theta, cfg.mrope_sections)
+        q = apply_rope(q, cos, sin)
+        if ctx.mode == "decode":
+            k = apply_rope(k, cos, sin)  # single position
+        else:
+            k = apply_rope(k, cos, sin)
+
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    new_cache = None
+
+    if cross:
+        # cross-attention: full visibility of encoder memory
+        if ctx.mode == "decode":
+            new_cache = cache
+        elif ctx.mode == "prefill":
+            new_cache = {"k": k, "v": v}
+        mask = jnp.ones((b, t, k.shape[1]), bool)
+        y = _sdpa(q, k, v, mask, scale)
+    elif ctx.mode == "decode":
+        assert cache is not None
+        s = cache["k"].shape[1]
+        pos = ctx.decode_pos  # (B,)
+        # rolling buffer when the cache is shorter than the stream (local
+        # attention): keys carry RoPE at absolute positions, slots are
+        # overwritten mod s (Mistral-style sliding window).
+        write = pos % s if (window is not None and s <= window) else pos
+        k_cache = pin_batch(_write_kv(cache["k"], k, write, ctx.cache_update), ctx)
+        v_cache = pin_batch(_write_kv(cache["v"], v, write, ctx.cache_update), ctx)
+        new_cache = {"k": k_cache, "v": v_cache}
+        j = jnp.arange(s)[None, :]
+        if window is not None and s <= window:
+            mask = (j <= pos[:, None]) | (pos[:, None] >= s)
+        else:
+            mask = j <= pos[:, None]
+            if window is not None:
+                mask &= j > pos[:, None] - window
+        y = _sdpa(q, k_cache, v_cache, mask[:, None, :], scale)
+    else:  # train / prefill: full causal (optionally windowed) self-attn
+        if ctx.attn_impl == "stub":
+            # roofline decomposition probe: keep q/k/v/o projections, drop
+            # the attention core (its TPU cost is added back analytically)
+            g = h // kh
+            y = jnp.repeat(v, g, axis=2) + 0.0 * q
+        elif ctx.attn_impl == "chunked":
+            from .attention_opt import chunked_sdpa
+
+            q, k, v = pin_batch(q, ctx), pin_batch(k, ctx), pin_batch(v, ctx)
+            y = pin_batch(
+                chunked_sdpa(
+                    q, k, v, scale,
+                    causal=True, window=window,
+                    q_blk=ctx.attn_q_blk, k_blk=ctx.attn_k_blk,
+                ),
+                ctx,
+            )
+        else:
+            i = jnp.arange(t)[:, None]
+            j = jnp.arange(t)[None, :]
+            mask = j <= i
+            if window is not None:
+                mask &= j > i - window
+            mask = jnp.broadcast_to(mask[None], (b, t, t))
+            y = _sdpa(q, k, v, mask, scale)
+        if ctx.mode == "prefill":
+            s = ctx.cache_len or t
+            if window is not None:
+                s = min(s, window)
+            new_cache = {"k": _to_cache_layout(k, s), "v": _to_cache_layout(v, s)}
+
+    return y.reshape(b, t, h * hd) @ p["wo"], new_cache
+
+
+# ----------------------------------------------------------------------- MLA
+def mla_init(key, cfg: ModelConfig, dtype) -> Params:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qh = m.nope_head_dim + m.rope_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wq_a": _init(ks[0], (d, m.q_lora_rank), d, dtype),
+        "q_norm": rmsnorm_init(m.q_lora_rank, dtype),
+        "wq_b": _init(ks[1], (m.q_lora_rank, h * qh), m.q_lora_rank, dtype),
+        "wkv_a": _init(ks[2], (d, m.kv_lora_rank + m.rope_head_dim), d, dtype),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank, dtype),
+        "w_uk": _init(
+            ks[3], (m.kv_lora_rank, h * m.nope_head_dim), m.kv_lora_rank, dtype
+        ),
+        "w_uv": _init(
+            ks[4], (m.kv_lora_rank, h * m.v_head_dim), m.kv_lora_rank, dtype
+        ),
+        "wo": _init(ks[5], (h * m.v_head_dim, d), h * m.v_head_dim, dtype),
+    }
+
+
+def mla_apply(
+    p: Params, x: Array, ctx: Ctx, cfg: ModelConfig, *, cache=None
+) -> tuple[Array, Params | None]:
+    """DeepSeek MLA. Train/prefill: naive (expanded) attention; decode:
+    absorbed form over the compressed (c_kv, k_pe) cache — the cache stores
+    kv_lora_rank + rope_head_dim floats per token instead of 2*H*hd."""
+    m = cfg.mla
+    b, t, d = x.shape
+    h = cfg.n_heads
+    nd, rd, vd = m.nope_head_dim, m.rope_head_dim, m.v_head_dim
+
+    q = rmsnorm(p["q_norm"], x @ p["wq_a"], cfg.norm_eps) @ p["wq_b"]
+    q = q.reshape(b, t, h, nd + rd)
+    q_nope, q_pe = q[..., :nd], q[..., nd:]
+
+    kv_a = x @ p["wkv_a"]  # (B,T, rank+rd)
+    c_kv = rmsnorm(p["kv_norm"], kv_a[..., : m.kv_lora_rank], cfg.norm_eps)
+    k_pe_raw = kv_a[..., m.kv_lora_rank :]  # (B,T,rd), shared across heads
+
+    if ctx.mode == "decode":
+        pos_q = ctx.decode_pos[:, None]
+    else:
+        pos_q = ctx.positions if ctx.positions is not None else jnp.arange(t)[None, :].repeat(b, 0)
+    cos, sin = rope_angles(pos_q, rd, cfg.rope_theta)
+    q_pe = apply_rope(q_pe, cos, sin)
+    k_pe = apply_rope(k_pe_raw[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    scale = 1.0 / jnp.sqrt(nd + rd).astype(jnp.float32)
+    new_cache = None
+
+    if ctx.mode == "decode":
+        assert cache is not None
+        s = cache["ckv"].shape[1]
+        pos = ctx.decode_pos
+        ckv = pin_batch(_write_kv(cache["ckv"], c_kv, pos, ctx.cache_update), ctx)
+        kpe = pin_batch(_write_kv(cache["kpe"], k_pe, pos, ctx.cache_update), ctx)
+        new_cache = {"ckv": ckv, "kpe": kpe}
+        # absorbed: q_eff[h] = W_uk[h]^T q_nope[h]  in latent space
+        w_uk = p["w_uk"].reshape(m.kv_lora_rank, h, nd)
+        q_eff = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)  # (B,1,H,rank)
+        logits = (
+            jnp.einsum("bqhr,bsr->bhqs", q_eff, ckv)
+            + jnp.einsum("bqhd,bsd->bhqs", q_pe, kpe)
+        ).astype(jnp.float32) * scale
+        j = jnp.arange(s)[None, None, None, :]
+        logits = jnp.where(j <= pos[:, None, None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        ctx_lat = jnp.einsum("bhqs,bsr->bqhr", w, ckv)  # (B,1,H,rank)
+        w_uv = p["w_uv"].reshape(m.kv_lora_rank, h, vd)
+        out = jnp.einsum("bqhr,rhv->bqhv", ctx_lat, w_uv)
+    else:
+        # naive: expand K/V per head from the latent
+        k_nope = (c_kv @ p["w_uk"]).reshape(b, t, h, nd)
+        v = (c_kv @ p["w_uv"]).reshape(b, t, h, vd)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (b, t, h, rd))], -1
+        )
+        q_full = jnp.concatenate([q_nope, q_pe], -1)
+        if ctx.attn_impl == "stub":
+            out = v + 0.0 * q_full[..., : v.shape[-1]]
+        elif ctx.attn_impl == "chunked":
+            from .attention_opt import chunked_sdpa
+
+            q_full, k_full, v = (
+                pin_batch(q_full, ctx), pin_batch(k_full, ctx), pin_batch(v, ctx)
+            )
+            out = pin_batch(
+                chunked_sdpa(
+                    q_full, k_full, v, scale,
+                    causal=True, window=None,
+                    q_blk=ctx.attn_q_blk, k_blk=ctx.attn_k_blk,
+                ),
+                ctx,
+            )
+        else:
+            i = jnp.arange(t)[:, None]
+            j = jnp.arange(t)[None, :]
+            mask = jnp.broadcast_to((j <= i)[None], (b, t, t))
+            out = _sdpa(q_full, k_full, v, mask, scale)
+        if ctx.mode == "prefill":
+            s = ctx.cache_len or t
+            new_cache = {
+                "ckv": _to_cache_layout(c_kv, s),
+                "kpe": _to_cache_layout(k_pe, s),
+            }
+
+    return out.reshape(b, t, h * vd) @ p["wo"], new_cache
+
+
+# ----------------------------------------------------------------------- MLP
+def mlp_init(key, d: int, ff: int, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _init(ks[0], (d, ff), d, dtype),
+        "w_up": _init(ks[1], (d, ff), d, dtype),
+        "w_down": _init(ks[2], (ff, d), ff, dtype),
+    }
+
+
+def mlp_apply(p: Params, x: Array) -> Array:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]

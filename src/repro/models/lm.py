@@ -1,0 +1,276 @@
+"""Top-level language model: embeddings, stack(s), head, loss, serve steps.
+
+One Model class covers all assigned families:
+
+* decoder-only (dense / MoE / MLA / hybrid / SSM): `loss`, `prefill`,
+  `decode_step`
+* encoder-decoder (seamless-m4t): a stub frontend supplies precomputed
+  frame embeddings `enc_embeds` (B, S_enc, d); the encoder stack runs once
+  (train / prefill), the decoder cross-attends.
+* VLM (qwen2-vl): stub vision frontend supplies `patch_embeds` (B, P, d),
+  merged into the first P token slots; M-RoPE positions (3, B, S).
+
+Batch dict keys:
+  train/prefill: tokens (B,S) int32 [, labels, positions, enc_embeds,
+                 patch_embeds]
+  decode:        token (B,) int32, pos (B,) int32 [, enc stays in cache]
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from .config import ModelConfig
+from .layers import Ctx, rmsnorm, rmsnorm_init
+from .moe import EPSpec
+from .stack import stack_apply, stack_init
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    dtype: Any = jnp.float32
+    ep: EPSpec | None = None
+    remat: str = "none"  # "none" | "full" | "dots" | "names"
+    # §Perf knobs (baseline = naive/onehot/None; see EXPERIMENTS.md §Perf)
+    attn_impl: str = "naive"  # "naive" | "chunked" flash-style attention
+    attn_q_blk: int = 1024
+    attn_k_blk: int = 1024
+    cache_update: str = "onehot"  # decode KV write: "onehot" | "dus"
+    vocab_chunk: int | None = None  # chunked CE (no (B,S,V) f32 logits)
+    pin_mesh: Any = None  # GSPMD batch-sharding pins at attention (§Perf H4)
+    pin_axes: tuple = ()
+
+    # ------------------------------------------------------------- params
+    def init(self, key: Array) -> Params:
+        cfg = self.cfg
+        k_emb, k_stack, k_enc, k_head = jax.random.split(key, 4)
+        params: Params = {
+            "embed": (
+                jax.random.normal(k_emb, (cfg.vocab, cfg.d_model)) * 0.02
+            ).astype(self.dtype),
+            "stack": stack_init(k_stack, cfg, self.dtype),
+            "ln_f": rmsnorm_init(cfg.d_model, self.dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (
+                jax.random.normal(k_head, (cfg.d_model, cfg.vocab)) * 0.02
+            ).astype(self.dtype)
+        if cfg.encoder_layers:
+            enc_cfg = dataclasses.replace(
+                cfg,
+                n_layers=cfg.encoder_layers,
+                prefix=(),
+                period=("enc",),
+                suffix=(),
+            )
+            params["encoder"] = {
+                "stack": stack_init(k_enc, enc_cfg, self.dtype),
+                "ln_f": rmsnorm_init(cfg.d_model, self.dtype),
+            }
+        return params
+
+    def param_count(self, params: Params) -> int:
+        return sum(x.size for x in jax.tree.leaves(params))
+
+    # ------------------------------------------------------------ helpers
+    def _encoder_cfg(self) -> ModelConfig:
+        return dataclasses.replace(
+            self.cfg,
+            n_layers=self.cfg.encoder_layers,
+            prefix=(),
+            period=("enc",),
+            suffix=(),
+        )
+
+    def _run_encoder(self, params: Params, enc_embeds: Array) -> Array:
+        ctx = Ctx(mode="train")
+        h, _, _ = stack_apply(
+            params["encoder"]["stack"],
+            enc_embeds.astype(self.dtype),
+            ctx,
+            self._encoder_cfg(),
+            self.ep,
+            None,
+            remat=self.remat,
+        )
+        return rmsnorm(params["encoder"]["ln_f"], h, self.cfg.norm_eps)
+
+    def _embed(self, params: Params, batch: dict) -> Array:
+        x = params["embed"][batch["tokens"]]  # (B,S,d)
+        if "patch_embeds" in batch and batch["patch_embeds"] is not None:
+            pe = batch["patch_embeds"].astype(x.dtype)
+            x = x.at[:, : pe.shape[1], :].add(pe)
+        return x
+
+    def _head(self, params: Params, h: Array) -> Array:
+        h = rmsnorm(params["ln_f"], h, self.cfg.norm_eps)
+        w = (
+            params["embed"].T
+            if self.cfg.tie_embeddings
+            else params["lm_head"]
+        )
+        return h @ w
+
+    def _ctx(self, batch: dict, mode: str, cache_len: int = 0) -> Ctx:
+        return Ctx(
+            mode=mode,
+            positions=batch.get("positions"),
+            decode_pos=batch.get("pos"),
+            enc_out=batch.get("_enc_out"),
+            cache_len=cache_len,
+            attn_impl=self.attn_impl,
+            attn_q_blk=self.attn_q_blk,
+            attn_k_blk=self.attn_k_blk,
+            cache_update=self.cache_update,
+            pin_mesh=self.pin_mesh,
+            pin_axes=self.pin_axes,
+        )
+
+    # -------------------------------------------------------------- train
+    def forward_logits(self, params: Params, batch: dict) -> tuple[Array, Array]:
+        batch = dict(batch)
+        if self.cfg.encoder_layers:
+            batch["_enc_out"] = self._run_encoder(params, batch["enc_embeds"])
+        x = self._embed(params, batch)
+        ctx = self._ctx(batch, "train")
+        h, _, aux = stack_apply(
+            params["stack"], x, ctx, self.cfg, self.ep, None, remat=self.remat
+        )
+        return self._head(params, h), aux
+
+    def loss(self, params: Params, batch: dict) -> Array:
+        labels = batch.get("labels")
+        if labels is None:
+            labels = jnp.pad(
+                batch["tokens"][:, 1:], ((0, 0), (0, 1)), constant_values=0
+            )
+        if self.vocab_chunk is not None:
+            # §Perf: never materialize (B,S,V) f32 logits
+            from .attention_opt import chunked_softmax_xent
+
+            batch = dict(batch)
+            if self.cfg.encoder_layers:
+                batch["_enc_out"] = self._run_encoder(params, batch["enc_embeds"])
+            x = self._embed(params, batch)
+            ctx = self._ctx(batch, "train")
+            h, _, aux = stack_apply(
+                params["stack"], x, ctx, self.cfg, self.ep, None, remat=self.remat
+            )
+            h = rmsnorm(params["ln_f"], h, self.cfg.norm_eps)
+            w = params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+            ce_tok = chunked_softmax_xent(h, w, labels, chunk=self.vocab_chunk)
+            mask = jnp.ones_like(ce_tok).at[:, -1].set(0.0)
+            return jnp.sum(ce_tok * mask) / jnp.sum(mask) + aux
+        logits, aux = self.forward_logits(params, batch)
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        mask = jnp.ones_like(gold).at[:, -1].set(0.0)  # last position has no target
+        ce = jnp.sum((logz - gold) * mask) / jnp.sum(mask)
+        return ce + aux
+
+    # -------------------------------------------------------------- serve
+    def prefill(
+        self, params: Params, batch: dict, cache_len: int | None = None
+    ) -> tuple[Array, Params]:
+        """Returns (last-position logits (B,V), caches). ``cache_len``
+        reserves decode capacity beyond the prompt length."""
+        batch = dict(batch)
+        enc_out = None
+        if self.cfg.encoder_layers:
+            enc_out = self._run_encoder(params, batch["enc_embeds"])
+            batch["_enc_out"] = enc_out
+        x = self._embed(params, batch)
+        ctx = self._ctx(batch, "prefill", cache_len or batch["tokens"].shape[1])
+        h, caches, _ = stack_apply(params["stack"], x, ctx, self.cfg, self.ep, None)
+        logits = self._head(params, h[:, -1:, :])[:, 0]
+        return logits, caches
+
+    def decode_step(
+        self, params: Params, caches: Params, batch: dict
+    ) -> tuple[Array, Params]:
+        """One token: batch = {token (B,), pos (B,)}. Returns (logits, caches)."""
+        x = params["embed"][batch["token"]][:, None, :]  # (B,1,d)
+        ctx = self._ctx(batch, "decode")
+        h, new_caches, _ = stack_apply(
+            params["stack"], x, ctx, self.cfg, self.ep, caches
+        )
+        return self._head(params, h)[:, 0], new_caches
+
+    # ---------------------------------------------------- cache allocation
+    def empty_caches(self, batch_size: int, cache_len: int) -> Params:
+        """Allocate zeroed decode caches (used when decoding without a real
+        prefill — e.g. the decode-shape dry-runs lower exactly this)."""
+        cfg = self.cfg
+
+        def one(kind: str):
+            kh, hd = cfg.n_kv_heads, cfg.head_dim_
+            if kind == "rwkv":
+                n_h = cfg.d_model // cfg.rwkv_head_size
+                return {
+                    "state": jnp.zeros(
+                        (batch_size, n_h, cfg.rwkv_head_size, cfg.rwkv_head_size),
+                        jnp.float32,
+                    ),
+                    "shift_tm": jnp.zeros((batch_size, cfg.d_model), self.dtype),
+                    "shift_cm": jnp.zeros((batch_size, cfg.d_model), self.dtype),
+                }
+            if kind == "rglru":
+                lru = cfg.lru_width or cfg.d_model
+                return {
+                    "h": jnp.zeros((batch_size, lru), jnp.float32),
+                    "conv": jnp.zeros(
+                        (batch_size, cfg.conv_width - 1, lru), self.dtype
+                    ),
+                }
+            if kind.startswith("mla"):
+                m = cfg.mla
+                return {
+                    "self": {
+                        "ckv": jnp.zeros(
+                            (batch_size, cache_len, m.kv_lora_rank), self.dtype
+                        ),
+                        "kpe": jnp.zeros(
+                            (batch_size, cache_len, m.rope_head_dim), self.dtype
+                        ),
+                    }
+                }
+            s = cache_len if kind != "local" else min(cache_len, cfg.window)
+            kv = {
+                "k": jnp.zeros((batch_size, s, kh, hd), self.dtype),
+                "v": jnp.zeros((batch_size, s, kh, hd), self.dtype),
+            }
+            if kind == "xattn":
+                cross = {
+                    "k": jnp.zeros((batch_size, cfg.encoder_seq, kh, hd), self.dtype),
+                    "v": jnp.zeros((batch_size, cfg.encoder_seq, kh, hd), self.dtype),
+                }
+                return {"self": kv, "cross": cross}
+            return {"self": kv}
+
+        caches: Params = {"prefix": [], "period": None, "suffix": []}
+        for kind in cfg.prefix:
+            caches["prefix"].append(one(kind))
+        if cfg.n_periods > 0:
+            rows = []
+            for kind in cfg.period:
+                row = one(kind)
+                rows.append(
+                    jax.tree.map(
+                        lambda a: jnp.broadcast_to(
+                            a[None], (cfg.n_periods,) + a.shape
+                        ),
+                        row,
+                    )
+                )
+            caches["period"] = tuple(rows)
+        for kind in cfg.suffix:
+            caches["suffix"].append(one(kind))
+        return caches

@@ -1,0 +1,97 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Temporal mixing: short causal depthwise conv (width 4) + Real-Gated LRU:
+
+    i_t = sigmoid(W_i x_t)          (input gate)
+    r_t = sigmoid(W_a x_t)          (recurrence gate)
+    a_t = exp(c * r_t * log sigmoid(Lambda))     (c = 8)
+    h_t = a_t .* h_{t-1} + sqrt(1 - a_t^2) .* (i_t .* x_t)
+
+Training/prefill uses `jax.lax.associative_scan` over the diagonal linear
+recurrence (O(log T) depth — the sub-quadratic path that makes long_500k
+runnable); decode is an O(1) state update. Recurrence math in f32.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from .config import ModelConfig
+from .layers import _init
+
+Params = dict[str, Any]
+C_FACTOR = 8.0
+
+
+def rglru_init(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    lru = cfg.lru_width or d
+    ks = jax.random.split(key, 7)
+    lam = jax.random.uniform(ks[5], (lru,), minval=2.2, maxval=6.9)
+    return {
+        "w_y": _init(ks[0], (d, lru), d, dtype),
+        "w_x": _init(ks[1], (d, lru), d, dtype),
+        "conv_w": _init(ks[2], (cfg.conv_width, lru), cfg.conv_width, dtype),
+        "conv_b": jnp.zeros((lru,), dtype),
+        "w_i": _init(ks[3], (lru, lru), lru, dtype),
+        "w_a": _init(ks[4], (lru, lru), lru, dtype),
+        "lam": lam.astype(jnp.float32),
+        "w_out": _init(ks[6], (lru, d), lru, dtype),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array, prev: Array | None):
+    """Depthwise causal conv via shifted adds. x (B,S,L); w (cw,L).
+
+    ``prev`` (B,cw-1,L) carries the tail of the previous segment (decode).
+    Returns (y, new_prev).
+    """
+    cw = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)  # (B, S+cw-1, L)
+    s = x.shape[1]
+    y = sum(xp[:, i : i + s, :] * w[cw - 1 - i] for i in range(cw))
+    return y + b, xp[:, -(cw - 1) :, :]
+
+
+def rglru_apply(
+    p: Params, x: Array, mode: str, cache: Params | None = None
+) -> tuple[Array, Params | None]:
+    """x (B,S,d) -> (y (B,S,d), new_cache)."""
+    b, s, d = x.shape
+    gate = jax.nn.gelu(x @ p["w_y"])  # (B,S,L)
+    xb = x @ p["w_x"]
+    prev = cache["conv"] if cache is not None else None
+    xb, conv_tail = _causal_conv(xb, p["conv_w"], p["conv_b"], prev)
+
+    i_g = jax.nn.sigmoid(xb @ p["w_i"]).astype(jnp.float32)
+    r_g = jax.nn.sigmoid(xb @ p["w_a"]).astype(jnp.float32)
+    log_a = C_FACTOR * r_g * jax.nn.log_sigmoid(p["lam"])  # (B,S,L) f32, < 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bterm = beta * i_g * xb.astype(jnp.float32)
+
+    if mode == "decode":
+        assert cache is not None and s == 1
+        h_prev = cache["h"]  # (B,L) f32
+        h = a[:, 0] * h_prev + bterm[:, 0]
+        hs = h[:, None, :]
+        new_cache = {"h": h, "conv": conv_tail}
+    else:
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        _, hs = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+        new_cache = (
+            {"h": hs[:, -1, :], "conv": conv_tail} if mode == "prefill" else None
+        )
+
+    y = (hs.astype(x.dtype) * gate) @ p["w_out"]
+    return y, new_cache

@@ -1,0 +1,151 @@
+"""RWKV6 ("Finch") attention-free block: time-mix with data-dependent decay
+plus squared-ReLU channel-mix.
+
+Time-mix state per head: S in R^{hd x hd} (key x value outer-product memory)
+
+    w_t = exp(-exp(w0 + tanh(x_t A) B))         (data-dependent decay, LoRA)
+    o_t = r_t @ (S_{t-1} + (u .* k_t) v_t^T)    (u = per-head bonus)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+Train/prefill: `lax.scan` over time (O(T) work, O(1) memory per step —
+sub-quadratic, so long_500k runs). Decode: O(1) state update. State math
+in f32. Token-shift interpolation uses static per-channel mix weights (the
+full Finch LoRA token-shift is simplified; the hallmark data-dependent
+decay IS implemented — noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from .config import ModelConfig
+from .layers import _init
+
+Params = dict[str, Any]
+DECAY_LORA = 64
+
+
+def rwkv_init(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_size
+    n_h = d // hd
+    ks = jax.random.split(key, 12)
+    return {
+        "mix": jax.random.uniform(ks[0], (5, d)).astype(dtype),  # r,k,v,w,g
+        "w_r": _init(ks[1], (d, d), d, dtype),
+        "w_k": _init(ks[2], (d, d), d, dtype),
+        "w_v": _init(ks[3], (d, d), d, dtype),
+        "w_g": _init(ks[4], (d, d), d, dtype),
+        "w_o": _init(ks[5], (d, d), d, dtype),
+        "decay_w0": (-4.0 + jax.random.normal(ks[6], (d,)) * 0.3).astype(jnp.float32),
+        "decay_a": _init(ks[7], (d, DECAY_LORA), d, dtype),
+        "decay_b": _init(ks[8], (DECAY_LORA, d), DECAY_LORA, dtype),
+        "bonus_u": (jax.random.normal(ks[9], (n_h, hd)) * 0.3).astype(jnp.float32),
+        "ln_scale": jnp.ones((n_h, hd), dtype),
+        # channel-mix
+        "cm_mix": jax.random.uniform(ks[10], (2, d)).astype(dtype),  # r,k
+        "cm_k": _init(ks[11], (d, cfg.d_ff), d, dtype),
+        "cm_v": _init(jax.random.fold_in(key, 99), (cfg.d_ff, d), cfg.d_ff, dtype),
+        "cm_r": _init(jax.random.fold_in(key, 98), (d, d), d, dtype),
+        # the block owns its two pre-norms (stack adds no extra residual)
+        "ln_tm": jnp.ones((d,), dtype),
+        "ln_cm": jnp.ones((d,), dtype),
+    }
+
+
+def _rms(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale
+
+
+def _token_shift(x: Array, prev: Array | None) -> Array:
+    """x (B,S,d) -> previous-token stream; ``prev`` (B,d) for decode."""
+    if x.shape[1] == 1 and prev is not None:
+        return prev[:, None, :]
+    pad = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None, :]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u, state0):
+    """Sequential WKV recurrence.
+
+    r,k,w: (B,S,H,hd); v: (B,S,H,hd); state0 (B,H,hd,hd) f32.
+    Returns (o (B,S,H,hd), final state).
+    """
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # each (B,H,hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)  # f32
+        o_t = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, o_t
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    s_fin, o = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(o, 0, 1), s_fin
+
+
+def rwkv_apply(
+    p: Params, x: Array, cfg: ModelConfig, mode: str, cache: Params | None = None
+) -> tuple[Array, Params | None]:
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_size
+    n_h = d // hd
+
+    # ---- time mix (pre-norm inside; the block owns its residuals)
+    h1 = _rms(x, p["ln_tm"])
+    prev_tm = cache["shift_tm"] if cache is not None else None
+    xprev = _token_shift(h1, prev_tm)
+    mix = p["mix"][:, None, None, :]  # (5,1,1,d)
+    xr, xk, xv, xw, xg = (h1 * m + xprev * (1 - m) for m in mix)
+    r = (xr @ p["w_r"]).reshape(b, s, n_h, hd)
+    k = (xk @ p["w_k"]).reshape(b, s, n_h, hd)
+    v = (xv @ p["w_v"]).reshape(b, s, n_h, hd)
+    g = jax.nn.silu(xg @ p["w_g"])
+    decay = p["decay_w0"] + jnp.tanh(xw @ p["decay_a"]) @ p["decay_b"]
+    w = jnp.exp(-jnp.exp(decay.astype(jnp.float32))).reshape(b, s, n_h, hd)
+
+    state0 = (
+        cache["state"]
+        if cache is not None
+        else jnp.zeros((b, n_h, hd, hd), jnp.float32)
+    )
+    if mode == "decode":
+        kv = jnp.einsum("bhk,bhv->bhkv", k[:, 0].astype(jnp.float32), v[:, 0].astype(jnp.float32))
+        o = jnp.einsum(
+            "bhk,bhkv->bhv",
+            r[:, 0].astype(jnp.float32),
+            state0 + p["bonus_u"][None, :, :, None] * kv,
+        )[:, None]
+        state = w[:, 0].astype(jnp.float32)[..., None] * state0 + kv
+    else:
+        o, state = _wkv_scan(r, k, v, w, p["bonus_u"], state0)
+
+    # per-head groupnorm
+    o32 = o.astype(jnp.float32)
+    o32 = o32 * jax.lax.rsqrt(jnp.mean(o32**2, axis=-1, keepdims=True) + 1e-6)
+    o = (o32.astype(x.dtype) * p["ln_scale"]).reshape(b, s, d)
+    y_tm = (o * g) @ p["w_o"]
+
+    x2 = x + y_tm
+
+    # ---- channel mix
+    h2 = _rms(x2, p["ln_cm"])
+    prev_cm = cache["shift_cm"] if cache is not None else None
+    x2prev = _token_shift(h2, prev_cm)
+    mr, mk = p["cm_mix"][:, None, None, :]
+    xr2 = h2 * mr + x2prev * (1 - mr)
+    xk2 = h2 * mk + x2prev * (1 - mk)
+    kk = jnp.square(jax.nn.relu(xk2 @ p["cm_k"]))
+    y_cm = (kk @ p["cm_v"]) * jax.nn.sigmoid(xr2 @ p["cm_r"])
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {
+            "state": state,
+            "shift_tm": h1[:, -1, :],
+            "shift_cm": h2[:, -1, :],
+        }
+    return x2 + y_cm, new_cache  # full residual stream (stack passes through)

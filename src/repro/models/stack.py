@@ -1,0 +1,233 @@
+"""Layer-stack machinery: heterogeneous blocks + period-scan.
+
+The stack is ``prefix`` blocks (unrolled) + ``period`` blocks scanned
+``n_periods`` times (params stacked on a leading axis; HLO stays one
+period long regardless of depth) + ``suffix`` blocks (unrolled).
+
+Block kinds (see config.py): attention variants, MoE, MLA, RG-LRU, RWKV6.
+Every block is pre-norm residual; `rwkv` owns its residuals internally.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from .config import ModelConfig
+from .layers import (
+    Ctx,
+    attn_apply,
+    attn_init,
+    mla_apply,
+    mla_init,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+from .moe import EPSpec, moe_apply, moe_init
+from .rglru import rglru_apply, rglru_init
+from .rwkv6 import rwkv_apply, rwkv_init
+
+Params = dict[str, Any]
+
+
+def _attn_kind(kind: str) -> str:
+    if kind.startswith("mla"):
+        return "mla"
+    if kind == "local":
+        return "local"
+    if kind == "enc":
+        return "enc"
+    if kind == "xattn":
+        return "xattn"
+    if kind in ("attn", "dense", "moe"):
+        return "global"
+    raise ValueError(kind)
+
+
+def _mlp_kind(kind: str, cfg: ModelConfig) -> str:
+    if kind in ("moe", "mla"):
+        return "moe"
+    return "dense"
+
+
+def block_init(key, kind: str, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    if kind == "rwkv":
+        return {"rwkv": rwkv_init(ks[0], cfg, dtype)}
+    if kind == "rglru":
+        return {
+            "ln1": rmsnorm_init(d, dtype),
+            "rglru": rglru_init(ks[0], cfg, dtype),
+            "ln2": rmsnorm_init(d, dtype),
+            "mlp": mlp_init(ks[1], d, cfg.d_ff, dtype),
+        }
+    p: Params = {"ln1": rmsnorm_init(d, dtype), "ln2": rmsnorm_init(d, dtype)}
+    if _attn_kind(kind) == "mla":
+        p["attn"] = mla_init(ks[0], cfg, dtype)
+    else:
+        p["attn"] = attn_init(ks[0], cfg, dtype)
+    if kind == "xattn":
+        p["ln_x"] = rmsnorm_init(d, dtype)
+        p["xattn"] = attn_init(ks[2], cfg, dtype)
+    if _mlp_kind(kind, cfg) == "moe":
+        p["moe"] = moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(ks[1], d, cfg.d_ff, dtype)
+    return p
+
+
+def block_apply(
+    p: Params,
+    kind: str,
+    x: Array,
+    ctx: Ctx,
+    cfg: ModelConfig,
+    ep: EPSpec | None,
+    cache: Params | None,
+) -> tuple[Array, Params | None, Array]:
+    """Returns (x_out, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "rwkv":
+        x, new_cache = rwkv_apply(p["rwkv"], x, cfg, ctx.mode, cache)
+        return x, new_cache, aux
+    if kind == "rglru":
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        y, new_cache = rglru_apply(p["rglru"], h, ctx.mode, cache)
+        x = x + y
+        x = x + mlp_apply(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps))
+        return x, new_cache, aux
+
+    ak = _attn_kind(kind)
+    self_cache = cache.get("self") if cache else None
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if ak == "mla":
+        y, new_self = mla_apply(p["attn"], h, ctx, cfg, cache=self_cache)
+    elif ak == "enc":
+        # bidirectional; enc blocks only run in full-sequence mode, no cache
+        y, new_self = _bidirectional_attn(p["attn"], h, ctx, cfg), None
+    else:
+        window = cfg.window if ak == "local" else None
+        y, new_self = attn_apply(
+            p["attn"], h, ctx, cfg, window=window, cache=self_cache
+        )
+    x = x + y
+
+    new_cache: Params | None = None
+    if ak == "xattn":
+        xc = cache.get("cross") if cache else None
+        hx = rmsnorm(p["ln_x"], x, cfg.norm_eps)
+        yx, new_cross = attn_apply(p["xattn"], hx, ctx, cfg, cache=xc, cross=True)
+        x = x + yx
+        if new_self is not None or new_cross is not None:
+            new_cache = {"self": new_self, "cross": new_cross}
+    elif new_self is not None:
+        new_cache = {"self": new_self}
+
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if _mlp_kind(kind, cfg) == "moe":
+        y, aux = moe_apply(p["moe"], h, cfg, ep)
+    else:
+        y = mlp_apply(p["mlp"], h)
+    return x + y, new_cache, aux
+
+
+def _bidirectional_attn(p, h, ctx: Ctx, cfg: ModelConfig):
+    """Full (non-causal) self-attention for encoder blocks."""
+    from .layers import _sdpa, apply_rope, rope_angles
+
+    b, t, _ = h.shape
+    hh, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = (h @ p["wq"]).reshape(b, t, hh, hd)
+    k = (h @ p["wk"]).reshape(b, t, kh, hd)
+    v = (h @ p["wv"]).reshape(b, t, kh, hd)
+    pos = jnp.arange(t)[None, :].repeat(b, 0)
+    cos, sin = rope_angles(pos, cfg.head_dim_, cfg.rope_theta)
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    mask = jnp.ones((b, t, t), bool)
+    y = _sdpa(q, k, v, mask, 1.0 / jnp.sqrt(hd).astype(jnp.float32))
+    return y.reshape(b, t, hh * hd) @ p["wo"]
+
+
+# ------------------------------------------------------------------- stack
+def stack_init(key, cfg: ModelConfig, dtype) -> Params:
+    params: Params = {"prefix": [], "suffix": []}
+    k_pre, k_per, k_suf = jax.random.split(key, 3)
+    for i, kind in enumerate(cfg.prefix):
+        params["prefix"].append(
+            block_init(jax.random.fold_in(k_pre, i), kind, cfg, dtype)
+        )
+    if cfg.n_periods > 0:
+        period_params = []
+        for pos, kind in enumerate(cfg.period):
+            keys = jax.random.split(jax.random.fold_in(k_per, pos), cfg.n_periods)
+            period_params.append(
+                jax.vmap(lambda kk: block_init(kk, kind, cfg, dtype))(keys)
+            )
+        params["period"] = period_params
+    for i, kind in enumerate(cfg.suffix):
+        params["suffix"].append(
+            block_init(jax.random.fold_in(k_suf, i), kind, cfg, dtype)
+        )
+    return params
+
+
+def stack_apply(
+    params: Params,
+    x: Array,
+    ctx: Ctx,
+    cfg: ModelConfig,
+    ep: EPSpec | None = None,
+    caches: Params | None = None,
+    remat: str = "none",
+) -> tuple[Array, Params | None, Array]:
+    """Run the full stack. Returns (x, new_caches, aux_loss_sum)."""
+    aux = jnp.zeros((), jnp.float32)
+    want_cache = ctx.mode in ("prefill", "decode")
+    new_caches: Params = {"prefix": [], "period": None, "suffix": []}
+
+    for i, kind in enumerate(cfg.prefix):
+        c = caches["prefix"][i] if caches else None
+        x, nc, a = block_apply(params["prefix"][i], kind, x, ctx, cfg, ep, c)
+        aux += a
+        new_caches["prefix"].append(nc)
+
+    if cfg.n_periods > 0:
+
+        def body(carry, xs):
+            x, aux = carry
+            p_rows, cache_rows = xs
+            ncs = []
+            for pos, kind in enumerate(cfg.period):
+                c = cache_rows[pos] if cache_rows is not None else None
+                x, nc, a = block_apply(p_rows[pos], kind, x, ctx, cfg, ep, c)
+                aux = aux + a
+                ncs.append(nc)
+            ys = tuple(ncs) if want_cache else None
+            return (x, aux), ys
+
+        if remat == "full" and ctx.mode == "train":
+            body = jax.checkpoint(body)
+        elif remat == "dots" and ctx.mode == "train":
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            )
+
+        cache_xs = caches["period"] if caches else None
+        xs = (tuple(params["period"]), cache_xs)
+        (x, aux), period_caches = jax.lax.scan(body, (x, aux), xs)
+        new_caches["period"] = period_caches
+
+    for i, kind in enumerate(cfg.suffix):
+        c = caches["suffix"][i] if caches else None
+        x, nc, a = block_apply(params["suffix"][i], kind, x, ctx, cfg, ep, c)
+        aux += a
+        new_caches["suffix"].append(nc)
+
+    return x, (new_caches if want_cache else None), aux

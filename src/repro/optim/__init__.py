@@ -1,0 +1,9 @@
+from .adamw import (
+    AdamW,
+    AdamWState,
+    CompressionState,
+    compress_decompress,
+    compress_init,
+    cosine_schedule,
+    global_norm,
+)

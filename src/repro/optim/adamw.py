@@ -1,0 +1,119 @@
+"""AdamW in pure JAX (no optax dependency) + schedules + grad utilities.
+
+State per param: m, v in f32 (optionally bf16 for memory-tight runs).
+Supports global-norm clipping, decoupled weight decay, and an optional
+int8 gradient-compression transform with error feedback (distributed-
+optimization trick; see compression.py for the collective-level variant).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float | Any = 3e-4  # float or callable(step) -> lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+    state_dtype: Any = jnp.float32
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, self.state_dtype)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(
+            lambda m_, g: (b1 * m_ + (1 - b1) * g.astype(m_.dtype)), state.m, grads
+        )
+        v = jax.tree.map(
+            lambda v_, g: (b2 * v_ + (1 - b2) * jnp.square(g.astype(v_.dtype))),
+            state.v,
+            grads,
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + self.eps)
+            u = u + self.weight_decay * p.astype(u.dtype)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamWState(step=step, m=m, v=v)
+
+
+def global_norm(tree) -> Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+# ---------------------------------------------------- gradient compression
+class CompressionState(NamedTuple):
+    error: Any  # error-feedback accumulator (same tree as grads)
+
+
+def compress_init(params) -> CompressionState:
+    return CompressionState(
+        error=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    )
+
+
+def compress_decompress(grads, cstate: CompressionState, bits: int = 8):
+    """Quantize grads to int8 (per-tensor scale) with error feedback.
+
+    Models the wire format of compressed gradient all-reduce: the returned
+    grads are exactly what a receiver would reconstruct; the quantization
+    residual is carried to the next step (EF-SGD), which keeps convergence.
+    """
+    qmax = 2.0 ** (bits - 1) - 1
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        scale = jnp.max(jnp.abs(gf)) / qmax + 1e-12
+        q = jnp.clip(jnp.round(gf / scale), -qmax, qmax).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), gf - deq
+
+    flat = jax.tree.map(one, grads, cstate.error)
+    new_grads = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return new_grads, CompressionState(error=new_err)

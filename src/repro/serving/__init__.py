@@ -1,0 +1,3 @@
+"""Probabilistic-scheduling request router (serving plane)."""
+
+from .router import ReplicaPool, Router, simulate_serving

@@ -1,0 +1,144 @@
+"""Probabilistic-scheduling request router for model serving.
+
+Inference replicas play the role of storage nodes; request classes (e.g.
+per-model or per-SLA tier) are the paper's files with k_i = 1. JLCM tunes
+the dispatch probabilities pi (and which replicas to keep provisioned —
+the 'cost' axis) to minimize mean latency + theta * replica cost; the
+router then dispatches every batch with Theorem-1 exact marginals.
+
+Straggler mitigation beyond the paper: *hedged dispatch* — send each
+request to 1 + hedge replicas sampled without replacement and take the
+first completion. The simulator quantifies the tail-latency win (see
+benchmarks/serving_hedge.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    JLCMProblem,
+    ServiceMoments,
+    madow_sample,
+    project_capped_simplex,
+    solve,
+)
+
+
+@dataclasses.dataclass
+class ReplicaPool:
+    moments: ServiceMoments  # per-replica service moments (measured/EWMA)
+    cost: jnp.ndarray  # per-replica provisioning cost
+
+    @property
+    def m(self) -> int:
+        return int(self.cost.shape[0])
+
+
+@dataclasses.dataclass
+class Router:
+    pool: ReplicaPool
+    pi: np.ndarray  # (r, m) dispatch probabilities per request class
+    hedge: int = 0  # extra replicas per request (first-wins)
+    latency_bound: float = float("nan")
+
+    @classmethod
+    def plan(
+        cls,
+        pool: ReplicaPool,
+        class_rates: jnp.ndarray,
+        *,
+        theta: float = 0.0,
+        hedge: int = 0,
+        max_iters: int = 200,
+    ) -> "Router":
+        r = int(class_rates.shape[0])
+        prob = JLCMProblem(
+            lam=jnp.asarray(class_rates),
+            k=jnp.ones((r,)),
+            moments=pool.moments,
+            cost=pool.cost,
+            theta=theta,
+        )
+        sol = solve(prob, max_iters=max_iters)
+        return cls(
+            pool=pool,
+            pi=np.asarray(sol.pi),
+            hedge=hedge,
+            latency_bound=float(sol.latency_tight),
+        )
+
+    def route(self, key, class_id: int) -> list[int]:
+        """Replica ids for one request (1 + hedge distinct replicas)."""
+        pi = jnp.asarray(self.pi[class_id])
+        if self.hedge > 0:
+            kk = 1 + self.hedge
+            scaled = project_capped_simplex(
+                pi[None] * kk, jnp.asarray([float(kk)])
+            )[0]
+            mask = madow_sample(key, scaled)
+        else:
+            mask = madow_sample(key, pi)
+        return [int(j) for j in np.where(np.asarray(mask))[0]]
+
+    def drop_replica(self, replica: int, class_rates: jnp.ndarray, theta: float = 0.0) -> "Router":
+        """Elastic scale-down / failure: mask the replica and re-plan."""
+        mask = np.ones((self.pi.shape[0], self.pool.m), bool)
+        mask[:, replica] = False
+        prob = JLCMProblem(
+            lam=jnp.asarray(class_rates),
+            k=jnp.ones((self.pi.shape[0],)),
+            moments=self.pool.moments,
+            cost=self.pool.cost,
+            theta=theta,
+            mask=jnp.asarray(mask),
+        )
+        sol = solve(prob, max_iters=150)
+        return dataclasses.replace(
+            self, pi=np.asarray(sol.pi), latency_bound=float(sol.latency_tight)
+        )
+
+
+def simulate_serving(
+    key,
+    router: Router,
+    class_rates: jnp.ndarray,
+    moments_sampler,
+    n_requests: int = 20000,
+):
+    """Event-driven FCFS simulation with hedging (first completion wins;
+    hedged copies still occupy their queues — conservative model)."""
+    from repro.storage.simulator import generate_workload
+
+    m = router.pool.m
+    k_wl, k_route, k_srv = jax.random.split(jax.random.key(0) if key is None else key, 3)
+    arrival, class_id = generate_workload(k_wl, class_rates, n_requests)
+    service = moments_sampler(k_srv, (n_requests,))  # (N, m)
+    route_keys = jax.random.split(k_route, n_requests)
+
+    pi_all = jnp.asarray(router.pi)
+    kk = 1 + router.hedge
+
+    def pick(rk, cid):
+        pi = pi_all[cid]
+        if router.hedge > 0:
+            pi = project_capped_simplex(pi[None] * kk, jnp.asarray([float(kk)]))[0]
+        return madow_sample(rk, pi)
+
+    masks = jax.vmap(pick)(route_keys, class_id)
+
+    def step(dep, inp):
+        t, mask, srv = inp
+        start = jnp.maximum(t, dep)
+        finish = start + srv
+        new_dep = jnp.where(mask, finish, dep)
+        lat = jnp.min(jnp.where(mask, finish, jnp.inf)) - t  # first-wins
+        return new_dep, lat
+
+    _, lat = jax.lax.scan(step, jnp.zeros((m,)), (arrival, masks, service))
+    warm = n_requests // 10
+    return np.asarray(lat[warm:]), np.asarray(class_id[warm:])

@@ -1,0 +1,30 @@
+"""Erasure-coded storage substrate: GF(256) Reed-Solomon, the calibrated
+3-site cluster model, and the exact FCFS discrete-event simulator."""
+
+from .cluster import (
+    Cluster,
+    StorageNode,
+    homogeneous_cluster,
+    measured_fig6_moments,
+    tahoe_testbed,
+)
+from .gf256 import (
+    bits_to_bytes,
+    bytes_to_bits,
+    gf_const_to_bitmatrix,
+    gf_inv,
+    gf_matmul_ref,
+    gf_mul,
+    gf_mul_table,
+    gf_mul_xtime,
+)
+from .rs import (
+    cauchy_parity_matrix,
+    decode,
+    decode_bytes,
+    encode,
+    generator_matrix,
+    gf_invert_matrix,
+    pad_and_split,
+)
+from .simulator import SimResult, generate_workload, simulate, simulate_latency_cdf

@@ -1,0 +1,148 @@
+"""Storage cluster model — the paper's testbed as a calibrated substrate.
+
+The prototype (§V.A, Fig. 5) runs 12 Tahoe storage VMs across three
+OpenStack DCs (New Jersey / Texas / California) with the client in NJ.
+Chunk service time is dominated by per-request protocol overhead (Tahoe is
+chatty and single-threaded) plus transfer time, so we model node j serving
+a chunk of size B as
+
+    X_j  =  D_j + Exp(bw_j / B)        (shifted exponential)
+
+with D_j the deterministic overhead (RTT x protocol round-trips) and bw_j
+the effective client<->site bandwidth. Moments in closed form feed the
+analysis; the same distribution is sampled by the simulator.
+
+Default constants are calibrated so a (7,4)-coded 50 MB file (12.5 MB
+chunks) read from a site mix reproduces the paper's measured service
+moments (mean 13.9 s, sigma 4.3 s, E[X^2] 211.8, E[X^3] 3476.8) to within
+a few percent; exact Fig.-5 ping/bandwidth values are not recoverable from
+the paper and are marked as calibrated here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+from repro.core.queueing import ServiceMoments, shifted_exponential_moments
+
+
+@dataclasses.dataclass(frozen=True)
+class StorageNode:
+    name: str
+    site: str
+    overhead_s: float  # deterministic per-chunk service floor D_j
+    bandwidth_mbps: float  # effective MB/s for chunk transfer
+    cost_per_chunk: float  # V_j, dollars per stored chunk
+
+
+@dataclasses.dataclass(frozen=True)
+class Cluster:
+    nodes: tuple[StorageNode, ...]
+
+    @property
+    def m(self) -> int:
+        return len(self.nodes)
+
+    @property
+    def cost(self) -> Array:
+        return jnp.asarray([nd.cost_per_chunk for nd in self.nodes], jnp.float32)
+
+    def overheads(self) -> Array:
+        return jnp.asarray([nd.overhead_s for nd in self.nodes], jnp.float32)
+
+    def bandwidths(self) -> Array:
+        return jnp.asarray([nd.bandwidth_mbps for nd in self.nodes], jnp.float32)
+
+    def moments(self, chunk_mb: float) -> ServiceMoments:
+        """Per-node service moments for a given chunk size (MB)."""
+        rate = self.bandwidths() / chunk_mb  # Exp rate of the transfer part
+        return shifted_exponential_moments(self.overheads(), rate)
+
+    def sample_service(self, key: Array, chunk_mb: float, shape: tuple[int, ...]) -> Array:
+        """Sample service times, shape (..., m) — shifted exponential."""
+        rate = self.bandwidths() / chunk_mb
+        e = jax.random.exponential(key, shape + (self.m,))
+        return self.overheads() + e / rate
+
+
+    def sample_service_per_request(
+        self, key: Array, chunk_mb: Array, n: int
+    ) -> Array:
+        """Per-request service samples (n, m) where request i transfers
+        ``chunk_mb[i]`` MB (heterogeneous per-file chunk sizes, §V.B)."""
+        import jax as _jax
+
+        e = _jax.random.exponential(key, (n, self.m))
+        rate = self.bandwidths()[None, :] / jnp.asarray(chunk_mb)[:, None]
+        return self.overheads()[None, :] + e / rate
+
+    def subset(self, keep: Sequence[int]) -> "Cluster":
+        """Surviving-node cluster after failures (elastic replanning)."""
+        return Cluster(tuple(self.nodes[i] for i in keep))
+
+
+def tahoe_testbed(
+    *,
+    cost_nj: float = 1.0,
+    cost_tx: float = 0.7,
+    cost_ca: float = 0.85,
+) -> Cluster:
+    """12 nodes, 4 per site; client co-located with NJ (paper Fig. 5).
+
+    CA has higher bandwidth than TX despite larger RTT (the paper remarks
+    on exactly this inversion). Per-node jitter keeps nodes heterogeneous
+    within a site (VM colocation effects).
+    """
+    # Calibration note: these constants are chosen so the paper's §V.B
+    # workload (r=1000 files, 50-200 MB, aggregate ~0.118 req/s) is
+    # FEASIBLE but heavily loaded (rho ~ 0.5-0.9 under optimized routing),
+    # matching the regimes of Figs. 9-13. The paper's Fig.-6 moment
+    # measurement (mean 13.9 s at 12.5 MB chunks) is reproduced separately
+    # by `homogeneous_cluster()`; one static testbed cannot match both
+    # (the paper's own service times must scale sublinearly with chunk
+    # size for its Fig. 11/12 loads to be stable — see EXPERIMENTS.md).
+    sites = {
+        # site: (overhead_s, bandwidth_mbps) for the 4 nodes
+        "NJ": [(2.2, 6.5), (2.5, 6.0), (2.8, 5.5), (3.2, 5.0)],
+        "TX": [(7.5, 2.0), (8.0, 1.8), (8.5, 1.7), (9.0, 1.5)],
+        "CA": [(3.2, 4.8), (3.5, 4.5), (3.8, 4.2), (4.2, 3.8)],
+    }
+    cost = {"NJ": cost_nj, "TX": cost_tx, "CA": cost_ca}
+    nodes = []
+    for site, specs in sites.items():
+        for i, (d, bw) in enumerate(specs):
+            nodes.append(
+                StorageNode(
+                    name=f"{site.lower()}{i}",
+                    site=site,
+                    overhead_s=d,
+                    bandwidth_mbps=bw,
+                    cost_per_chunk=cost[site],
+                )
+            )
+    return Cluster(tuple(nodes))
+
+
+def homogeneous_cluster(m: int, overhead_s: float = 9.6, bandwidth_mbps: float | None = None, chunk_mb: float = 12.5, sigma_s: float = 4.3, cost: float = 1.0) -> Cluster:
+    """All-identical cluster matching the paper's measured Fig.-6 moments:
+    sigma = chunk/bw => bw = chunk/sigma; mean = overhead + sigma = 13.9."""
+    bw = bandwidth_mbps if bandwidth_mbps is not None else chunk_mb / sigma_s
+    nodes = tuple(
+        StorageNode(name=f"n{i}", site="X", overhead_s=overhead_s, bandwidth_mbps=bw, cost_per_chunk=cost)
+        for i in range(m)
+    )
+    return Cluster(nodes)
+
+
+def measured_fig6_moments() -> ServiceMoments:
+    """The paper's measured chunk service moments (single node view)."""
+    return ServiceMoments(
+        mu=jnp.asarray([1.0 / 13.9]),
+        m2=jnp.asarray([211.8]),
+        m3=jnp.asarray([3476.8]),
+    )

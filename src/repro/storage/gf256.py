@@ -1,0 +1,158 @@
+"""GF(2^8) arithmetic (AES/zfec polynomial 0x11d) in pure JAX.
+
+This is the *reference* arithmetic layer. Three multiply strategies:
+
+* :func:`gf_mul_table` — log/exp table lookups, the CPU/GPU (zfec) idiom.
+* :func:`gf_mul_xtime` — branchless 8-step carry-less multiply, the TPU VPU
+  idiom (no gathers). The Pallas kernel in ``repro.kernels`` uses this.
+* bit-matrix decomposition (:func:`gf_const_to_bitmatrix`) — each constant
+  c becomes an 8x8 GF(2) matrix so GF(256) matmuls run on the MXU as
+  integer matmuls + parity. See ``repro.kernels.ops.gf256_matmul_bitplane``.
+
+All functions operate on uint8 arrays elementwise and are jit-safe.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+POLY = 0x11D  # x^8 + x^4 + x^3 + x^2 + 1, generator g = 2 is primitive
+
+
+@functools.lru_cache(maxsize=None)
+def _tables() -> tuple[np.ndarray, np.ndarray]:
+    """(log, exp) tables for GF(256) with generator 2."""
+    exp = np.zeros(512, dtype=np.uint8)
+    log = np.zeros(256, dtype=np.int32)
+    x = 1
+    for i in range(255):
+        exp[i] = x
+        log[x] = i
+        x <<= 1
+        if x & 0x100:
+            x ^= POLY
+    exp[255:510] = exp[:255]  # doubled so (log a + log b) needs no mod
+    return log, exp
+
+
+def gf_mul_table(a: Array, b: Array) -> Array:
+    """Table-based multiply (gather-heavy; reference semantics)."""
+    log_np, exp_np = _tables()
+    log = jnp.asarray(log_np)
+    exp = jnp.asarray(exp_np)
+    a = jnp.asarray(a, jnp.uint8)
+    b = jnp.asarray(b, jnp.uint8)
+    la = log[a.astype(jnp.int32)]
+    lb = log[b.astype(jnp.int32)]
+    prod = exp[la + lb]
+    zero = (a == 0) | (b == 0)
+    return jnp.where(zero, jnp.uint8(0), prod)
+
+
+def gf_mul_xtime(a: Array, b: Array) -> Array:
+    """Branchless carry-less multiply: 8 rounds of conditional-xor + xtime.
+
+    Pure uint8/uint32 vector ops -> maps onto the TPU VPU without gathers.
+    """
+    a = jnp.asarray(a, jnp.uint8)
+    b = jnp.asarray(b, jnp.uint8)
+    shape = jnp.broadcast_shapes(a.shape, b.shape)
+    a = jnp.broadcast_to(a, shape)
+    b = jnp.broadcast_to(b, shape)
+    acc = jnp.zeros(shape, jnp.uint8)
+
+    def round_fn(i, carry):
+        acc, a, b = carry
+        take = (b & jnp.uint8(1)).astype(jnp.bool_)
+        acc = jnp.where(take, acc ^ a, acc)
+        hi = (a & jnp.uint8(0x80)).astype(jnp.bool_)
+        a = jnp.where(hi, (a << 1) ^ jnp.uint8(POLY & 0xFF), a << 1)
+        b = b >> 1
+        return acc, a, b
+
+    acc, _, _ = jax.lax.fori_loop(0, 8, round_fn, (acc, a, b))
+    return acc
+
+
+gf_mul = gf_mul_xtime  # default
+
+
+def gf_inv(a: Array) -> Array:
+    """Multiplicative inverse via tables (a^(254)); inv(0) defined as 0."""
+    log_np, exp_np = _tables()
+    log = jnp.asarray(log_np)
+    exp = jnp.asarray(exp_np)
+    a = jnp.asarray(a, jnp.uint8)
+    inv = exp[(255 - log[a.astype(jnp.int32)]) % 255]
+    return jnp.where(a == 0, jnp.uint8(0), inv)
+
+
+def gf_matmul_ref(a: Array, b: Array) -> Array:
+    """GF(256) matmul oracle: out[i,j] = XOR_k a[i,k] * b[k,j].
+
+    Loops over K with a scan to bound memory; used as the ground-truth for
+    the Pallas kernel and the bit-plane MXU path.
+    """
+    a = jnp.asarray(a, jnp.uint8)
+    b = jnp.asarray(b, jnp.uint8)
+    assert a.shape[-1] == b.shape[0], (a.shape, b.shape)
+
+    def body(carry, ab):
+        a_col, b_row = ab  # (M,), (N,)
+        contrib = gf_mul(a_col[:, None], b_row[None, :])
+        return carry ^ contrib, None
+
+    init = jnp.zeros((a.shape[0], b.shape[1]), jnp.uint8)
+    out, _ = jax.lax.scan(body, init, (a.T, b))
+    return out
+
+
+# --- bit-matrix (GF(2)) decomposition: the MXU adaptation ------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _bit_basis() -> np.ndarray:
+    """bit_basis[c] = 8x8 GF(2) matrix of 'multiply by c' in the bit basis.
+
+    Column j of the matrix is the bit-pattern of c * 2^j; then
+    bits(c*x) = M_c @ bits(x) mod 2 with bits little-endian.
+    """
+    out = np.zeros((256, 8, 8), dtype=np.uint8)
+    log, exp = _tables()
+
+    def mul(a, b):  # host-side scalar gf mul
+        if a == 0 or b == 0:
+            return 0
+        return int(exp[int(log[a]) + int(log[b])])
+
+    for c in range(256):
+        for j in range(8):
+            col = mul(c, 1 << j)
+            for i in range(8):
+                out[c, i, j] = (col >> i) & 1
+    return out
+
+
+def gf_const_to_bitmatrix(consts: Array) -> Array:
+    """Map uint8 constants (shape S) -> GF(2) bit-matrices (S + (8, 8))."""
+    basis = jnp.asarray(_bit_basis())
+    return basis[jnp.asarray(consts, jnp.int32)]
+
+
+def bytes_to_bits(x: Array) -> Array:
+    """uint8 (..., n) -> bits (..., n, 8) little-endian, values in {0,1}."""
+    x = jnp.asarray(x, jnp.uint8)
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    return ((x[..., None] >> shifts) & jnp.uint8(1)).astype(jnp.int8)
+
+
+def bits_to_bytes(bits: Array) -> Array:
+    """bits (..., n, 8) -> uint8 (..., n)."""
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    vals = (bits.astype(jnp.uint8) & jnp.uint8(1)) << shifts
+    # XOR-free: bits are {0,1} in distinct positions, so sum == or
+    return jnp.sum(vals.astype(jnp.int32), axis=-1).astype(jnp.uint8)

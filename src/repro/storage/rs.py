@@ -1,0 +1,132 @@
+"""Systematic (n, k) MDS Reed-Solomon codec over GF(2^8).
+
+Layout follows Tahoe/zfec semantics (§V.A): a file is split into k equal
+chunks (rows); encoding produces n chunks such that *any* k recover the
+file. Generator G = [I_k ; C] with C a Cauchy matrix (every square
+submatrix of a Cauchy matrix is nonsingular => MDS for n <= 256).
+
+Encode/decode hot loops are GF(256) matmuls; the default matmul backend is
+swappable so `repro.kernels` (Pallas / bit-plane MXU) can plug in.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+from .gf256 import _tables, gf_matmul_ref
+
+MatmulFn = Callable[[Array, Array], Array]
+
+
+@functools.lru_cache(maxsize=None)
+def cauchy_parity_matrix(n: int, k: int) -> np.ndarray:
+    """C[(n-k), k] with C[p, d] = 1 / (x_p ^ y_d), x = k..n-1, y = 0..k-1."""
+    if not (0 < k <= n <= 256):
+        raise ValueError(f"need 0 < k <= n <= 256, got ({n}, {k})")
+    log, exp = _tables()
+
+    def inv(a: int) -> int:
+        return int(exp[(255 - int(log[a])) % 255]) if a else 0
+
+    out = np.zeros((n - k, k), dtype=np.uint8)
+    for p in range(n - k):
+        for d in range(k):
+            out[p, d] = inv((k + p) ^ d)  # x_p = k+p, y_d = d, disjoint sets
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def generator_matrix(n: int, k: int) -> np.ndarray:
+    """Systematic generator G (n, k): chunks = G @_GF data_rows."""
+    g = np.zeros((n, k), dtype=np.uint8)
+    g[:k] = np.eye(k, dtype=np.uint8)
+    g[k:] = cauchy_parity_matrix(n, k)
+    return g
+
+
+def gf_invert_matrix(m: np.ndarray) -> np.ndarray:
+    """Gauss-Jordan inversion over GF(256) (host-side; k x k is tiny)."""
+    log, exp = _tables()
+
+    def mul(a, b):
+        if a == 0 or b == 0:
+            return 0
+        return int(exp[int(log[a]) + int(log[b])])
+
+    def inv(a):
+        if a == 0:
+            raise ZeroDivisionError("singular matrix over GF(256)")
+        return int(exp[(255 - int(log[a])) % 255])
+
+    m = np.array(m, dtype=np.uint8)
+    k = m.shape[0]
+    assert m.shape == (k, k)
+    aug = np.concatenate([m, np.eye(k, dtype=np.uint8)], axis=1)
+    for col in range(k):
+        piv = next((r for r in range(col, k) if aug[r, col]), None)
+        if piv is None:
+            raise ZeroDivisionError("singular matrix over GF(256)")
+        if piv != col:
+            aug[[col, piv]] = aug[[piv, col]]
+        pinv = inv(int(aug[col, col]))
+        aug[col] = [mul(pinv, int(v)) for v in aug[col]]
+        for r in range(k):
+            if r != col and aug[r, col]:
+                f = int(aug[r, col])
+                aug[r] ^= np.array([mul(f, int(v)) for v in aug[col]], np.uint8)
+    return aug[:, k:]
+
+
+def pad_and_split(data: bytes | np.ndarray, k: int) -> np.ndarray:
+    """bytes -> (k, chunk_len) uint8 rows, zero-padded. Also returns via
+    attribute-free contract: caller tracks original length for unpad."""
+    buf = np.frombuffer(bytes(data), dtype=np.uint8) if isinstance(data, (bytes, bytearray)) else np.asarray(data, np.uint8).ravel()
+    chunk = -(-buf.size // k)  # ceil
+    padded = np.zeros(k * chunk, dtype=np.uint8)
+    padded[: buf.size] = buf
+    return padded.reshape(k, chunk)
+
+
+def encode(
+    data_rows: Array, n: int, *, matmul: MatmulFn = gf_matmul_ref
+) -> Array:
+    """(k, B) data rows -> (n, B) coded chunks (systematic)."""
+    data_rows = jnp.asarray(data_rows, jnp.uint8)
+    k = data_rows.shape[0]
+    parity = matmul(jnp.asarray(cauchy_parity_matrix(n, k)), data_rows)
+    return jnp.concatenate([data_rows, parity], axis=0)
+
+
+def decode(
+    chunks: Array,
+    chunk_ids: Sequence[int],
+    n: int,
+    k: int,
+    *,
+    matmul: MatmulFn = gf_matmul_ref,
+) -> Array:
+    """Recover (k, B) data rows from any k coded chunks.
+
+    ``chunks`` is (k, B) holding the surviving chunks whose original row
+    indices (0..n-1) are ``chunk_ids``.
+    """
+    ids = list(chunk_ids)
+    if len(ids) != k or len(set(ids)) != k:
+        raise ValueError(f"need exactly k={k} distinct chunks, got {ids}")
+    chunks = jnp.asarray(chunks, jnp.uint8)
+    g = generator_matrix(n, k)[ids]  # (k, k)
+    if all(i < k for i in ids) and ids == sorted(ids):
+        pass  # still run the general path; systematic fast path below
+    dec = gf_invert_matrix(g)
+    return matmul(jnp.asarray(dec), chunks)
+
+
+def decode_bytes(
+    chunks: Array, chunk_ids: Sequence[int], n: int, k: int, length: int, **kw
+) -> bytes:
+    rows = np.asarray(decode(chunks, chunk_ids, n, k, **kw))
+    return rows.reshape(-1).tobytes()[:length]

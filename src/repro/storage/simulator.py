@@ -1,0 +1,119 @@
+"""Exact discrete-event simulation of probabilistic scheduling.
+
+Under probabilistic scheduling each node runs an independent FCFS queue, so
+the whole system's dynamics reduce to one `lax.scan` over the merged
+arrival stream with per-node last-departure state:
+
+    start_j  = max(t_req, dep_j)            (FCFS, work-conserving)
+    finish_j = start_j + service_j
+    dep_j   <- finish_j  where node j was selected for this batch
+    file latency = max_{j in A} finish_j - t_req
+
+This is an *exact* simulation of Def. 2 (not an approximation), fully
+vectorized over the node axis; 10^5+ requests simulate in milliseconds.
+Used to validate Lemma 2/3's analytic bound (Figs. 10-12) and to measure
+the true optimality gap of JLCM solutions.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+from repro.core.scheduling import madow_sample
+from .cluster import Cluster
+
+
+class SimResult(NamedTuple):
+    latency: Array  # (N,) per-request file latency
+    file_id: Array  # (N,) which file each request was for
+    arrival: Array  # (N,) arrival times
+    node_busy: Array  # (m,) total busy seconds per node (utilisation check)
+
+    def mean_latency(self) -> Array:
+        return jnp.mean(self.latency)
+
+    def per_file_mean(self, r: int) -> Array:
+        one_hot = jax.nn.one_hot(self.file_id, r, dtype=jnp.float32)
+        tot = one_hot.T @ self.latency
+        cnt = jnp.maximum(one_hot.sum(0), 1.0)
+        return tot / cnt
+
+
+def generate_workload(
+    key: Array, lam: Array, n_requests: int
+) -> tuple[Array, Array]:
+    """Merged Poisson stream: arrival times (N,) + file ids (N,).
+
+    Superposition of per-file Poisson(lambda_i) == Poisson(sum lambda) with
+    iid categorical file marks (probability lambda_i / sum).
+    """
+    lam = jnp.asarray(lam)
+    k_gap, k_mark = jax.random.split(key)
+    gaps = jax.random.exponential(k_gap, (n_requests,)) / jnp.sum(lam)
+    t = jnp.cumsum(gaps)
+    ids = jax.random.categorical(
+        k_mark, jnp.log(lam / jnp.sum(lam))[None, :].repeat(n_requests, 0)
+    )
+    return t, ids
+
+
+def simulate(
+    key: Array,
+    pi: Array,
+    lam: Array,
+    cluster: Cluster,
+    chunk_mb: float | Array,
+    n_requests: int = 20000,
+    *,
+    drop_warmup: float = 0.1,
+    per_file_chunk_mb: Array | None = None,
+) -> SimResult:
+    """Simulate probabilistic scheduling for dispatch matrix ``pi`` (r, m).
+
+    ``per_file_chunk_mb`` (r,) enables heterogeneous per-file chunk sizes
+    (the §V.B catalog where quarters use k = 6,7,6,4 on equal file sizes).
+    """
+    pi = jnp.asarray(pi)
+    r, m = pi.shape
+    assert m == cluster.m
+    k_wl, k_sel, k_srv = jax.random.split(key, 3)
+    arrival, file_id = generate_workload(k_wl, lam, n_requests)
+    sel_keys = jax.random.split(k_sel, n_requests)
+    if per_file_chunk_mb is not None:
+        req_chunk = jnp.asarray(per_file_chunk_mb)[file_id]
+        service = cluster.sample_service_per_request(k_srv, req_chunk, n_requests)
+    else:
+        service = cluster.sample_service(k_srv, chunk_mb, (n_requests,))  # (N, m)
+
+    def step(dep, inputs):
+        t, fid, skey, srv = inputs
+        mask = madow_sample(skey, pi[fid])  # (m,) exact-marginal k-subset
+        start = jnp.maximum(t, dep)
+        finish = start + srv
+        new_dep = jnp.where(mask, finish, dep)
+        latency = jnp.max(jnp.where(mask, finish, -jnp.inf)) - t
+        busy = jnp.where(mask, srv, 0.0)
+        return new_dep, (latency, busy)
+
+    dep0 = jnp.zeros((m,))
+    _, (latency, busy) = jax.lax.scan(
+        step, dep0, (arrival, file_id, sel_keys, service)
+    )
+    warm = int(n_requests * drop_warmup)
+    return SimResult(
+        latency=latency[warm:],
+        file_id=file_id[warm:],
+        arrival=arrival[warm:],
+        node_busy=busy.sum(0),
+    )
+
+
+def simulate_latency_cdf(result: SimResult, qs: np.ndarray | None = None):
+    """Empirical CDF knots (for Fig. 10-style outputs)."""
+    qs = np.linspace(0.01, 0.99, 99) if qs is None else qs
+    lat = np.asarray(result.latency)
+    return qs, np.quantile(lat, qs)

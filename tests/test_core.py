@@ -1,0 +1,265 @@
+"""Unit tests for the paper's core math (Lemmas 2-5, Theorem 1, Algorithm JLCM)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    JLCMProblem,
+    ServiceMoments,
+    bound_given_z,
+    check_feasible,
+    decompose_subsets,
+    exponential_moments,
+    feasible_uniform,
+    file_latency_bounds,
+    madow_sample,
+    mean_latency_bound,
+    optimal_z,
+    pk_sojourn_moments,
+    project_capped_simplex,
+    proportional_lb_pi,
+    shifted_exponential_moments,
+    smoothed_objective,
+    solve,
+    split_merge_bound,
+)
+
+
+class TestQueueing:
+    def test_pk_against_mm1_closed_form(self):
+        # For M/M/1, sojourn T ~ Exp(mu - lam): E = 1/(mu-lam), Var = E^2.
+        mu = jnp.array([2.0])
+        lam = jnp.array([1.0])
+        eq, varq = pk_sojourn_moments(lam, exponential_moments(mu))
+        np.testing.assert_allclose(eq, 1.0 / (2.0 - 1.0), rtol=1e-6)
+        np.testing.assert_allclose(varq, 1.0 / (2.0 - 1.0) ** 2, rtol=1e-6)
+
+    def test_pk_zero_load_is_service_moments(self):
+        mom = shifted_exponential_moments(jnp.array([0.5]), jnp.array([1.5]))
+        eq, varq = pk_sojourn_moments(jnp.zeros((1,)), mom)
+        np.testing.assert_allclose(eq, mom.mean, rtol=1e-6)
+        np.testing.assert_allclose(varq, mom.var, rtol=1e-5)
+
+    def test_moments_validate(self):
+        shifted_exponential_moments(jnp.array([0.1]), jnp.array([2.0])).validate()
+        with pytest.raises(ValueError):
+            ServiceMoments(
+                mu=jnp.array([1.0]), m2=jnp.array([0.5]), m3=jnp.array([1.0])
+            ).validate()
+
+    def test_paper_measured_moments_are_consistent(self):
+        # §V.B: mean 13.9s, std 4.3s, E[X^2]=211.8, E[X^3]=3476.8.
+        mean, std = 13.9, 4.3
+        np.testing.assert_allclose(mean**2 + std**2, 211.8, rtol=1e-2)
+        mom = ServiceMoments(
+            mu=jnp.array([1 / mean]), m2=jnp.array([211.8]), m3=jnp.array([3476.8])
+        )
+        mom.validate()
+
+
+class TestLatencyBound:
+    def test_bound_k1_equals_mean(self):
+        # k=1: E[max over one node] = sum_j pi_j E[Q_j]; bound must be tight-ish.
+        eq = jnp.array([[1.0, 2.0, 3.0]])
+        varq = jnp.array([[0.1, 0.2, 0.3]])
+        pi = jnp.array([[0.2, 0.3, 0.5]])
+        t = file_latency_bounds(pi, eq, varq)
+        expected = float(jnp.sum(pi * eq))
+        assert t[0] >= expected - 1e-3
+        # within a std of the mixture (bound is not exactly the mean for k=1
+        # unless Var=0, since E|Q - z| >= |EQ - z|)
+        assert t[0] <= expected + float(jnp.sqrt(jnp.max(varq)))
+
+    def test_bound_zero_variance_deterministic(self):
+        # Var=0, single node with pi=1 twice (k=2): max = the larger EQ.
+        eq = jnp.array([[2.0, 5.0]])
+        varq = jnp.zeros((1, 2))
+        pi = jnp.array([[1.0, 1.0]])
+        t = file_latency_bounds(pi, eq, varq)
+        np.testing.assert_allclose(t, [5.0], atol=1e-3)
+
+    def test_optimal_z_is_a_minimum(self):
+        key = jax.random.key(0)
+        eq = jax.random.uniform(key, (4, 6)) * 10
+        varq = jax.random.uniform(jax.random.key(1), (4, 6)) * 4
+        pi = project_capped_simplex(
+            jax.random.uniform(jax.random.key(2), (4, 6)), jnp.full((4,), 3.0)
+        )
+        z = optimal_z(pi, eq, varq)
+        best = bound_given_z(pi, eq, varq, z)
+        for dz in (-0.5, -0.05, 0.05, 0.5):
+            assert (bound_given_z(pi, eq, varq, z + dz) >= best - 1e-4).all()
+
+    def test_bound_monotone_in_load(self):
+        mom = exponential_moments(jnp.ones((5,)) * 2.0)
+        pi = jnp.full((1, 5), 2.0 / 5.0)
+        lows, highs = [], []
+        for lam in (0.5, 1.5, 3.0):
+            t = mean_latency_bound(pi, jnp.array([lam]), mom)
+            lows.append(float(t))
+        assert lows[0] < lows[1] < lows[2]
+
+
+class TestProjection:
+    def test_projection_feasible(self):
+        key = jax.random.key(0)
+        v = jax.random.normal(key, (8, 12)) * 3
+        k = jnp.arange(1, 9).astype(jnp.float32)
+        x = project_capped_simplex(v, k)
+        assert check_feasible(x, k)
+
+    def test_projection_idempotent(self):
+        v = jnp.array([[0.5, 0.5, 1.0, 0.0]])
+        x = project_capped_simplex(v, jnp.array([2.0]))
+        np.testing.assert_allclose(x, v, atol=1e-5)
+
+    def test_projection_respects_mask(self):
+        v = jnp.ones((2, 6))
+        mask = jnp.array([[1, 1, 1, 0, 0, 0], [0, 1, 1, 1, 1, 0]], bool)
+        x = project_capped_simplex(v, jnp.array([2.0, 3.0]), mask)
+        assert check_feasible(x, jnp.array([2.0, 3.0]), mask)
+        assert (np.asarray(x)[~np.asarray(mask)] == 0).all()
+
+    def test_projection_is_euclidean_opt(self):
+        # compare against scipy for a random instance
+        from scipy.optimize import minimize
+
+        rng = np.random.default_rng(0)
+        v = rng.normal(size=(7,)) * 2
+        k = 3.0
+        x = np.asarray(project_capped_simplex(jnp.asarray(v)[None], jnp.array([k])))[0]
+        res = minimize(
+            lambda y: 0.5 * np.sum((y - v) ** 2),
+            np.clip(v, 0, 1),
+            bounds=[(0, 1)] * 7,
+            constraints={"type": "eq", "fun": lambda y: y.sum() - k},
+            method="SLSQP",
+        )
+        np.testing.assert_allclose(x, res.x, atol=1e-4)
+
+
+class TestScheduling:
+    def test_madow_exact_size(self):
+        pi = jnp.array([0.3, 0.7, 0.5, 0.5, 1.0])  # sums to 3
+        masks = jax.vmap(lambda k: madow_sample(k, pi))(
+            jax.random.split(jax.random.key(0), 512)
+        )
+        assert (masks.sum(-1) == 3).all()
+
+    def test_madow_exact_marginals(self):
+        pi = jnp.array([0.15, 0.85, 0.4, 0.6, 1.0, 0.0])  # k=3
+        masks = jax.vmap(lambda k: madow_sample(k, pi))(
+            jax.random.split(jax.random.key(1), 40000)
+        )
+        emp = masks.mean(0)
+        np.testing.assert_allclose(emp, pi, atol=0.01)
+
+    def test_decompose_reconstructs(self):
+        rng = np.random.default_rng(3)
+        for _ in range(10):
+            m, k = 9, 4
+            v = rng.uniform(size=m)
+            pi = np.asarray(
+                project_capped_simplex(jnp.asarray(v)[None], jnp.array([float(k)]))
+            )[0]
+            dec = decompose_subsets(pi)
+            recon = sum(a * s for a, s in dec)
+            total = sum(a for a, _ in dec)
+            np.testing.assert_allclose(total, 1.0, atol=1e-6)
+            np.testing.assert_allclose(recon, pi, atol=1e-6)
+            for _, s in dec:
+                assert s.sum() == k
+
+
+class TestJLCM:
+    def _problem(self, theta=0.05, m=8, r=3):
+        mu = jnp.linspace(1.0, 2.0, m)
+        mom = exponential_moments(mu)
+        lam = jnp.array([0.3, 0.2, 0.25])[:r]
+        k = jnp.full((r,), 2.0)
+        cost = jnp.linspace(1.0, 2.0, m)
+        return JLCMProblem(lam=lam, k=k, moments=mom, cost=cost, theta=theta)
+
+    def test_descent_sequence(self):
+        # Theorem 2: the smoothed objective must be (weakly) decreasing.
+        sol = solve(self._problem(), max_iters=120)
+        tr = np.asarray(sol.objective_trace)
+        assert (np.diff(tr) <= 1e-3).all(), "objective increased"
+
+    def test_converges_and_feasible(self):
+        prob = self._problem()
+        sol = solve(prob, max_iters=200)
+        assert check_feasible(sol.pi, prob.k)
+        assert (sol.n >= 2).all()  # n_i >= k_i
+        assert np.isfinite(float(sol.objective))
+
+    def test_theta_tradeoff(self):
+        # Larger theta => lower (or equal) cost, higher (or equal) latency.
+        lo = solve(self._problem(theta=0.001), max_iters=200)
+        hi = solve(self._problem(theta=1.0), max_iters=200)
+        assert float(hi.cost) <= float(lo.cost) + 1e-6
+        assert float(hi.latency_tight) >= float(lo.latency_tight) - 1e-3
+
+    def test_beats_oblivious_lb(self):
+        prob = self._problem(theta=0.0)
+        sol = solve(prob, max_iters=250)
+        mask = jnp.ones((prob.r, prob.m), bool)
+        pi_lb = proportional_lb_pi(mask, prob.k, prob.moments)
+        t_opt = mean_latency_bound(sol.pi, prob.lam, prob.moments)
+        t_lb = mean_latency_bound(pi_lb, prob.lam, prob.moments)
+        assert float(t_opt) <= float(t_lb) + 1e-4
+
+    def test_nested_mode_descends(self):
+        sol = solve(self._problem(), mode="nested", max_iters=15, inner_steps=25)
+        tr = np.asarray(sol.objective_trace)
+        assert tr[-1] <= tr[0] + 1e-5
+
+
+class TestSplitMergeBaseline:
+    def test_zero_arrival_is_order_statistic_mean(self):
+        t = split_merge_bound(4, 2, 1.0, 1e-6)
+        h = 1 / 4 + 1 / 3  # H_4 - H_2
+        np.testing.assert_allclose(float(t), h, rtol=1e-3)
+
+    def test_unstable_is_inf(self):
+        assert np.isinf(float(split_merge_bound(4, 2, 1.0, 10.0)))
+
+    def test_our_bound_survives_where_split_merge_explodes(self):
+        # Fig. 7's qualitative claim, at the paper's service scale (mean
+        # 13.9s): split-merge saturates at lam*(H_n-H_{n-k})*13.9 = 1
+        # (1/lam ~ 10.6 for (7,4)) while probabilistic scheduling only needs
+        # per-node rho < 1 (1/lam ~ 7.9). In between: ours finite, theirs inf.
+        n, k = 7, 4
+        mu = 1.0 / 13.9
+        mom = exponential_moments(jnp.full((n,), mu))
+        pi = jnp.full((1, n), k / n)
+        lam = jnp.asarray(1.0 / 9.0)  # high traffic, inside the gap
+        ours = mean_latency_bound(pi, lam[None], mom)
+        theirs = split_merge_bound(n, k, mu, lam)
+        assert np.isfinite(float(ours))
+        assert np.isinf(float(theirs))
+
+    def test_bounds_close_at_low_traffic(self):
+        # Fig. 7: under low traffic the two bounds approach each other
+        # (paper reports <4% on its testbed; we allow generous slack since
+        # the order-statistic bound keeps a variance term at lam -> 0).
+        n, k = 7, 4
+        mu = 1.0 / 13.9
+        mom = exponential_moments(jnp.full((n,), mu))
+        pi = jnp.full((1, n), k / n)
+        lam = jnp.asarray(1.0 / 200.0)
+        ours = float(mean_latency_bound(pi, lam[None], mom))
+        theirs = float(split_merge_bound(n, k, mu, lam))
+        # With exponential service the order-statistic bound keeps a large
+        # variance term, so parity is within a small constant factor here;
+        # the paper's <4% figure uses its measured low-variance service
+        # distribution (see benchmarks/fig7_bound_comparison.py).
+        assert ours < 4.0 * theirs
+        assert theirs < 4.0 * ours
+        # and the ratio tightens as variance shrinks: deterministic-ish service
+        mom_lowvar = shifted_exponential_moments(
+            jnp.full((n,), 13.0), jnp.full((n,), 1.0)
+        )
+        ours_lv = float(mean_latency_bound(pi, lam[None], mom_lowvar))
+        assert ours_lv < ours

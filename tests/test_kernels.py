@@ -1,0 +1,197 @@
+"""Pallas GF(256) kernel vs pure-jnp oracle: shape sweeps, backends, RS paths."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import (  # noqa: E402
+    gf256_matmul,
+    gf256_matmul_bitplane,
+    gf256_matmul_dense_ref,
+    gf256_matmul_pallas,
+    gf256_matmul_ref,
+    rs_decode,
+    rs_encode,
+)
+
+RNG = np.random.default_rng(1234)
+
+
+def _rand(m, k, n):
+    return (
+        RNG.integers(0, 256, (m, k), dtype=np.uint8),
+        RNG.integers(0, 256, (k, n), dtype=np.uint8),
+    )
+
+
+SHAPES = [
+    (1, 1, 1),
+    (3, 4, 5),
+    (8, 8, 8),
+    (16, 100, 64),
+    (5, 7, 512),  # RS-encode-like: few parity rows, wide data
+    (128, 128, 128),  # exactly one block
+    (130, 120, 260),  # non-divisible by blocks
+    (256, 64, 300),
+]
+
+
+class TestPallasKernel:
+    @pytest.mark.parametrize("m,k,n", SHAPES)
+    def test_matches_ref_shape_sweep(self, m, k, n):
+        a, b = _rand(m, k, n)
+        want = np.asarray(gf256_matmul_ref(a, b))
+        got = np.asarray(
+            gf256_matmul_pallas(jnp.asarray(a), jnp.asarray(b), interpret=True)
+        )
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize(
+        "bm,bn,bk", [(8, 128, 8), (32, 128, 32), (128, 256, 128), (64, 512, 64)]
+    )
+    def test_block_shape_sweep(self, bm, bn, bk):
+        a, b = _rand(100, 90, 200)
+        want = np.asarray(gf256_matmul_ref(a, b))
+        got = np.asarray(
+            gf256_matmul_pallas(
+                jnp.asarray(a),
+                jnp.asarray(b),
+                block_m=bm,
+                block_n=bn,
+                block_k=bk,
+                interpret=True,
+            )
+        )
+        np.testing.assert_array_equal(got, want)
+
+    def test_identity(self):
+        eye = np.eye(32, dtype=np.uint8)
+        a, _ = _rand(32, 32, 1)
+        got = np.asarray(gf256_matmul_pallas(jnp.asarray(a), jnp.asarray(eye), interpret=True))
+        np.testing.assert_array_equal(got, a)
+
+    def test_zero_annihilates(self):
+        a, b = _rand(16, 16, 16)
+        z = np.zeros_like(b)
+        got = np.asarray(gf256_matmul_pallas(jnp.asarray(a), jnp.asarray(z), interpret=True))
+        assert (got == 0).all()
+
+
+class TestBitplaneBackend:
+    @pytest.mark.parametrize("m,k,n", SHAPES[:6])
+    def test_matches_ref(self, m, k, n):
+        a, b = _rand(m, k, n)
+        want = np.asarray(gf256_matmul_ref(a, b))
+        got = np.asarray(gf256_matmul_bitplane(a, b))
+        np.testing.assert_array_equal(got, want)
+
+    def test_oracles_agree(self):
+        a, b = _rand(20, 30, 40)
+        np.testing.assert_array_equal(
+            np.asarray(gf256_matmul_ref(a, b)),
+            np.asarray(gf256_matmul_dense_ref(a, b)),
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        m=st.integers(1, 24),
+        k=st.integers(1, 24),
+        n=st.integers(1, 48),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_backends_agree(self, m, k, n, seed):
+        r = np.random.default_rng(seed)
+        a = r.integers(0, 256, (m, k), dtype=np.uint8)
+        b = r.integers(0, 256, (k, n), dtype=np.uint8)
+        want = np.asarray(gf256_matmul_ref(a, b))
+        np.testing.assert_array_equal(np.asarray(gf256_matmul_bitplane(a, b)), want)
+
+
+class TestDispatchAndRS:
+    def test_dispatch_backends(self):
+        a, b = _rand(12, 10, 33)
+        want = np.asarray(gf256_matmul(a, b, backend="ref"))
+        for backend in ("bitplane", "pallas"):
+            np.testing.assert_array_equal(
+                np.asarray(gf256_matmul(a, b, backend=backend)), want
+            )
+        with pytest.raises(ValueError):
+            gf256_matmul(a, b, backend="cuda")
+
+    @pytest.mark.parametrize("backend", ["ref", "bitplane", "pallas"])
+    def test_rs_encode_decode_via_kernel(self, backend):
+        data = RNG.integers(0, 256, (6, 257), dtype=np.uint8)
+        coded = np.asarray(rs_encode(jnp.asarray(data), 10, backend=backend))
+        ids = [9, 0, 4, 7, 2, 5]
+        rec = np.asarray(
+            rs_decode(jnp.asarray(coded[ids]), ids, 10, 6, backend=backend)
+        )
+        np.testing.assert_array_equal(rec, data)
+
+
+class TestFlashAttention:
+    """Pallas flash attention vs the naive oracle (interpret mode)."""
+
+    def _rand_qkv(self, b, t, h, kh, hd, seed=0):
+        import jax
+
+        key = jax.random.key(seed)
+        q = jax.random.normal(key, (b, t, h, hd), jnp.float32)
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, t, kh, hd), jnp.float32)
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, t, kh, hd), jnp.float32)
+        return q, k, v
+
+    @pytest.mark.parametrize(
+        "t,h,kh,hd,blk", [(32, 2, 2, 8, 8), (64, 4, 2, 16, 16), (48, 8, 4, 32, 16), (50, 4, 1, 16, 16)]
+    )
+    def test_causal_shape_sweep(self, t, h, kh, hd, blk):
+        import jax.numpy as jnp
+        from repro.kernels.flash_attention import flash_attention_pallas
+        from repro.models.layers import _sdpa
+
+        q, k, v = self._rand_qkv(2, t, h, kh, hd, seed=t)
+        i = jnp.arange(t)[:, None]
+        j = jnp.arange(t)[None, :]
+        mask = jnp.broadcast_to((j <= i)[None], (2, t, t))
+        want = _sdpa(q, k, v, mask, 1.0 / hd**0.5)
+        got = flash_attention_pallas(
+            q, k, v, scale=1.0 / hd**0.5, causal=True, q_blk=blk, k_blk=blk,
+            interpret=True,
+        )
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+    @pytest.mark.parametrize("window", [8, 24])
+    def test_sliding_window(self, window):
+        import jax.numpy as jnp
+        from repro.kernels.flash_attention import flash_attention_pallas
+        from repro.models.layers import _sdpa
+
+        q, k, v = self._rand_qkv(1, 64, 4, 2, 16, seed=window)
+        i = jnp.arange(64)[:, None]
+        j = jnp.arange(64)[None, :]
+        mask = jnp.broadcast_to(((j <= i) & (j > i - window))[None], (1, 64, 64))
+        want = _sdpa(q, k, v, mask, 0.25)
+        got = flash_attention_pallas(
+            q, k, v, scale=0.25, causal=True, window=window, q_blk=16, k_blk=16,
+            interpret=True,
+        )
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+    def test_bf16(self):
+        import jax.numpy as jnp
+        from repro.kernels.flash_attention import flash_attention_pallas
+        from repro.models.layers import _sdpa
+
+        q, k, v = self._rand_qkv(1, 32, 2, 2, 16, seed=5)
+        q, k, v = (x.astype(jnp.bfloat16) for x in (q, k, v))
+        i = jnp.arange(32)[:, None]
+        j = jnp.arange(32)[None, :]
+        mask = jnp.broadcast_to((j <= i)[None], (1, 32, 32))
+        want = _sdpa(q, k, v, mask, 0.25)
+        got = flash_attention_pallas(
+            q, k, v, scale=0.25, causal=True, q_blk=16, k_blk=16, interpret=True
+        )
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), atol=3e-2
+        )

@@ -1,0 +1,251 @@
+"""Per-architecture smoke tests (reduced configs) + decode-consistency.
+
+The decode-consistency test is the strongest correctness check in the
+model plane: teacher-forced logits from a single full forward must match
+prefill + step-by-step decode through the caches (KV, rolling-window,
+MLA-absorbed, RG-LRU state, RWKV state) to fp tolerance.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS, get_config, get_smoke_config
+from repro.models import SHAPES, Model
+
+B, S = 2, 24
+
+
+def _batch(cfg, key=None, s=S):
+    key = key or jax.random.key(7)
+    batch = {
+        "tokens": jax.random.randint(key, (B, s), 0, cfg.vocab),
+    }
+    if cfg.family == "audio":
+        batch["enc_embeds"] = (
+            jax.random.normal(jax.random.fold_in(key, 1), (B, cfg.encoder_seq, cfg.d_model)) * 0.1
+        )
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = (
+            jax.random.normal(jax.random.fold_in(key, 2), (B, 4, cfg.d_model)) * 0.1
+        )
+        batch["positions"] = jnp.broadcast_to(jnp.arange(s)[None, None, :], (3, B, s))
+    return batch
+
+
+@pytest.fixture(scope="module")
+def models():
+    out = {}
+    for arch in ARCHS:
+        cfg = get_smoke_config(arch)
+        model = Model(cfg)
+        params = model.init(jax.random.key(hash(arch) % 2**31))
+        out[arch] = (model, params)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(models, arch):
+    model, params = models[arch]
+    cfg = model.cfg
+    batch = _batch(cfg)
+    logits, aux = model.forward_logits(params, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), "non-finite logits"
+    assert bool(jnp.isfinite(aux)), "non-finite aux loss"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step_reduces_loss_no_nans(models, arch):
+    model, params = models[arch]
+    batch = _batch(model.cfg)
+    loss0, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert bool(jnp.isfinite(loss0))
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat), "NaN/inf grads"
+    improved = False
+    for lr in (0.5, 0.1, 0.02):
+        params2 = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+        loss1 = model.loss(params2, batch)
+        if float(loss1) < float(loss0):
+            improved = True
+            break
+    assert improved, "no SGD step size reduced the loss"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_teacher_forcing(models, arch):
+    model, params = models[arch]
+    cfg = model.cfg
+    batch = _batch(cfg)
+    full_logits, _ = model.forward_logits(params, batch)
+
+    t0 = S // 2
+    pre_batch = {k: (v[:, :t0] if k == "tokens" else v) for k, v in batch.items()}
+    if "positions" in batch:
+        pre_batch["positions"] = batch["positions"][:, :, :t0]
+    logits, caches = model.prefill(params, pre_batch, cache_len=S)
+    np.testing.assert_allclose(
+        np.asarray(logits),
+        np.asarray(full_logits[:, t0 - 1]),
+        rtol=2e-2,
+        atol=2e-3,
+    )
+    for t in range(t0, S):
+        step = {
+            "token": batch["tokens"][:, t],
+            "pos": jnp.full((B,), t, jnp.int32),
+        }
+        logits, caches = model.decode_step(params, caches, step)
+        np.testing.assert_allclose(
+            np.asarray(logits),
+            np.asarray(full_logits[:, t]),
+            rtol=2e-2,
+            atol=2e-3,
+            err_msg=f"{arch} decode step {t} diverged from teacher forcing",
+        )
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_empty_caches_decode_runs(models, arch):
+    model, params = models[arch]
+    caches = model.empty_caches(B, cache_len=32)
+    step = {
+        "token": jnp.zeros((B,), jnp.int32),
+        "pos": jnp.zeros((B,), jnp.int32),
+    }
+    logits, new_caches = model.decode_step(params, caches, step)
+    assert logits.shape == (B, model.cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    assert jax.tree.structure(caches) == jax.tree.structure(new_caches)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assigned_spec(arch):
+    cfg = get_config(arch)
+    spec = {
+        "smollm-135m": (30, 576, 9, 3, 1536, 49152),
+        "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+        "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+        "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 18432, 129280),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+        "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab)
+    # deepseek's assigned d_ff=2048 is the EXPERT width; dense width is 18432
+    if arch == "deepseek-v3-671b":
+        assert cfg.moe.d_ff_expert == 2048
+    if arch == "qwen3-moe-30b-a3b":
+        assert cfg.moe is not None and cfg.moe.n_experts == 128 and cfg.moe.top_k == 8
+    if arch == "deepseek-v3-671b":
+        assert cfg.moe.n_experts == 256 and cfg.moe.top_k == 8 and cfg.moe.n_shared == 1
+    assert got == spec
+    assert len(cfg.layer_kinds) == cfg.n_layers
+
+
+def test_moe_routes_to_topk_experts():
+    from repro.models.moe import _route
+    from repro.models.config import MoEConfig
+
+    mc = MoEConfig(n_experts=8, top_k=2, d_ff_expert=16)
+    x = jax.random.normal(jax.random.key(0), (32, 16))
+    router = jax.random.normal(jax.random.key(1), (16, 8))
+    w, e, aux = _route(x, router, mc)
+    assert w.shape == (32, 2) and e.shape == (32, 2)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+    assert (np.asarray(e) < 8).all()
+    assert float(aux) > 0
+
+
+def test_moe_dense_equivalence():
+    """Grouped ragged_dot MoE == explicit per-expert dense computation."""
+    from repro.models.moe import moe_apply, moe_init, _route
+    from repro.models.layers import mlp_apply
+
+    cfg = get_smoke_config("qwen3-moe-30b-a3b")
+    p = moe_init(jax.random.key(3), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(4), (2, 8, cfg.d_model)) * 0.3
+    y, aux = moe_apply(p, x, cfg)
+
+    x2d = x.reshape(-1, cfg.d_model)
+    w, e, _ = _route(x2d, p["router"], cfg.moe)
+    want = np.zeros_like(x2d)
+    for t in range(x2d.shape[0]):
+        for j in range(cfg.moe.top_k):
+            ei = int(e[t, j])
+            h = jax.nn.silu(x2d[t] @ p["w_gate"][ei]) * (x2d[t] @ p["w_up"][ei])
+            want[t] += float(w[t, j]) * np.asarray(h @ p["w_down"][ei])
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, cfg.d_model)), want, atol=1e-4)
+
+
+def test_rope_positions_shift_equivariance():
+    """Causal LM with RoPE: shifting all positions leaves logits at the
+    corresponding offsets identical (relative encoding sanity)."""
+    cfg = get_smoke_config("smollm-135m")
+    model = Model(cfg)
+    params = model.init(jax.random.key(5))
+    toks = jax.random.randint(jax.random.key(6), (1, 12), 0, cfg.vocab)
+    base, _ = model.forward_logits(params, {"tokens": toks})
+    shifted, _ = model.forward_logits(
+        params, {"tokens": toks, "positions": jnp.arange(12)[None] + 17}
+    )
+    np.testing.assert_allclose(np.asarray(base), np.asarray(shifted), atol=2e-4)
+
+
+def test_local_vs_global_attention_differs():
+    cfg = get_smoke_config("gemma3-27b")
+    model = Model(cfg)
+    params = model.init(jax.random.key(8))
+    toks = jax.random.randint(jax.random.key(9), (1, 20), 0, cfg.vocab)
+    a, _ = model.forward_logits(params, {"tokens": toks})
+    cfg2 = cfg.scaled(window=3)
+    b_, _ = Model(cfg2).forward_logits(params, {"tokens": toks})
+    assert not np.allclose(np.asarray(a), np.asarray(b_))
+
+
+def test_shapes_table():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert SHAPES["train_4k"].kind == "train"
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+@pytest.mark.slow
+def test_moe_ep_paths_match_local_oracle():
+    """Both shard_map EP execution paths (training ZeRO-gather + decode
+    resident-weight token-gather) must equal the single-shard oracle."""
+    import subprocess, sys, os, textwrap
+
+    prog = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        from repro.configs.registry import get_smoke_config
+        from repro.models import EPSpec
+        from repro.models.moe import moe_apply, moe_init
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        cfg = get_smoke_config("deepseek-v3-671b")
+        p = moe_init(jax.random.key(0), cfg, jnp.float32)
+        ep = EPSpec(mesh=mesh, ep_axis="model", fsdp_axes=("data",), dp_axes=("data",))
+        with jax.set_mesh(mesh):
+            for shape in ((8, 1), (8, 300)):  # tiny (resident) + big (ZeRO)
+                x = jax.random.normal(jax.random.key(1), shape + (cfg.d_model,)) * 0.3
+                y_ref, _ = moe_apply(p, x, cfg)
+                y_ep, _ = jax.jit(lambda p, x: moe_apply(p, x, cfg, ep))(p, x)
+                err = float(jnp.abs(y_ep - y_ref).max())
+                assert err < 1e-5, (shape, err)
+        print("MOE_EP_OK")
+        """
+    )
+    env = dict(os.environ); env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=600,
+                         cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert "MOE_EP_OK" in out.stdout, out.stderr[-2000:]

@@ -1,0 +1,107 @@
+"""§Perf optimization correctness: every perf knob must be a pure
+re-implementation — identical numerics to the baseline paths."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS, get_smoke_config
+from repro.models import Model
+from repro.models.attention_opt import chunked_sdpa, chunked_softmax_xent
+from repro.models.layers import _sdpa
+
+
+class TestChunkedSDPA:
+    @pytest.mark.parametrize("tq,blk", [(32, 8), (33, 8), (64, 16), (17, 32)])
+    def test_causal_matches_naive(self, tq, blk):
+        key = jax.random.key(tq)
+        b, h, kh, hd = 2, 4, 2, 16
+        q = jax.random.normal(key, (b, tq, h, hd))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, tq, kh, hd))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, tq, kh, hd))
+        i = jnp.arange(tq)[:, None]
+        j = jnp.arange(tq)[None, :]
+        mask = jnp.broadcast_to((j <= i)[None], (b, tq, tq))
+        want = _sdpa(q, k, v, mask, 0.25)
+        got = chunked_sdpa(q, k, v, 0.25, causal=True, q_blk=blk, k_blk=blk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+    @pytest.mark.parametrize("window", [4, 7, 16])
+    def test_windowed_matches_naive(self, window):
+        key = jax.random.key(99)
+        b, tq, h, kh, hd = 1, 40, 2, 2, 8
+        q = jax.random.normal(key, (b, tq, h, hd))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, tq, kh, hd))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, tq, kh, hd))
+        i = jnp.arange(tq)[:, None]
+        j = jnp.arange(tq)[None, :]
+        mask = jnp.broadcast_to(((j <= i) & (j > i - window))[None], (b, tq, tq))
+        want = _sdpa(q, k, v, mask, 0.3)
+        got = chunked_sdpa(
+            q, k, v, 0.3, causal=True, window=window, q_blk=8, k_blk=8
+        )
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+    def test_grad_matches(self):
+        key = jax.random.key(3)
+        b, tq, h, hd = 1, 24, 2, 8
+        q = jax.random.normal(key, (b, tq, h, hd))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, tq, h, hd))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, tq, h, hd))
+        i = jnp.arange(tq)[:, None]
+        j = jnp.arange(tq)[None, :]
+        mask = jnp.broadcast_to((j <= i)[None], (b, tq, tq))
+        g1 = jax.grad(lambda q: _sdpa(q, k, v, mask, 0.35).sum())(q)
+        g2 = jax.grad(
+            lambda q: chunked_sdpa(q, k, v, 0.35, q_blk=8, k_blk=8).sum()
+        )(q)
+        np.testing.assert_allclose(np.asarray(g2), np.asarray(g1), atol=1e-4)
+
+
+class TestChunkedXent:
+    @pytest.mark.parametrize("vocab,chunk", [(50, 16), (64, 64), (100, 33)])
+    def test_matches_dense_ce(self, vocab, chunk):
+        key = jax.random.key(5)
+        b, s, d = 2, 6, 16
+        h = jax.random.normal(key, (b, s, d))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (d, vocab))
+        labels = jax.random.randint(jax.random.fold_in(key, 2), (b, s), 0, vocab)
+        logits = (h @ w).astype(jnp.float32)
+        want = jax.nn.logsumexp(logits, -1) - jnp.take_along_axis(
+            logits, labels[..., None], -1
+        )[..., 0]
+        got = chunked_softmax_xent(h, w, labels, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+OPT = dict(attn_impl="chunked", attn_q_blk=8, attn_k_blk=8,
+           cache_update="dus", vocab_chunk=64)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_optimized_model_matches_baseline(arch):
+    """Full-model equivalence: baseline vs all perf knobs enabled."""
+    cfg = get_smoke_config(arch)
+    base = Model(cfg)
+    fast = dataclasses.replace(base, **OPT)
+    params = base.init(jax.random.key(11))
+    B, S = 2, 16
+    batch = {"tokens": jax.random.randint(jax.random.key(12), (B, S), 0, cfg.vocab)}
+    if cfg.family == "audio":
+        batch["enc_embeds"] = jax.random.normal(jax.random.key(13), (B, cfg.encoder_seq, cfg.d_model)) * 0.1
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(jax.random.key(14), (B, 4, cfg.d_model)) * 0.1
+        batch["positions"] = jnp.broadcast_to(jnp.arange(S)[None, None, :], (3, B, S))
+    l0 = float(base.loss(params, batch))
+    l1 = float(fast.loss(params, batch))
+    np.testing.assert_allclose(l1, l0, rtol=2e-4)
+
+    # decode step equivalence through the dus cache write
+    caches_b = base.empty_caches(B, cache_len=8)
+    caches_f = fast.empty_caches(B, cache_len=8)
+    step = {"token": batch["tokens"][:, 0], "pos": jnp.zeros((B,), jnp.int32)}
+    lg_b, _ = base.decode_step(params, caches_b, step)
+    lg_f, _ = fast.decode_step(params, caches_f, step)
+    np.testing.assert_allclose(np.asarray(lg_f), np.asarray(lg_b), atol=2e-4, rtol=2e-3)

@@ -1,0 +1,118 @@
+"""Hypothesis property tests on the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    bound_given_z,
+    exponential_moments,
+    file_latency_bounds,
+    madow_sample,
+    optimal_z,
+    pk_sojourn_moments,
+    project_capped_simplex,
+    shifted_exponential_moments,
+)
+
+floats = st.floats(min_value=-5.0, max_value=5.0, allow_nan=False)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    v=st.lists(floats, min_size=2, max_size=16),
+    k_frac=st.floats(0.01, 0.99),
+)
+def test_projection_feasibility_property(v, k_frac):
+    """Projection output is always in the capped simplex, for any input."""
+    m = len(v)
+    k = max(1.0, round(k_frac * m))
+    x = np.asarray(
+        project_capped_simplex(jnp.asarray(v)[None], jnp.asarray([k]))
+    )[0]
+    assert (x >= -1e-5).all() and (x <= 1 + 1e-5).all()
+    np.testing.assert_allclose(x.sum(), k, atol=1e-3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    v=st.lists(st.floats(0.0, 1.0), min_size=3, max_size=12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_madow_always_selects_exactly_k(v, seed):
+    v = np.asarray(v)
+    if v.sum() < 0.5:
+        v = v + 0.5
+    k = max(1, int(round(v.sum() * 0.6)))
+    pi = np.asarray(
+        project_capped_simplex(jnp.asarray(v)[None], jnp.asarray([float(k)]))
+    )[0]
+    mask = np.asarray(madow_sample(jax.random.key(seed), jnp.asarray(pi)))
+    assert mask.sum() == k
+    # never selects a zero-probability node
+    assert not (mask & (pi <= 1e-9)).any()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    mu=st.floats(0.5, 5.0),
+    lam_frac=st.floats(0.05, 0.9),
+    shift=st.floats(0.0, 3.0),
+)
+def test_pk_monotone_in_load(mu, lam_frac, shift):
+    """E[Q] and Var[Q] are nondecreasing in the arrival rate."""
+    mom = shifted_exponential_moments(jnp.asarray([shift]), jnp.asarray([mu]))
+    cap = float(1.0 / mom.mean[0])
+    lam_lo = jnp.asarray([lam_frac * cap * 0.5])
+    lam_hi = jnp.asarray([lam_frac * cap])
+    eq_lo, var_lo = pk_sojourn_moments(lam_lo, mom)
+    eq_hi, var_hi = pk_sojourn_moments(lam_hi, mom)
+    assert float(eq_hi[0]) >= float(eq_lo[0]) - 1e-6
+    assert float(var_hi[0]) >= float(var_lo[0]) - 1e-5
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(2, 8),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+    z=st.floats(-10, 10),
+)
+def test_bound_optimal_z_no_worse_than_any_z(m, k, seed, z):
+    """min_z is truly a minimum: any other z gives a looser bound."""
+    if k > m:
+        k = m
+    key = jax.random.key(seed)
+    eq = jax.random.uniform(key, (1, m)) * 10 + 0.1
+    varq = jax.random.uniform(jax.random.fold_in(key, 1), (1, m)) * 5
+    pi = project_capped_simplex(
+        jax.random.uniform(jax.random.fold_in(key, 2), (1, m)),
+        jnp.asarray([float(k)]),
+    )
+    t_star = file_latency_bounds(pi, eq, varq)
+    t_z = bound_given_z(pi, eq, varq, jnp.asarray([z]))
+    assert float(t_star[0]) <= float(t_z[0]) + 1e-3
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bound_decreasing_in_redundancy(n, seed):
+    """Spreading the same k over MORE nodes (lower per-node load) never
+    hurts the latency bound at fixed service rates."""
+    k = 2
+    if n < 3:
+        n = 3
+    mu = jnp.ones((12,)) * 1.5
+    mom = exponential_moments(mu)
+    lam = jnp.asarray([0.4])
+    pi_narrow = jnp.zeros((1, 12)).at[0, :n].set(k / n)
+    pi_wide = jnp.full((1, 12), k / 12.0)
+    from repro.core import mean_latency_bound
+
+    t_narrow = float(mean_latency_bound(pi_narrow, lam, mom))
+    t_wide = float(mean_latency_bound(pi_wide, lam, mom))
+    assert t_wide <= t_narrow + 1e-4

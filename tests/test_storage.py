@@ -1,0 +1,227 @@
+"""Storage substrate tests: GF(256), Reed-Solomon MDS, cluster, simulator."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import mean_latency_bound, pk_sojourn_moments
+from repro.storage import (
+    bits_to_bytes,
+    bytes_to_bits,
+    cauchy_parity_matrix,
+    decode,
+    decode_bytes,
+    encode,
+    generate_workload,
+    generator_matrix,
+    gf_const_to_bitmatrix,
+    gf_inv,
+    gf_invert_matrix,
+    gf_matmul_ref,
+    gf_mul_table,
+    gf_mul_xtime,
+    homogeneous_cluster,
+    measured_fig6_moments,
+    pad_and_split,
+    simulate,
+    tahoe_testbed,
+)
+
+
+class TestGF256:
+    def test_mul_strategies_agree(self):
+        a = np.arange(256, dtype=np.uint8).repeat(256)
+        b = np.tile(np.arange(256, dtype=np.uint8), 256)
+        t = np.asarray(gf_mul_table(a, b))
+        x = np.asarray(gf_mul_xtime(a, b))
+        np.testing.assert_array_equal(t, x)  # full 256x256 multiplication table
+
+    def test_field_axioms_sampled(self):
+        rng = np.random.default_rng(0)
+        a, b, c = (rng.integers(0, 256, 500, dtype=np.uint8) for _ in range(3))
+        m = lambda x, y: np.asarray(gf_mul_xtime(x, y))
+        np.testing.assert_array_equal(m(a, b), m(b, a))
+        np.testing.assert_array_equal(m(a, m(b, c)), m(m(a, b), c))
+        np.testing.assert_array_equal(
+            m(a, b ^ c), m(a, b) ^ m(a, c)
+        )  # distributive over XOR
+        np.testing.assert_array_equal(m(a, np.uint8(1)), a)
+
+    def test_inverse(self):
+        a = np.arange(1, 256, dtype=np.uint8)
+        inv = np.asarray(gf_inv(a))
+        np.testing.assert_array_equal(np.asarray(gf_mul_xtime(a, inv)), np.ones_like(a))
+
+    def test_bitmatrix_mul_matches(self):
+        # bits(c * x) == M_c @ bits(x) mod 2
+        rng = np.random.default_rng(1)
+        c = rng.integers(0, 256, 64, dtype=np.uint8)
+        x = rng.integers(0, 256, 64, dtype=np.uint8)
+        mc = np.asarray(gf_const_to_bitmatrix(c))  # (64, 8, 8)
+        xb = np.asarray(bytes_to_bits(x))  # (64, 8)
+        prod_bits = (np.einsum("nij,nj->ni", mc.astype(np.int32), xb) % 2).astype(
+            np.int8
+        )
+        got = np.asarray(bits_to_bytes(jnp.asarray(prod_bits)))
+        want = np.asarray(gf_mul_xtime(c, x))
+        np.testing.assert_array_equal(got, want)
+
+    def test_bits_roundtrip(self):
+        x = np.arange(256, dtype=np.uint8)
+        np.testing.assert_array_equal(
+            np.asarray(bits_to_bytes(bytes_to_bits(x))), x
+        )
+
+
+class TestReedSolomon:
+    @pytest.mark.parametrize("n,k", [(3, 2), (7, 4), (10, 6), (12, 4), (14, 10)])
+    def test_all_k_subsets_decode(self, n, k):
+        rng = np.random.default_rng(n * 31 + k)
+        data = rng.integers(0, 256, size=(k, 64), dtype=np.uint8)
+        coded = np.asarray(encode(jnp.asarray(data), n))
+        np.testing.assert_array_equal(coded[:k], data)  # systematic
+        subsets = list(itertools.combinations(range(n), k))
+        rng.shuffle(subsets)
+        for ids in subsets[:12]:
+            rec = decode(jnp.asarray(coded[list(ids)]), list(ids), n, k)
+            np.testing.assert_array_equal(np.asarray(rec), data)
+
+    def test_mds_property_every_square_submatrix_invertible(self):
+        # Cauchy construction: any k rows of G invertible (spot check n=10,k=4)
+        n, k = 10, 4
+        g = generator_matrix(n, k)
+        rng = np.random.default_rng(7)
+        subsets = list(itertools.combinations(range(n), k))
+        for ids in rng.choice(len(subsets), 40, replace=False):
+            gf_invert_matrix(g[list(subsets[ids])])  # raises if singular
+
+    def test_pad_split_decode_bytes(self):
+        payload = b"the quick brown fox jumps over the lazy dog" * 7
+        rows = pad_and_split(payload, 4)
+        coded = encode(jnp.asarray(rows), 9)
+        ids = [8, 2, 6, 1]
+        got = decode_bytes(jnp.asarray(np.asarray(coded)[ids]), ids, 9, 4, len(payload))
+        assert got == payload
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        k=st.integers(1, 6),
+        extra=st.integers(1, 4),
+        nbytes=st.integers(1, 200),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_roundtrip_property(self, k, extra, nbytes, seed):
+        """Property: any k of n chunks recover any payload exactly."""
+        n = k + extra
+        rng = np.random.default_rng(seed)
+        payload = rng.integers(0, 256, nbytes, dtype=np.uint8).tobytes()
+        rows = pad_and_split(payload, k)
+        coded = np.asarray(encode(jnp.asarray(rows), n))
+        ids = list(rng.choice(n, size=k, replace=False))
+        got = decode_bytes(jnp.asarray(coded[ids]), ids, n, k, nbytes)
+        assert got == payload
+
+    def test_erasure_beyond_tolerance_not_silently_ok(self):
+        with pytest.raises(ValueError):
+            decode(jnp.zeros((3, 8), jnp.uint8), [0, 1, 1], 7, 3)
+
+
+class TestCluster:
+    def test_testbed_shape(self):
+        cl = tahoe_testbed()
+        assert cl.m == 12
+        assert {n.site for n in cl.nodes} == {"NJ", "TX", "CA"}
+
+    def test_moment_calibration_close_to_paper(self):
+        # (7,4) on 50MB => 12.5MB chunks; paper: mean 13.9s, E[X^2] 211.8
+        cl = tahoe_testbed()
+        mom = cl.moments(12.5)
+        mix_mean = float(jnp.mean(mom.mean))
+        assert 0.5 * 13.9 < mix_mean < 1.6 * 13.9
+        mom.validate()
+
+    def test_homogeneous_matches_measured_mean(self):
+        mom = homogeneous_cluster(7).moments(12.5)
+        np.testing.assert_allclose(np.asarray(mom.mean), 13.9, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(mom.m2), 211.8, rtol=0.2)
+
+    def test_sample_matches_moments(self):
+        cl = tahoe_testbed()
+        mom = cl.moments(12.5)
+        s = cl.sample_service(jax.random.key(0), 12.5, (20000,))
+        np.testing.assert_allclose(s.mean(0), mom.mean, rtol=0.05)
+        np.testing.assert_allclose(
+            (s**2).mean(0), mom.m2, rtol=0.12
+        )
+
+    def test_measured_moments_valid(self):
+        measured_fig6_moments().validate()
+
+    def test_subset(self):
+        cl = tahoe_testbed()
+        sub = cl.subset([0, 3, 5, 11])
+        assert sub.m == 4
+
+
+class TestSimulator:
+    def test_workload_rate(self):
+        lam = jnp.asarray([0.2, 0.3])
+        t, ids = generate_workload(jax.random.key(0), lam, 20000)
+        emp_rate = 20000 / float(t[-1])
+        assert abs(emp_rate - 0.5) / 0.5 < 0.05
+        frac = float((ids == 1).mean())
+        assert abs(frac - 0.6) < 0.02
+
+    def test_simulated_latency_below_bound(self):
+        """The central claim (Lemma 2): analytic bound >= true mean latency."""
+        cl = homogeneous_cluster(7)
+        mom = cl.moments(12.5)
+        pi = jnp.full((1, 7), 4 / 7)
+        for invlam in (60.0, 30.0, 20.0):
+            lam = jnp.asarray([1.0 / invlam])
+            res = simulate(jax.random.key(1), pi, lam, cl, 12.5, 30000)
+            bound = float(mean_latency_bound(pi, lam, mom))
+            sim = float(res.mean_latency())
+            assert sim <= bound * 1.02, (invlam, sim, bound)
+
+    def test_sim_matches_mg1_single_node(self):
+        """k=1, one file, one eligible node => node is a plain M/G/1; the
+        simulated mean sojourn must match Pollaczek-Khinchin closely."""
+        cl = homogeneous_cluster(3)
+        mom = cl.moments(12.5)
+        pi = jnp.asarray([[1.0, 0.0, 0.0]])
+        lam = jnp.asarray([1.0 / 40.0])
+        res = simulate(jax.random.key(2), pi, lam, cl, 12.5, 60000)
+        eq, _ = pk_sojourn_moments(jnp.asarray([lam[0], 0, 0]), mom)
+        np.testing.assert_allclose(float(res.mean_latency()), float(eq[0]), rtol=0.05)
+
+    def test_heterogeneous_multifile(self):
+        cl = tahoe_testbed()
+        mom = cl.moments(12.5)
+        r, m = 3, cl.m
+        rng = np.random.default_rng(0)
+        from repro.core import project_capped_simplex
+
+        pi = project_capped_simplex(
+            jnp.asarray(rng.uniform(size=(r, m))), jnp.asarray([4.0, 6.0, 2.0])
+        )
+        lam = jnp.asarray([1 / 120.0, 1 / 150.0, 1 / 100.0])
+        res = simulate(jax.random.key(3), pi, lam, cl, 12.5, 20000)
+        bound = float(mean_latency_bound(pi, lam, mom))
+        assert float(res.mean_latency()) <= bound * 1.02
+        per_file = res.per_file_mean(r)
+        assert np.isfinite(np.asarray(per_file)).all()
+
+    def test_utilisation_matches_theory(self):
+        cl = homogeneous_cluster(5)
+        pi = jnp.full((1, 5), 3 / 5)
+        lam = jnp.asarray([1 / 30.0])
+        res = simulate(jax.random.key(4), pi, lam, cl, 12.5, 40000)
+        horizon = float(res.arrival[-1])
+        rho_emp = np.asarray(res.node_busy) / horizon
+        rho_theory = float(lam[0] * 3 / 5 * 13.9)
+        np.testing.assert_allclose(rho_emp, rho_theory, rtol=0.08)
