@@ -1,6 +1,11 @@
 """Fig. 8: Algorithm JLCM convergence, r = 1000 files on the 12-node
 testbed — the paper reports convergence within 250 iterations (tol 0.01);
-we reproduce with the same problem size."""
+we reproduce with the same problem size.
+
+The solver's merged mode is fully device-resident (one `lax.while_loop`
+program per solve), so `wall_s` here is dominated by actual math, not
+Python-loop host syncs. Pass a smaller ``r``/``max_iters`` for a CI smoke
+run (the paper-claim assertions only apply at the full r=1000 setting)."""
 import time
 
 import jax.numpy as jnp
@@ -10,19 +15,20 @@ from repro.core import JLCMProblem, solve
 from benchmarks.common import emit, paper_catalog, testbed
 
 
-def run():
+def run(r: int = 1000, max_iters: int = 300):
     cl = testbed()
-    lam, ks, chunk_mb = paper_catalog(r=1000)
+    lam, ks, chunk_mb = paper_catalog(r=r)
     eff_chunk = float(np.average(chunk_mb, weights=np.asarray(lam)))
     prob = JLCMProblem(lam=lam, k=ks, moments=cl.moments(eff_chunk),
                        cost=cl.cost, theta=2.0)
+    solve(prob, max_iters=max_iters, eps=0.01)  # warmup: compile once
     t0 = time.perf_counter()
-    sol = solve(prob, max_iters=300, eps=0.01)
+    sol = solve(prob, max_iters=max_iters, eps=0.01)
     wall = time.perf_counter() - t0
     tr = np.asarray(sol.objective_trace)
     norm = tr / tr[-1]
     iters = len(tr) - 1
-    rows = [dict(r=1000, m=cl.m, iterations=iters, wall_s=round(wall, 2),
+    rows = [dict(r=r, m=cl.m, iterations=iters, wall_s=round(wall, 3),
                  initial_norm_obj=round(float(norm[0]), 4),
                  final_obj=round(float(tr[-1]), 3),
                  monotone=bool((np.diff(tr) <= 1e-2).all()),
@@ -32,6 +38,7 @@ def run():
                          initial_norm_obj=round(float(norm[i]), 4),
                          final_obj="", monotone="", within_paper_250=""))
     emit(rows, "fig8_convergence")
-    assert rows[0]["within_paper_250"], f"took {iters} > 250 iterations"
     assert rows[0]["monotone"], "objective not descending"
+    if r >= 1000 and max_iters >= 300:
+        assert rows[0]["within_paper_250"], f"took {iters} > 250 iterations"
     return rows

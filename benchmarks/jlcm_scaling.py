@@ -1,12 +1,30 @@
 """JLCM solver scaling: wall time and iterations vs catalog size r
-(the paper demonstrates r=1000; we sweep to 4000)."""
+(the paper demonstrates r=1000; we sweep to 4000).
+
+Two comparisons on top of the raw scaling sweep:
+  * ``speedup_vs_debug`` — the device-resident `lax.while_loop` path vs the
+    seed's Python-loop implementation (kept as ``mode="debug"``), which
+    pays per-iteration host syncs on every backtracking probe;
+  * a final ``batch`` section — an 8-point theta sweep solved by
+    `solve_batch` in ONE vmapped device call vs 8 sequential `solve` calls.
+"""
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import JLCMProblem, solve
+from repro.core import JLCMProblem, solve, solve_batch
 from benchmarks.common import emit, paper_catalog, testbed
+
+DEBUG_TIMING_MAX_R = 1000  # Python-loop baseline gets slow past this
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(out.pi)
+    return out, time.perf_counter() - t0
 
 
 def run():
@@ -17,12 +35,43 @@ def run():
         eff = float(np.average(chunk_mb, weights=np.asarray(lam)))
         prob = JLCMProblem(lam=lam, k=ks, moments=cl.moments(eff),
                            cost=cl.cost, theta=2.0)
-        t0 = time.perf_counter()
-        sol = solve(prob, max_iters=300, eps=0.01)
-        wall = time.perf_counter() - t0
-        rows.append(dict(r=r, iterations=len(sol.objective_trace) - 1,
-                         wall_s=round(wall, 2),
-                         us_per_file_iter=round(wall / r / max(len(sol.objective_trace) - 1, 1) * 1e6, 2),
+        solve(prob, max_iters=300, eps=0.01)  # warmup: compile once
+        sol, wall = _timed(lambda: solve(prob, max_iters=300, eps=0.01))
+        iters = len(sol.objective_trace) - 1
+        if r <= DEBUG_TIMING_MAX_R:
+            _, wall_dbg = _timed(
+                lambda: solve(prob, max_iters=300, eps=0.01, mode="debug"))
+            speedup = round(wall_dbg / max(wall, 1e-9), 1)
+        else:
+            wall_dbg, speedup = "", ""
+        rows.append(dict(r=r, iterations=iters,
+                         wall_s=round(wall, 3),
+                         wall_debug_s=round(wall_dbg, 2) if wall_dbg != "" else "",
+                         speedup_vs_debug=speedup,
+                         us_per_file_iter=round(wall / r / max(iters, 1) * 1e6, 2),
                          objective=round(float(sol.objective), 2)))
+
+    # theta-sweep batching: 8 instances as one vmapped XLA program
+    lam, ks, chunk_mb = paper_catalog(r=200)
+    eff = float(np.average(chunk_mb, weights=np.asarray(lam)))
+    mom = cl.moments(eff)
+    thetas = (0.5, 1.0, 2.0, 10.0, 50.0, 100.0, 150.0, 200.0)
+    probs = [JLCMProblem(lam=lam, k=ks, moments=mom, cost=cl.cost, theta=t)
+             for t in thetas]
+    solve_batch(probs, max_iters=300, eps=0.01)  # warmup
+    bat, wall_batch = _timed(lambda: solve_batch(probs, max_iters=300, eps=0.01))
+    t0 = time.perf_counter()
+    seq = [solve(p, max_iters=300, eps=0.01) for p in probs]
+    wall_seq = time.perf_counter() - t0
+    err = max(abs(float(bat.objective[i]) - float(s.objective))
+              / max(1.0, abs(float(s.objective)))
+              for i, s in enumerate(seq))
     emit(rows, "jlcm_scaling")
-    return rows
+    batch_rows = [dict(r=200, batch=len(thetas),
+                       wall_batch_s=round(wall_batch, 3),
+                       wall_sequential_s=round(wall_seq, 3),
+                       speedup=round(wall_seq / max(wall_batch, 1e-9), 1),
+                       max_rel_obj_err=round(err, 6))]
+    emit(batch_rows, "jlcm_batch_sweep")
+    assert err < 1e-4, f"batch vs sequential objective mismatch: {err}"
+    return rows + batch_rows

@@ -10,6 +10,8 @@ from .jlcm import (
     random_placement_mask,
     smoothed_objective,
     solve,
+    solve_batch,
+    stack_problems,
 )
 from .latency_bound import (
     bound_given_z,

@@ -17,16 +17,28 @@ outer loop, with the inner convex subproblem solved by projected gradient
 descent (paper Fig. 4 routine). Gradients come from JAX autodiff instead of
 hand-derived formulas; the projection is `project_capped_simplex`.
 
-Two modes:
-  * ``nested``  — faithful Algorithm JLCM structure (outer linearization,
-    inner PGD to convergence, then the z-minimization step);
+Three modes:
   * ``merged``  — all updates on one time-scale (single loop), which is
     what the paper itself uses for the r=1000 experiment (§V.B, Fig. 8).
+    The whole outer loop (linearize -> PGD step -> z-refresh -> two-level
+    backtracking -> adaptive lr re-growth -> relative stopping rule) runs
+    inside one ``jax.lax.while_loop``: one ``solve`` is a single compiled
+    XLA call with no per-iteration host transfers.
+  * ``debug``   — the same merged-timescale algorithm as a Python loop with
+    host-side control flow, for step-by-step trace inspection. Numerically
+    equivalent to ``merged``; orders of magnitude slower.
+  * ``nested``  — faithful Algorithm JLCM structure (outer linearization,
+    inner PGD to convergence, then the z-minimization step).
+
+Batching: :func:`solve_batch` vmaps the device-resident loop over a stacked
+leading axis of problems (shared (r, m) shape; ``lam``/``theta``/``cost``/
+``moments``/``k``/``mask`` may all vary), so a whole theta- or lambda-sweep
+is one jitted call.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +59,7 @@ from .queueing import (
 )
 
 SUPPORT_TOL = 1e-3  # pi below this counts as "not placed" when reading S_i
+BACKTRACK_SLACK = 1e-9  # accept a step iff obj <= prev + this
 
 
 class JLCMProblem(NamedTuple):
@@ -54,16 +67,16 @@ class JLCMProblem(NamedTuple):
     k: Array  # (r,) MDS k_i per file
     moments: ServiceMoments  # per-node service moments, arrays of (m,)
     cost: Array  # (m,) per-chunk storage price V_j
-    theta: float  # tradeoff factor (sec/dollar)
+    theta: float | Array  # tradeoff factor (sec/dollar)
     mask: Array | None = None  # (r, m) optional allowed-placement support
 
     @property
     def r(self) -> int:
-        return self.lam.shape[0]
+        return self.lam.shape[-1]
 
     @property
     def m(self) -> int:
-        return self.cost.shape[0]
+        return self.cost.shape[-1]
 
 
 class JLCMSolution(NamedTuple):
@@ -79,19 +92,20 @@ class JLCMSolution(NamedTuple):
 
 
 def _true_cost(pi: Array, cost: Array, tol: float = SUPPORT_TOL) -> Array:
-    return jnp.sum((pi > tol) * cost[None, :])
+    return jnp.sum((pi > tol) * cost[..., None, :], axis=(-2, -1))
 
 
 def _smoothed_cost(pi: Array, cost: Array, beta: float) -> Array:
     """Eq. (20): sum_ij V_j log(beta pi + 1) / log(beta)."""
-    return jnp.sum(cost[None, :] * jnp.log(beta * pi + 1.0) / jnp.log(beta))
+    body = cost[..., None, :] * jnp.log(beta * pi + 1.0) / jnp.log(beta)
+    return jnp.sum(body, axis=(-2, -1))
 
 
 def _linearized_cost(pi: Array, pi_ref: Array, cost: Array, beta: float) -> Array:
     """Eq. (17): value at ref + gradient of the log surrogate at ref."""
-    base = jnp.sum((pi_ref > 0.0) * cost[None, :])
-    slope = cost[None, :] / ((pi_ref + 1.0 / beta) * jnp.log(beta))
-    return base + jnp.sum(slope * (pi - pi_ref))
+    base = jnp.sum((pi_ref > 0.0) * cost[..., None, :], axis=(-2, -1))
+    slope = cost[..., None, :] / ((pi_ref + 1.0 / beta) * jnp.log(beta))
+    return base + jnp.sum(slope * (pi - pi_ref), axis=(-2, -1))
 
 
 def _latency_term(pi: Array, z: Array, prob: JLCMProblem) -> Array:
@@ -105,6 +119,171 @@ def smoothed_objective(pi: Array, z: Array, prob: JLCMProblem, beta: float) -> A
     return _latency_term(pi, z, prob) + prob.theta * _smoothed_cost(
         pi, prob.cost, beta
     )
+
+
+def _merged_grad(pi: Array, z: Array, prob: JLCMProblem, beta) -> Array:
+    """Gradient of Eq. (19) linearized at the current point (merged mode)."""
+
+    def sub_obj(p):
+        return _latency_term(p, z, prob) + prob.theta * _linearized_cost(
+            p, jax.lax.stop_gradient(p), prob.cost, beta
+        )
+
+    return jax.grad(sub_obj)(pi)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident merged-mode loop (one XLA program per solve).
+# ---------------------------------------------------------------------------
+
+
+class _LoopState(NamedTuple):
+    pi: Array  # (r, m) current iterate
+    z: Array  # current shared auxiliary variable
+    prev: Array  # smoothed objective at (pi, z)
+    lr: Array  # calibrated base learning rate (adaptive)
+    t: Array  # iterations completed, int32
+    done: Array  # bool: converged or lr collapsed
+    trace: Array  # (max_iters + 1,) objective per iteration, NaN-padded
+
+
+def _device_merged_loop(
+    pi: Array,
+    prob: JLCMProblem,
+    mask: Array,
+    beta: Array,
+    lr: Array,
+    eps: Array,
+    max_iters: int,
+) -> tuple[Array, Array, Array, Array]:
+    """Merged-timescale JLCM entirely on device.
+
+    Per iteration: linearize the cost surrogate at the current pi, take one
+    projected-gradient step, refresh z, and run a two-level backtracking
+    line search (lr, lr/4, lr/16 via nested ``lax.cond``) with adaptive lr
+    re-growth on acceptance / halving on persistent failure. Stops on the
+    paper's relative tolerance or when lr collapses, with `max_iters` as
+    the trip-count bound of the ``lax.while_loop``.
+
+    Returns (pi, z, trace, iters); trace is NaN beyond entry `iters`.
+    """
+    pi = project_capped_simplex(pi, prob.k, mask)
+    z = optimal_shared_z(pi, prob.lam, prob.moments)
+    prev = smoothed_objective(pi, z, prob, beta)
+
+    g0 = jnp.max(jnp.abs(_merged_grad(pi, z, prob, beta)))
+    lr0 = lr / jnp.maximum(g0, 1e-9)  # first step moves ~lr in pi
+    lr_cap = lr0 * 16.0
+
+    trace = jnp.full((max_iters + 1,), jnp.nan, dtype=prev.dtype).at[0].set(prev)
+    state = _LoopState(
+        pi=pi,
+        z=z,
+        prev=prev,
+        lr=lr0,
+        t=jnp.asarray(0, jnp.int32),
+        done=jnp.asarray(False),
+        trace=trace,
+    )
+
+    def cond(s: _LoopState) -> Array:
+        return jnp.logical_and(s.t < max_iters, jnp.logical_not(s.done))
+
+    def body(s: _LoopState) -> _LoopState:
+        g = _merged_grad(s.pi, s.z, prob, beta)
+
+        def attempt(step_lr):
+            p = project_capped_simplex(s.pi - step_lr * g, prob.k, mask)
+            zz = optimal_shared_z(p, prob.lam, prob.moments)
+            return p, zz, smoothed_objective(p, zz, prob, beta)
+
+        def backtrack(_):
+            second = attempt(s.lr / 4.0)
+            return jax.lax.cond(
+                second[2] > s.prev + BACKTRACK_SLACK,
+                lambda _: attempt(s.lr / 16.0),
+                lambda _: second,
+                None,
+            )
+
+        first = attempt(s.lr)
+        cand = jax.lax.cond(
+            first[2] > s.prev + BACKTRACK_SLACK, backtrack, lambda _: first, None
+        )
+
+        accepted = cand[2] <= s.prev + BACKTRACK_SLACK
+        pi_n = jnp.where(accepted, cand[0], s.pi)
+        z_n = jnp.where(accepted, cand[1], s.z)
+        obj = jnp.where(accepted, cand[2], s.prev)  # stalled step keeps prev
+        lr_n = jnp.where(accepted, jnp.minimum(s.lr * 1.1, lr_cap), s.lr * 0.5)
+        collapsed = jnp.logical_and(~accepted, lr_n <= lr_cap * 1e-6)
+        # relative stopping rule (paper: tolerance on normalized objective);
+        # a rejected step only stops once lr has collapsed — otherwise it
+        # shrinks lr and retries (obj == prev would trip the eps test).
+        converged = jnp.logical_and(
+            accepted,
+            jnp.abs(s.prev - obj) < eps * jnp.maximum(1.0, jnp.abs(obj)),
+        )
+        return _LoopState(
+            pi=pi_n,
+            z=z_n,
+            prev=obj,
+            lr=lr_n,
+            t=s.t + 1,
+            done=jnp.logical_or(collapsed, converged),
+            trace=s.trace.at[s.t + 1].set(obj),
+        )
+
+    out = jax.lax.while_loop(cond, body, state)
+    return out.pi, out.z, out.trace, out.t
+
+
+def _finalize(pi: Array, z: Array, prob: JLCMProblem, trace: Array) -> JLCMSolution:
+    """Read the solution (Lemma 4 support extraction + reporting bounds)."""
+    placement = pi > SUPPORT_TOL
+    n = jnp.sum(placement, axis=-1)
+    rates = node_arrival_rates(pi, prob.lam)
+    eq, varq = pk_sojourn_moments(rates, prob.moments)
+    t = file_latency_bounds(pi, eq[..., None, :], varq[..., None, :])
+    tight = jnp.sum(prob.lam * t, axis=-1) / jnp.sum(prob.lam, axis=-1)
+    latency = shared_z_latency(pi, z, prob.lam, prob.moments)
+    cost = _true_cost(pi, prob.cost)
+    return JLCMSolution(
+        pi=pi,
+        z=z,
+        objective=latency + prob.theta * cost,
+        latency=latency,
+        latency_tight=tight,
+        cost=cost,
+        n=n,
+        placement=placement,
+        objective_trace=trace,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters",))
+def _solve_merged_device(pi0, prob, mask, beta, lr, eps, max_iters):
+    pi, z, trace, iters = _device_merged_loop(
+        pi0, prob, mask, beta, lr, eps, max_iters
+    )
+    return _finalize(pi, z, prob, trace), iters
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters",))
+def _solve_merged_device_batch(pi0, prob, mask, beta, lr, eps, max_iters):
+    def one(p0, pr, mk):
+        pi, z, trace, iters = _device_merged_loop(
+            p0, pr, mk, beta, lr, eps, max_iters
+        )
+        return _finalize(pi, z, pr, trace), iters
+
+    return jax.vmap(one)(pi0, prob, mask)
+
+
+# ---------------------------------------------------------------------------
+# Host-loop paths: `debug` (merged algorithm, Python control flow) and
+# `nested` (faithful two-timescale Algorithm JLCM).
+# ---------------------------------------------------------------------------
 
 
 @functools.partial(jax.jit, static_argnames=("beta", "inner_steps", "lr"))
@@ -143,17 +322,83 @@ def _merged_step(
     """One merged-timescale update: linearize at current pi, one PGD step
     (inf-norm-normalized gradient -> scale-free step size), then refresh z
     (the paper's single-loop speedup for large r)."""
-
-    def sub_obj(p):
-        return _latency_term(p, z, prob) + prob.theta * _linearized_cost(
-            p, jax.lax.stop_gradient(p), prob.cost, beta
-        )
-
-    g = jax.grad(sub_obj)(pi)
+    g = _merged_grad(pi, z, prob, beta)
     pi = project_capped_simplex(pi - lr * g, prob.k, mask)
     z = optimal_shared_z(pi, prob.lam, prob.moments)
     obj = smoothed_objective(pi, z, prob, beta)
     return pi, z, obj, jnp.max(jnp.abs(g))
+
+
+def _solve_host_loop(
+    prob: JLCMProblem,
+    pi: Array,
+    mask: Array,
+    *,
+    beta: float,
+    mode: str,
+    max_iters: int,
+    inner_steps: int,
+    lr: float,
+    eps: float,
+    verbose: bool,
+) -> JLCMSolution:
+    z = optimal_shared_z(pi, prob.lam, prob.moments)
+    trace = []
+    prev = smoothed_objective(pi, z, prob, beta)
+    trace.append(float(prev))
+    lr0 = None  # calibrated on the first step from the gradient scale
+    lr_cap = None
+    for t in range(max_iters):
+        if mode == "debug":
+            if lr0 is None:
+                _, _, _, g0 = _merged_step(
+                    pi, z, prob, mask, jnp.asarray(0.0, jnp.float32), beta=beta
+                )
+                lr0 = lr / max(float(g0), 1e-9)  # first step moves ~lr in pi
+                lr_cap = lr0 * 16
+            cand = _merged_step(
+                pi, z, prob, mask, jnp.asarray(lr0, jnp.float32), beta=beta
+            )
+            if float(cand[2]) > float(prev) + BACKTRACK_SLACK:  # backtrack
+                cand = _merged_step(
+                    pi, z, prob, mask, jnp.asarray(lr0 / 4, jnp.float32), beta=beta
+                )
+            if float(cand[2]) > float(prev) + BACKTRACK_SLACK:
+                cand = _merged_step(
+                    pi, z, prob, mask, jnp.asarray(lr0 / 16, jnp.float32), beta=beta
+                )
+            if float(cand[2]) > float(prev) + BACKTRACK_SLACK:  # persistent
+                lr0 *= 0.5
+                obj = prev
+                if lr0 > lr_cap * 1e-6:
+                    trace.append(float(obj))
+                    prev = obj
+                    continue  # stalled step: shrink and retry, don't stop
+            else:
+                pi, z, obj, _ = cand
+                lr0 = min(lr0 * 1.1, lr_cap)  # adaptive re-growth
+        else:  # nested
+            pi = _inner_pgd(
+                pi, z, pi, prob, mask, beta=beta, inner_steps=inner_steps, lr=lr
+            )
+            z = optimal_shared_z(pi, prob.lam, prob.moments)
+            obj = smoothed_objective(pi, z, prob, beta)
+        trace.append(float(obj))
+        if verbose and t % 20 == 0:
+            print(f"[jlcm] iter {t:4d} objective {float(obj):.6f}")
+        # relative stopping rule (paper: tolerance on normalized objective)
+        if abs(float(prev) - float(obj)) < eps * max(1.0, abs(float(obj))):
+            prev = obj
+            break
+        prev = obj
+
+    return _finalize(pi, z, prob, jnp.asarray(trace))
+
+
+def _resolve_mask(prob: JLCMProblem) -> Array:
+    if prob.mask is None:
+        return jnp.ones(prob.lam.shape + prob.cost.shape[-1:], bool)
+    return jnp.asarray(prob.mask, bool)
 
 
 def solve(
@@ -168,85 +413,115 @@ def solve(
     pi0: Array | None = None,
     verbose: bool = False,
 ) -> JLCMSolution:
-    """Run Algorithm JLCM. Returns the solution plus convergence trace."""
-    mask = (
-        jnp.ones((prob.r, prob.m), bool)
-        if prob.mask is None
-        else jnp.asarray(prob.mask, bool)
-    )
+    """Run Algorithm JLCM. Returns the solution plus convergence trace.
+
+    ``mode="merged"`` (default) runs the whole outer loop on device as one
+    compiled call; ``mode="debug"`` is the same algorithm with host-side
+    control flow (use it to inspect iterates; ``verbose`` only prints
+    there); ``mode="nested"`` is the paper's two-timescale structure.
+    """
+    mask = _resolve_mask(prob)
     pi = feasible_uniform(mask, prob.k) if pi0 is None else jnp.asarray(pi0)
     pi = project_capped_simplex(pi, prob.k, mask)
-    z = optimal_shared_z(pi, prob.lam, prob.moments)
 
-    trace = []
-    prev = smoothed_objective(pi, z, prob, beta)
-    trace.append(float(prev))
-    lr0 = None  # calibrated on the first step from the gradient scale
-    lr_cap = None
-    for t in range(max_iters):
-        if mode == "merged":
-            if lr0 is None:
-                _, _, _, g0 = _merged_step(
-                    pi, z, prob, mask, jnp.asarray(0.0, jnp.float32), beta=beta
-                )
-                lr0 = lr / max(float(g0), 1e-9)  # first step moves ~lr in pi
-                lr_cap = lr0 * 16
-            cand = _merged_step(
-                pi, z, prob, mask, jnp.asarray(lr0, jnp.float32), beta=beta
-            )
-            if float(cand[2]) > float(prev) + 1e-9:  # backtrack (two levels)
-                cand = _merged_step(
-                    pi, z, prob, mask, jnp.asarray(lr0 / 4, jnp.float32), beta=beta
-                )
-            if float(cand[2]) > float(prev) + 1e-9:
-                cand = _merged_step(
-                    pi, z, prob, mask, jnp.asarray(lr0 / 16, jnp.float32), beta=beta
-                )
-            if float(cand[2]) > float(prev) + 1e-9:  # persistent shrink
-                lr0 *= 0.5
-                obj = prev
-                if lr0 > lr_cap * 1e-6:
-                    trace.append(float(obj))
-                    prev = obj
-                    continue  # stalled step: shrink and retry, don't stop
-            else:
-                pi, z, obj, _ = cand
-                lr0 = min(lr0 * 1.1, lr_cap)  # adaptive re-growth
-        elif mode == "nested":
-            pi = _inner_pgd(
-                pi, z, pi, prob, mask, beta=beta, inner_steps=inner_steps, lr=lr
-            )
-            z = optimal_shared_z(pi, prob.lam, prob.moments)
-            obj = smoothed_objective(pi, z, prob, beta)
-        else:
-            raise ValueError(f"unknown mode {mode!r}")
-        trace.append(float(obj))
-        if verbose and t % 20 == 0:
-            print(f"[jlcm] iter {t:4d} objective {float(obj):.6f}")
-        # relative stopping rule (paper: tolerance on normalized objective)
-        if abs(float(prev) - float(obj)) < eps * max(1.0, abs(float(obj))):
-            prev = obj
-            break
-        prev = obj
+    if mode == "merged":
+        sol, iters = _solve_merged_device(
+            pi,
+            prob._replace(mask=None),
+            mask,
+            jnp.asarray(beta, jnp.float32),
+            jnp.asarray(lr, jnp.float32),
+            jnp.asarray(eps, jnp.float32),
+            max_iters,
+        )
+        # single host sync at the end: trim the NaN-padded trace
+        return sol._replace(objective_trace=sol.objective_trace[: int(iters) + 1])
+    if mode in ("debug", "nested"):
+        return _solve_host_loop(
+            prob,
+            pi,
+            mask,
+            beta=beta,
+            mode=mode,
+            max_iters=max_iters,
+            inner_steps=inner_steps,
+            lr=lr,
+            eps=eps,
+            verbose=verbose,
+        )
+    raise ValueError(f"unknown mode {mode!r}")
 
-    placement = pi > SUPPORT_TOL
-    n = jnp.sum(placement, axis=-1)
-    rates = node_arrival_rates(pi, prob.lam)
-    eq, varq = pk_sojourn_moments(rates, prob.moments)
-    tight = jnp.sum(prob.lam * file_latency_bounds(pi, eq, varq)) / jnp.sum(prob.lam)
-    latency = shared_z_latency(pi, z, prob.lam, prob.moments)
-    cost = _true_cost(pi, prob.cost)
-    return JLCMSolution(
-        pi=pi,
-        z=z,
-        objective=latency + prob.theta * cost,
-        latency=latency,
-        latency_tight=tight,
-        cost=cost,
-        n=n,
-        placement=placement,
-        objective_trace=jnp.asarray(trace),
+
+# ---------------------------------------------------------------------------
+# Batched solving: a stacked axis of problems in one compiled call.
+# ---------------------------------------------------------------------------
+
+
+def stack_problems(probs: Sequence[JLCMProblem]) -> JLCMProblem:
+    """Stack problems with a shared (r, m) shape along a new leading axis.
+
+    ``lam``/``k``/``theta``/``cost``/``moments`` may vary per problem; a
+    ``mask`` of ones is substituted where a problem has ``mask=None`` (all
+    placements allowed).
+    """
+    probs = list(probs)
+    if not probs:
+        raise ValueError("stack_problems needs at least one problem")
+    r, m = probs[0].r, probs[0].m
+    for p in probs:
+        if (p.r, p.m) != (r, m):
+            raise ValueError(
+                f"all problems must share (r, m): got {(p.r, p.m)} vs {(r, m)}"
+            )
+    normalized = [
+        p._replace(
+            theta=jnp.asarray(p.theta, jnp.float32),
+            mask=_resolve_mask(p),
+        )
+        for p in probs
+    ]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *normalized)
+
+
+def solve_batch(
+    probs: Sequence[JLCMProblem] | JLCMProblem,
+    *,
+    beta: float = 1e3,
+    max_iters: int = 300,
+    lr: float = 0.1,
+    eps: float = 1e-5,
+    pi0: Array | None = None,
+) -> JLCMSolution:
+    """Solve a batch of JLCM instances in ONE jitted, vmapped device call.
+
+    ``probs`` is either a sequence of :class:`JLCMProblem` sharing (r, m)
+    (stacked here via :func:`stack_problems`) or an already-stacked problem
+    whose leaves carry a leading batch axis. Returns a :class:`JLCMSolution`
+    whose every field has the leading batch axis; ``objective_trace`` is
+    (B, max_iters + 1) and NaN-padded past each instance's convergence
+    point (per-instance iteration counts differ — use ``~isnan`` to trim).
+
+    This is the hot path for theta-/lambda-sweeps (Figs. 8/13) and for
+    what-if re-optimization (e.g. one re-plan per hypothetical node
+    failure): hundreds of solver instances become one XLA program.
+    """
+    stacked = probs if isinstance(probs, JLCMProblem) else stack_problems(probs)
+    if stacked.mask is None:
+        raise ValueError("stacked problems must carry an explicit mask")
+    mask = jnp.asarray(stacked.mask, bool)
+    if pi0 is None:
+        pi0 = feasible_uniform(mask, stacked.k)
+    pi0 = jnp.broadcast_to(jnp.asarray(pi0), mask.shape)
+    sol, _iters = _solve_merged_device_batch(
+        pi0,
+        stacked._replace(mask=None),
+        mask,
+        jnp.asarray(beta, jnp.float32),
+        jnp.asarray(lr, jnp.float32),
+        jnp.asarray(eps, jnp.float32),
+        max_iters,
     )
+    return sol
 
 
 # ---------------------------------------------------------------------------

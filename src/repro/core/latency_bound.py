@@ -70,12 +70,15 @@ def file_latency_bounds(pi: Array, eq: Array, varq: Array) -> Array:
 def mean_latency_bound(
     pi: Array, lam: Array, moments: ServiceMoments
 ) -> Array:
-    """Request-weighted mean latency bound sum_i (lam_i/lam_hat) T_i."""
+    """Request-weighted mean latency bound sum_i (lam_i/lam_hat) T_i.
+
+    Batch-safe: pi may be (..., r, m) with lam (..., r); returns (...,).
+    """
     lam = jnp.asarray(lam)
     node_rates = node_arrival_rates(pi, lam)
     eq, varq = pk_sojourn_moments(node_rates, moments)
-    t = file_latency_bounds(pi, eq, varq)
-    return jnp.sum(lam * t) / jnp.sum(lam)
+    t = file_latency_bounds(pi, eq[..., None, :], varq[..., None, :])
+    return jnp.sum(lam * t, axis=-1) / jnp.sum(lam, axis=-1)
 
 
 def shared_z_latency(
@@ -86,24 +89,29 @@ def shared_z_latency(
       z + sum_j Lambda_j/(2 lam_hat) [ X_j + sqrt(X_j^2 + Y_j) ]
 
     with X_j = E[Q_j] - z, Y_j = Var[Q_j]. Follows from folding
-    sum_i (lam_i/lam_hat) pi_ij = Lambda_j / lam_hat.
+    sum_i (lam_i/lam_hat) pi_ij = Lambda_j / lam_hat. Batch-safe:
+    pi (..., r, m), z (...,), lam (..., r) -> (...,).
     """
     lam = jnp.asarray(lam)
-    lam_hat = jnp.sum(lam)
+    z = jnp.asarray(z)
+    lam_hat = jnp.sum(lam, axis=-1)
     node_rates = node_arrival_rates(pi, lam)
     eq, varq = pk_sojourn_moments(node_rates, moments)
-    x = eq - z
-    return z + jnp.sum(node_rates / (2.0 * lam_hat) * (x + jnp.sqrt(x**2 + varq)))
+    x = eq - z[..., None]
+    body = node_rates / (2.0 * lam_hat[..., None]) * (x + jnp.sqrt(x**2 + varq))
+    return z + jnp.sum(body, axis=-1)
 
 
 def optimal_shared_z(
     pi: Array, lam: Array, moments: ServiceMoments, *, iters: int = 80
 ) -> Array:
-    """Minimize Eq. (9) over the single auxiliary z (convex; bisection)."""
+    """Minimize Eq. (9) over the single auxiliary z (convex; bisection).
+
+    Batch-safe: pi (..., r, m), lam (..., r) -> z of shape (...,).
+    """
     lam = jnp.asarray(lam)
-    lam_hat = jnp.sum(lam)
+    lam_hat = jnp.sum(lam, axis=-1)
     node_rates = node_arrival_rates(pi, lam)
     eq, varq = pk_sojourn_moments(node_rates, moments)
-    w = node_rates / lam_hat  # plays the role of pi in the generic bound
-    z = optimal_z(w[None, :], eq, varq)
-    return z[0]
+    w = node_rates / lam_hat[..., None]  # plays the role of pi in the bound
+    return optimal_z(w, eq, varq, iters=iters)

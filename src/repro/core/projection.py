@@ -24,11 +24,13 @@ def project_capped_simplex(
     *,
     iters: int = 60,
 ) -> Array:
-    """Project rows of ``v`` (r, m) onto {x in [0,1]^m, sum x = k_row}.
+    """Project rows of ``v`` (..., r, m) onto {x in [0,1]^m, sum x = k_row}.
 
-    ``mask`` (r, m) restricts support: masked-out entries are pinned to 0
-    (chunk placement constraint pi_ij = 0 for j not in S_i). ``k`` may be a
-    scalar or (r,) array; requires k <= #allowed per row for feasibility.
+    ``mask`` (..., r, m) restricts support: masked-out entries are pinned to
+    0 (chunk placement constraint pi_ij = 0 for j not in S_i). ``k`` may be
+    a scalar or (..., r) array; requires k <= #allowed per row. Batch-safe:
+    all reductions are over the last axis only, so stacked problem batches
+    (and `vmap`) work unchanged — `solve_batch` relies on this.
     """
     v = jnp.asarray(v)
     k = jnp.broadcast_to(jnp.asarray(k, v.dtype), v.shape[:-1])

@@ -112,13 +112,15 @@ def stability_penalty(
 
     Zero when every queue satisfies rho_j <= rho_max (Corollary 1 region),
     quadratic outside. Added to optimization objectives so the projected
-    gradient never stalls on a clipped/flat P-K denominator.
+    gradient never stalls on a clipped/flat P-K denominator. Batch-safe:
+    ``node_rates`` may be (..., m); the penalty is reduced over the last
+    (node) axis only.
     """
     rho = node_rates / moments.mu
     excess = jnp.maximum(rho - rho_max, 0.0)
-    return weight * jnp.sum(excess**2)
+    return weight * jnp.sum(excess**2, axis=-1)
 
 
 def node_arrival_rates(pi: Array, lam: Array) -> Array:
-    """Lambda_j = sum_i lambda_i pi_{i,j}; pi is (r, m), lam is (r,)."""
-    return jnp.asarray(lam) @ jnp.asarray(pi)
+    """Lambda_j = sum_i lambda_i pi_{i,j}; pi is (..., r, m), lam (..., r)."""
+    return jnp.sum(jnp.asarray(lam)[..., None] * jnp.asarray(pi), axis=-2)

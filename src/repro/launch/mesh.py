@@ -20,3 +20,11 @@ def make_local_mesh():
     model=1 — used by tests and CPU examples."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def set_mesh(mesh):
+    """Context manager activating ``mesh``, across JAX versions.
+
+    Newer JAX spells this ``jax.set_mesh(mesh)``; on older releases the
+    ``Mesh`` object itself is the context manager."""
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh

@@ -192,8 +192,17 @@ class CellCosts:
         }
 
 
-def costs_from_compiled(compiled, lowered_text: str | None = None) -> CellCosts:
+def first_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` across JAX versions: older releases
+    return one dict per device, newer a single dict."""
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return ca
+
+
+def costs_from_compiled(compiled, lowered_text: str | None = None) -> CellCosts:
+    ca = first_cost_analysis(compiled)
     text = compiled.as_text()
     coll = total_collective_bytes(text)
     mem = 0.0

@@ -26,6 +26,7 @@ from repro.core import (
     madow_sample,
     project_capped_simplex,
     solve,
+    solve_batch,
 )
 
 
@@ -45,6 +46,14 @@ class Router:
     pi: np.ndarray  # (r, m) dispatch probabilities per request class
     hedge: int = 0  # extra replicas per request (first-wins)
     latency_bound: float = float("nan")
+    # replica id -> (pi, latency_bound) re-plan with that replica removed,
+    # precomputed in one batched solve (see precompute_failover)
+    failover: dict[int, tuple[np.ndarray, float]] = dataclasses.field(
+        default_factory=dict
+    )
+    # (class_rates, theta) the failover table was computed for; drop_replica
+    # only consults the table when called with matching conditions
+    failover_inputs: tuple[np.ndarray, float] | None = None
 
     @classmethod
     def plan(
@@ -85,11 +94,45 @@ class Router:
             mask = madow_sample(key, pi)
         return [int(j) for j in np.where(np.asarray(mask))[0]]
 
-    def drop_replica(self, replica: int, class_rates: jnp.ndarray, theta: float = 0.0) -> "Router":
-        """Elastic scale-down / failure: mask the replica and re-plan."""
+    @classmethod
+    def plan_sweep(
+        cls,
+        pool: ReplicaPool,
+        class_rates: jnp.ndarray,
+        thetas,
+        *,
+        hedge: int = 0,
+        max_iters: int = 200,
+    ) -> list["Router"]:
+        """Plan one router per tradeoff factor — the whole theta sweep is a
+        single batched device solve (pick the cheapest plan meeting an SLA
+        downstream)."""
+        r = int(class_rates.shape[0])
+        probs = [
+            JLCMProblem(
+                lam=jnp.asarray(class_rates),
+                k=jnp.ones((r,)),
+                moments=pool.moments,
+                cost=pool.cost,
+                theta=float(theta),
+            )
+            for theta in thetas
+        ]
+        sols = solve_batch(probs, max_iters=max_iters)
+        return [
+            cls(
+                pool=pool,
+                pi=np.asarray(sols.pi[i]),
+                hedge=hedge,
+                latency_bound=float(sols.latency_tight[i]),
+            )
+            for i in range(len(probs))
+        ]
+
+    def _masked_problem(self, dead: list[int], class_rates, theta) -> JLCMProblem:
         mask = np.ones((self.pi.shape[0], self.pool.m), bool)
-        mask[:, replica] = False
-        prob = JLCMProblem(
+        mask[:, dead] = False
+        return JLCMProblem(
             lam=jnp.asarray(class_rates),
             k=jnp.ones((self.pi.shape[0],)),
             moments=self.pool.moments,
@@ -97,9 +140,51 @@ class Router:
             theta=theta,
             mask=jnp.asarray(mask),
         )
-        sol = solve(prob, max_iters=150)
+
+    def precompute_failover(
+        self, class_rates: jnp.ndarray, theta: float = 0.0, *, max_iters: int = 150
+    ) -> "Router":
+        """Re-optimize dispatch for EVERY possible single-replica failure in
+        one `solve_batch` call (m masked problems, one XLA program), so a
+        later `drop_replica` is a dictionary lookup instead of a solve."""
+        probs = [
+            self._masked_problem([j], class_rates, theta)
+            for j in range(self.pool.m)
+        ]
+        sols = solve_batch(probs, max_iters=max_iters)
+        failover = {
+            j: (np.asarray(sols.pi[j]), float(sols.latency_tight[j]))
+            for j in range(self.pool.m)
+        }
         return dataclasses.replace(
-            self, pi=np.asarray(sol.pi), latency_bound=float(sol.latency_tight)
+            self,
+            failover=failover,
+            failover_inputs=(np.asarray(class_rates), float(theta)),
+        )
+
+    def drop_replica(self, replica: int, class_rates: jnp.ndarray, theta: float = 0.0) -> "Router":
+        """Elastic scale-down / failure: mask the replica and re-plan.
+
+        Uses the precomputed failover table only when it was computed for
+        the same ``class_rates``/``theta`` (see `precompute_failover`);
+        a stale table is ignored and the masked problem is solved now."""
+        if replica in self.failover and self.failover_inputs is not None:
+            rates0, theta0 = self.failover_inputs
+            if theta0 == float(theta) and np.allclose(
+                rates0, np.asarray(class_rates)
+            ):
+                pi, bound = self.failover[replica]
+                return dataclasses.replace(
+                    self, pi=pi, latency_bound=bound,
+                    failover={}, failover_inputs=None,
+                )
+        sol = solve(self._masked_problem([replica], class_rates, theta), max_iters=150)
+        return dataclasses.replace(
+            self,
+            pi=np.asarray(sol.pi),
+            latency_bound=float(sol.latency_tight),
+            failover={},
+            failover_inputs=None,
         )
 
 

@@ -1,0 +1,12 @@
+import os
+import sys
+
+# Make sibling helper modules (e.g. _hypothesis_compat) importable when
+# pytest runs from the repo root without tests/ being a package.
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running end-to-end test (compile + run SPMD)"
+    )

@@ -1,0 +1,173 @@
+"""Device-resident JLCM loop + `solve_batch` (batched Algorithm JLCM).
+
+Covers: batch == sequential agreement over theta-/lambda-sweeps, monotone
+descent of the compiled `lax.while_loop` path, parity between the device
+path and the Python-loop `mode="debug"` path, and batch-safe shapes of the
+queueing/latency primitives.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    JLCMProblem,
+    check_feasible,
+    node_arrival_rates,
+    optimal_shared_z,
+    shared_z_latency,
+    shifted_exponential_moments,
+    solve,
+    solve_batch,
+    stability_penalty,
+    stack_problems,
+)
+
+M = 8  # nodes
+R = 3  # files
+
+
+def _problem(theta=2.0, seed=0, lam_scale=1.0):
+    rng = np.random.default_rng(seed)
+    mom = shifted_exponential_moments(
+        jnp.asarray(rng.uniform(4.0, 8.0, M), jnp.float32),
+        jnp.asarray(rng.uniform(0.08, 0.15, M), jnp.float32),
+    )
+    cost = jnp.asarray(rng.uniform(0.5, 2.0, M), jnp.float32)
+    lam = jnp.asarray([0.04, 0.03, 0.05]) * lam_scale
+    k = jnp.asarray([3.0, 4.0, 2.0])
+    return JLCMProblem(lam=lam, k=k, moments=mom, cost=cost, theta=theta)
+
+
+THETAS = (0.5, 1.0, 2.0, 5.0, 10.0, 25.0, 50.0, 100.0)  # >= 8-point sweep
+
+
+class TestSolveBatch:
+    def test_theta_sweep_matches_sequential(self):
+        probs = [_problem(theta=t) for t in THETAS]
+        bat = solve_batch(probs, max_iters=200)
+        for i, p in enumerate(probs):
+            ref = solve(p, max_iters=200)
+            rel = abs(float(bat.objective[i]) - float(ref.objective)) / max(
+                1.0, abs(float(ref.objective))
+            )
+            assert rel < 1e-4, f"theta={THETAS[i]}: rel objective diff {rel}"
+            np.testing.assert_array_equal(
+                np.asarray(bat.placement[i]), np.asarray(ref.placement)
+            )
+
+    def test_batch_solutions_feasible(self):
+        probs = [_problem(theta=t) for t in THETAS]
+        bat = solve_batch(probs, max_iters=200)
+        for i, p in enumerate(probs):
+            assert check_feasible(bat.pi[i], p.k)
+
+    def test_heterogeneous_lam_and_cost(self):
+        # vary arrival rates and storage prices across the batch, not theta
+        probs = [
+            _problem(theta=2.0, seed=s, lam_scale=sc)
+            for s, sc in [(0, 0.5), (1, 1.0), (2, 1.5), (3, 2.0)]
+        ]
+        bat = solve_batch(probs, max_iters=200)
+        for i, p in enumerate(probs):
+            ref = solve(p, max_iters=200)
+            rel = abs(float(bat.objective[i]) - float(ref.objective)) / max(
+                1.0, abs(float(ref.objective))
+            )
+            assert rel < 1e-4
+
+    def test_tradeoff_direction(self):
+        probs = [_problem(theta=t) for t in THETAS]
+        bat = solve_batch(probs, max_iters=200)
+        costs = np.asarray(bat.cost)
+        assert costs[0] >= costs[-1], "theta up should prune placements"
+
+    def test_stack_problems_rejects_shape_mismatch(self):
+        p = _problem()
+        q = p._replace(lam=jnp.asarray([0.1, 0.2]), k=jnp.asarray([1.0, 2.0]))
+        with pytest.raises(ValueError):
+            stack_problems([p, q])
+
+    def test_nan_padded_trace(self):
+        probs = [_problem(theta=t) for t in THETAS[:2]]
+        bat = solve_batch(probs, max_iters=200)
+        tr = np.asarray(bat.objective_trace)
+        assert tr.shape == (2, 201)
+        assert np.isfinite(tr[:, 0]).all()
+
+
+class TestDeviceLoop:
+    def test_trace_monotone_nonincreasing(self):
+        sol = solve(_problem(), max_iters=200)
+        tr = np.asarray(sol.objective_trace)
+        assert not np.isnan(tr).any(), "returned trace must be trimmed"
+        assert (np.diff(tr) <= 1e-6).all(), "device path must descend"
+
+    def test_matches_debug_python_loop(self):
+        prob = _problem()
+        dev = solve(prob, max_iters=150)
+        dbg = solve(prob, max_iters=150, mode="debug")
+        np.testing.assert_allclose(
+            float(dev.objective), float(dbg.objective), rtol=1e-4
+        )
+        np.testing.assert_allclose(
+            np.asarray(dev.pi), np.asarray(dbg.pi), atol=1e-4
+        )
+        assert len(dev.objective_trace) == len(dbg.objective_trace)
+
+    def test_respects_mask(self):
+        prob = _problem()
+        mask = np.ones((R, M), bool)
+        mask[:, 0] = False
+        sol = solve(prob._replace(mask=jnp.asarray(mask)), max_iters=100)
+        assert (np.asarray(sol.pi)[:, 0] <= 1e-6).all()
+        assert check_feasible(sol.pi, prob.k, mask)
+
+
+class TestBatchSafePrimitives:
+    def test_node_arrival_rates_batched(self):
+        rng = np.random.default_rng(0)
+        pi = jnp.asarray(rng.uniform(0, 1, (4, R, M)), jnp.float32)
+        lam = jnp.asarray(rng.uniform(0, 1, (4, R)), jnp.float32)
+        got = node_arrival_rates(pi, lam)
+        assert got.shape == (4, M)
+        for b in range(4):
+            np.testing.assert_allclose(
+                got[b], node_arrival_rates(pi[b], lam[b]), rtol=1e-6
+            )
+
+    def test_shared_z_latency_batched(self):
+        prob = _problem()
+        pi = jnp.tile(jnp.full((R, M), 3.0 / M)[None], (4, 1, 1))
+        pi = pi * jnp.asarray([0.5, 0.8, 1.0, 1.2])[:, None, None]
+        lam = jnp.tile(prob.lam[None], (4, 1))
+        z = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+        got = shared_z_latency(pi, z, lam, prob.moments)
+        assert got.shape == (4,)
+        for b in range(4):
+            np.testing.assert_allclose(
+                float(got[b]),
+                float(shared_z_latency(pi[b], z[b], lam[b], prob.moments)),
+                rtol=1e-5,
+            )
+
+    def test_optimal_shared_z_batched(self):
+        prob = _problem()
+        pi = jnp.tile(jnp.full((R, M), 3.0 / M)[None], (3, 1, 1))
+        lam = jnp.stack([prob.lam, prob.lam * 1.5, prob.lam * 2.0])
+        z = optimal_shared_z(pi, lam, prob.moments)
+        assert z.shape == (3,)
+        for b in range(3):
+            np.testing.assert_allclose(
+                float(z[b]),
+                float(optimal_shared_z(pi[b], lam[b], prob.moments)),
+                atol=1e-3,
+            )
+
+    def test_stability_penalty_batched(self):
+        prob = _problem()
+        rates = jnp.asarray(
+            np.random.default_rng(1).uniform(0, 0.3, (5, M)), jnp.float32
+        )
+        got = stability_penalty(rates, prob.moments)
+        assert got.shape == (5,)

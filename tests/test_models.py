@@ -234,7 +234,8 @@ def test_moe_ep_paths_match_local_oracle():
         cfg = get_smoke_config("deepseek-v3-671b")
         p = moe_init(jax.random.key(0), cfg, jnp.float32)
         ep = EPSpec(mesh=mesh, ep_axis="model", fsdp_axes=("data",), dp_axes=("data",))
-        with jax.set_mesh(mesh):
+        from repro.launch.mesh import set_mesh
+        with set_mesh(mesh):
             for shape in ((8, 1), (8, 300)):  # tiny (resident) + big (ZeRO)
                 x = jax.random.normal(jax.random.key(1), shape + (cfg.d_model,)) * 0.3
                 y_ref, _ = moe_apply(p, x, cfg)

@@ -74,3 +74,38 @@ class TestRouter:
         )
         lat, _ = simulate_serving(jax.random.key(2), r, rates, sampler)
         assert lat.mean() <= r.latency_bound * 1.05
+
+    def test_plan_sweep_matches_single_plans(self, pool, rates):
+        thetas = (0.0, 0.5, 2.0)
+        routers = Router.plan_sweep(pool, rates, thetas)
+        assert len(routers) == len(thetas)
+        for theta, r in zip(thetas, routers):
+            single = Router.plan(pool, rates, theta=theta)
+            np.testing.assert_allclose(
+                r.latency_bound, single.latency_bound, rtol=1e-3
+            )
+
+    def test_precomputed_failover_matches_fresh_solve(self, pool, rates):
+        r = Router.plan(pool, rates).precompute_failover(rates)
+        assert sorted(r.failover) == list(range(pool.m))
+        fresh = Router.plan(pool, rates)  # no table -> solves on drop
+        for j in (0, 3):
+            from_table = r.drop_replica(j, rates)
+            from_solve = fresh.drop_replica(j, rates)
+            assert (from_table.pi[:, j] <= 1e-6).all()
+            np.testing.assert_allclose(
+                from_table.pi, from_solve.pi, atol=1e-5
+            )
+            np.testing.assert_allclose(
+                from_table.latency_bound, from_solve.latency_bound, rtol=1e-5
+            )
+            assert from_table.failover == {}  # table invalidated after drop
+
+    def test_stale_failover_table_is_ignored(self, pool, rates):
+        r = Router.plan(pool, rates).precompute_failover(rates)
+        shifted = jnp.asarray([1.0, 0.2])  # traffic shifted since precompute
+        stale = r.failover[3][0]
+        replanned = r.drop_replica(3, shifted)
+        assert (replanned.pi[:, 3] <= 1e-6).all()
+        # must have re-solved for the new rates, not served the stale entry
+        assert not np.allclose(replanned.pi, stale, atol=1e-6)
