@@ -17,6 +17,7 @@ MODULES = [
     "kernel_gf256",
     "jlcm_scaling",
     "serving_hedge",
+    "scenario_suite",
     "checkpoint_catalogs",
 ]
 

@@ -1,0 +1,88 @@
+"""Scenario suite: every registered scenario x every dispatch policy.
+
+Runs the full scenario registry (`src/repro/scenarios/`) under the three
+policies — static-optimal (plan once from pre-run ground truth), oblivious
+(rate-proportional, never planned), and closed-loop adaptive (EWMA
+estimators + batched predictive re-planning) — and writes ONE CSV per
+scenario to ``benchmarks/results/scenario_<name>.csv`` with mean and p99
+latency, degraded-read fraction, re-plan count, and per-segment means.
+
+Asserts the headline claims documented in `docs/scenarios.md`:
+on ``node-failure``, closed-loop adaptive re-planning beats both the
+static plan computed from pre-failure moments and the oblivious baseline
+on mean simulated latency.
+
+CLI:
+    PYTHONPATH=src:. python benchmarks/scenario_suite.py                  # all
+    PYTHONPATH=src:. python benchmarks/scenario_suite.py --scenarios a,b
+    PYTHONPATH=src:. python benchmarks/scenario_suite.py --smoke         # CI
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.scenarios import all_scenarios, get_scenario, run_all_policies
+
+from benchmarks.common import emit
+
+
+def run(
+    scenarios: list[str] | None = None,
+    *,
+    smoke: bool = False,
+    seed: int = 0,
+) -> dict[str, list]:
+    specs = (
+        all_scenarios()
+        if scenarios is None
+        else [get_scenario(n) for n in scenarios]
+    )
+    if smoke:
+        specs = [s.scaled(0.25, min_requests=300) for s in specs]
+    results: dict[str, list] = {}
+    for spec in specs:
+        outs = run_all_policies(spec, seed=seed)
+        by_policy = {o.policy: o for o in outs}
+        static_mean = by_policy["static"].mean
+        rows = [
+            {**o.row(), "vs_static": round(o.mean / static_mean, 3)}
+            for o in outs
+        ]
+        emit(rows, f"scenario_{spec.name.replace('-', '_')}")
+        results[spec.name] = outs
+        if spec.name == "node-failure":
+            ada, sta, obl = (
+                by_policy["adaptive"],
+                by_policy["static"],
+                by_policy["oblivious"],
+            )
+            assert ada.mean < sta.mean, (
+                "closed-loop must beat the static pre-failure plan: "
+                f"adaptive {ada.mean:.2f} vs static {sta.mean:.2f}"
+            )
+            assert ada.mean < obl.mean, (
+                "closed-loop must beat the oblivious baseline: "
+                f"adaptive {ada.mean:.2f} vs oblivious {obl.mean:.2f}"
+            )
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenarios", help="comma-separated subset of the registry")
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="reduced request volume (CI smoke run)",
+    )
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(
+        args.scenarios.split(",") if args.scenarios else None,
+        smoke=args.smoke,
+        seed=args.seed,
+    )
+
+
+if __name__ == "__main__":
+    main()

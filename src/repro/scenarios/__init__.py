@@ -1,0 +1,23 @@
+"""Scenario engine: declarative non-stationary experiments, closed-loop
+with the JLCM solver (failures, flash crowds, drift — see
+`docs/scenarios.md`)."""
+
+from . import library as _library  # registers the built-in scenarios
+from .engine import (
+    POLICIES,
+    ScenarioOutcome,
+    initial_plan,
+    oblivious_plan,
+    run_all_policies,
+    run_scenario,
+)
+from .spec import (
+    ScenarioSpec,
+    all_scenarios,
+    diurnal_trace,
+    get_scenario,
+    register,
+    scenario_names,
+)
+
+del _library

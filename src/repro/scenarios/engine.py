@@ -1,0 +1,229 @@
+"""Scenario engine: run a spec under a dispatch policy.
+
+Three policies, deliberately spanning the control spectrum:
+
+* ``static``    — Algorithm JLCM once, from the *pre-run ground-truth*
+  moments on the healthy cluster; the plan never changes. This is the
+  paper's own operating model (plan offline, dispatch forever).
+* ``oblivious`` — the Fig.-9 'Oblivious LB' baseline: rate-proportional
+  dispatch on full support, never re-planned. No optimization at all.
+* ``adaptive``  — closed loop: after every segment the engine feeds the
+  simulator's node-side service observations to an EWMA moment estimator
+  and the observed per-file traffic to an EWMA rate estimator; at each
+  re-plan boundary (``spec.replan_every``) it re-solves JLCM from those
+  *estimated* inputs plus the current health mask — warm- and cold-started
+  candidates in one batched ``solve_batch`` call, arbitrated by a short
+  exact-simulator rollout from the live queue state under the estimated
+  service family (`serving.router.AdaptiveReplanner`).
+
+Open-loop policies run the whole schedule as ONE nested-``lax.scan``
+device call (``simulate_segments``); the closed loop alternates compiled
+segment calls with host-side re-planning. All policies see identical
+arrival streams and service draws for a given seed (same PRNG splits), so
+differences are attributable to the plans alone.
+
+Detection model: the adaptive policy learns moments and rates only from
+measurements, but node availability is taken from the scenario's health
+trace at each segment boundary — i.e. we assume a health checker flags
+dead nodes within one segment, and study the value of *re-planning*, not
+of failure detection.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import JLCMProblem, proportional_lb_pi, solve
+from repro.serving import AdaptiveReplanner, EwmaMomentEstimator, EwmaRateEstimator
+from repro.storage import (
+    Cluster,
+    simulate_segment,
+    simulate_segments,
+    tahoe_testbed,
+)
+
+from .spec import ScenarioSpec
+
+POLICIES = ("static", "oblivious", "adaptive")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioOutcome:
+    """Per-policy result of one scenario run."""
+
+    scenario: str
+    policy: str
+    seg_mean: np.ndarray  # (S,) mean latency per segment
+    seg_p99: np.ndarray  # (S,) p99 latency per segment
+    mean: float  # overall mean latency
+    p99: float  # overall p99 latency
+    degraded_frac: float  # fraction of requests that hit a down node
+    replans: int  # closed-loop re-solves performed
+
+    def row(self) -> dict:
+        return dict(
+            scenario=self.scenario,
+            policy=self.policy,
+            mean=round(self.mean, 3),
+            p99=round(self.p99, 3),
+            degraded_frac=round(self.degraded_frac, 4),
+            replans=self.replans,
+            seg_means="|".join(f"{v:.2f}" for v in self.seg_mean),
+        )
+
+
+def initial_plan(spec: ScenarioSpec, cluster: Cluster, *, max_iters: int = 300):
+    """The pre-run JLCM plan from ground-truth healthy-cluster moments."""
+    mom = cluster.moments(spec.chunk_mb)
+    prob = JLCMProblem(
+        lam=jnp.asarray(spec.lam, jnp.float32),
+        k=jnp.asarray(spec.k, jnp.float32),
+        moments=mom,
+        cost=cluster.cost,
+        theta=spec.theta,
+    )
+    sol = solve(prob, max_iters=max_iters)
+    return np.asarray(sol.pi), mom
+
+
+def oblivious_plan(spec: ScenarioSpec, cluster: Cluster) -> np.ndarray:
+    """Fig.-9 'Oblivious LB': mu-proportional dispatch on full support."""
+    mom = cluster.moments(spec.chunk_mb)
+    mask = jnp.ones((spec.r, cluster.m), bool)
+    return np.asarray(proportional_lb_pi(mask, jnp.asarray(spec.k), mom))
+
+
+def run_scenario(
+    spec: ScenarioSpec,
+    policy: str = "adaptive",
+    *,
+    seed: int = 0,
+    cluster: Cluster | None = None,
+    requests_per_segment: int | None = None,
+    pi0: np.ndarray | None = None,
+) -> ScenarioOutcome:
+    """Simulate ``spec`` under ``policy``; see module docstring.
+
+    ``pi0`` lets callers reuse an already-solved initial plan (the suite
+    shares one across the static and adaptive policies).
+    """
+    if policy not in POLICIES:
+        raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
+    cluster = tahoe_testbed() if cluster is None else cluster
+    m = cluster.m
+    spec.validate(m)
+    n_req = requests_per_segment or spec.requests_per_segment
+    n_seg = spec.n_segments
+    lam = jnp.asarray(spec.lam, jnp.float32)
+    avail_tr = spec.avail_trace(m)
+    rate_tr = spec.rate_scales()
+    ovh_tr = spec.overhead_scales(m)
+    bw_tr = spec.bandwidth_scales(m)
+    key = jax.random.key(seed)
+
+    if policy == "oblivious":
+        pi = oblivious_plan(spec, cluster)
+    elif pi0 is not None:
+        pi = np.asarray(pi0)
+    else:
+        pi, _ = initial_plan(spec, cluster)
+
+    replans = 0
+    if policy in ("static", "oblivious"):
+        res = simulate_segments(
+            key,
+            jnp.asarray(pi),
+            lam,
+            cluster,
+            spec.chunk_mb,
+            n_req,
+            avail_seq=avail_tr,
+            rate_scale_seq=rate_tr,
+            overhead_scale_seq=ovh_tr,
+            bandwidth_scale_seq=bw_tr,
+        )
+        lat = np.asarray(res.latency)  # (S, N)
+        degraded = np.asarray(res.degraded)
+    else:
+        mom0 = cluster.moments(spec.chunk_mb)
+        moment_est = EwmaMomentEstimator(prior=mom0)
+        rate_est = EwmaRateEstimator(prior=np.asarray(spec.lam))
+        replanner = AdaptiveReplanner(
+            k=np.asarray(spec.k),
+            cost=np.asarray(cluster.cost),
+            theta=spec.theta,
+            estimator=moment_est,
+        )
+        # same per-segment keys as the device path splits internally
+        seg_keys = jax.random.split(key, n_seg)
+        rollout_keys = jax.random.split(jax.random.key(seed + 0x5EED), n_seg)
+        carry = None
+        lats, degs = [], []
+        for s in range(n_seg):
+            if s > 0 and s % spec.replan_every == 0:
+                pi = replanner.replan(
+                    rate_est.rates,
+                    avail_tr[s],
+                    pi0=pi,
+                    carry=carry,
+                    key=rollout_keys[s],
+                )
+            t_start = 0.0 if carry is None else float(carry.t0)
+            res_s, carry = simulate_segment(
+                seg_keys[s],
+                jnp.asarray(pi),
+                lam,
+                cluster,
+                spec.chunk_mb,
+                n_req,
+                avail=avail_tr[s],
+                rate_scale=float(rate_tr[s]),
+                overhead_scale=ovh_tr[s],
+                bandwidth_scale=bw_tr[s],
+                carry=carry,
+            )
+            moment_est.update(res_s.obs)
+            rate_est.update(res_s.file_id, float(res_s.t_end) - t_start)
+            lats.append(np.asarray(res_s.latency))
+            degs.append(np.asarray(res_s.degraded))
+        lat = np.stack(lats)
+        degraded = np.stack(degs)
+        replans = replanner.replans
+
+    return ScenarioOutcome(
+        scenario=spec.name,
+        policy=policy,
+        seg_mean=lat.mean(-1),
+        seg_p99=np.percentile(lat, 99, axis=-1),
+        mean=float(lat.mean()),
+        p99=float(np.percentile(lat, 99)),
+        degraded_frac=float(degraded.mean()),
+        replans=replans,
+    )
+
+
+def run_all_policies(
+    spec: ScenarioSpec,
+    *,
+    seed: int = 0,
+    cluster: Cluster | None = None,
+    requests_per_segment: int | None = None,
+) -> list[ScenarioOutcome]:
+    """All three policies on identical arrival/service randomness, sharing
+    one initial JLCM solve between static and adaptive."""
+    cluster = tahoe_testbed() if cluster is None else cluster
+    pi0, _ = initial_plan(spec, cluster)
+    return [
+        run_scenario(
+            spec,
+            policy,
+            seed=seed,
+            cluster=cluster,
+            requests_per_segment=requests_per_segment,
+            pi0=None if policy == "oblivious" else pi0,
+        )
+        for policy in POLICIES
+    ]

@@ -1,0 +1,158 @@
+"""Declarative scenario specifications + registry.
+
+A :class:`ScenarioSpec` is pure data: a failure trace, an arrival-rate
+trace, a service-drift trace, and a re-plan cadence, all expressed per
+*segment* (the unit at which the closed loop observes and re-plans — see
+``storage.simulator.simulate_segment``). The engine (`engine.py`) expands
+a spec into the per-segment arrays the segmented simulator consumes, so
+benchmarks and tests can enumerate the registry without knowing how any
+scenario is realized.
+
+Registry protocol: `library.py` registers the built-in scenarios at import
+time; ``get_scenario(name)`` / ``scenario_names()`` / ``all_scenarios()``
+are the lookup surface used by ``benchmarks/scenario_suite.py`` and
+``tests/test_scenarios.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+# Default catalog: 4 heterogeneous files on the 12-node Tahoe testbed,
+# loaded to rho ~ 0.3 aggregate (per-node much higher under optimized
+# routing) so failures and crowds bite without destabilizing the queues.
+DEFAULT_LAM = (0.045, 0.035, 0.02, 0.015)
+DEFAULT_K = (4.0, 4.0, 6.0, 6.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One non-stationary experiment, declaratively.
+
+    ``failures`` is a tuple of ``(node, first_segment, last_segment)``
+    triples (inclusive): the node is down for exactly those segments.
+    ``rate_trace`` multiplies every file's arrival rate per segment.
+    ``overhead_drift`` / ``bandwidth_drift`` scale the service parameters
+    of ``drift_nodes`` (all nodes when ``None``) per segment, drifting the
+    true moments away from what any pre-computed plan assumed.
+    ``replan_every`` is the closed-loop cadence: the adaptive policy
+    re-solves at segment boundaries ``s`` with ``s % replan_every == 0``.
+    """
+
+    name: str
+    description: str
+    probes: str  # which paper claim / related-work phenomenon this stresses
+    expected: str  # qualitative outcome the suite should reproduce
+    n_segments: int = 8
+    requests_per_segment: int = 2000
+    chunk_mb: float = 12.5
+    lam: tuple[float, ...] = DEFAULT_LAM
+    k: tuple[float, ...] = DEFAULT_K
+    theta: float = 2.0
+    replan_every: int = 1
+    failures: tuple[tuple[int, int, int], ...] = ()
+    rate_trace: tuple[float, ...] | None = None
+    drift_nodes: tuple[int, ...] | None = None
+    overhead_drift: tuple[float, ...] | None = None
+    bandwidth_drift: tuple[float, ...] | None = None
+
+    @property
+    def r(self) -> int:
+        return len(self.lam)
+
+    def avail_trace(self, m: int) -> np.ndarray:
+        """(S, m) bool availability from the failure trace."""
+        avail = np.ones((self.n_segments, m), bool)
+        for node, first, last in self.failures:
+            avail[first : last + 1, node] = False
+        return avail
+
+    def rate_scales(self) -> np.ndarray:
+        if self.rate_trace is None:
+            return np.ones((self.n_segments,))
+        return np.asarray(self.rate_trace, float)
+
+    def _drift(self, trace: tuple[float, ...] | None, m: int) -> np.ndarray:
+        scales = np.ones((self.n_segments, m))
+        if trace is not None:
+            cols = (
+                list(range(m)) if self.drift_nodes is None else list(self.drift_nodes)
+            )
+            scales[:, cols] = np.asarray(trace, float)[:, None]
+        return scales
+
+    def overhead_scales(self, m: int) -> np.ndarray:
+        return self._drift(self.overhead_drift, m)
+
+    def bandwidth_scales(self, m: int) -> np.ndarray:
+        return self._drift(self.bandwidth_drift, m)
+
+    def validate(self, m: int) -> None:
+        for trace, label in (
+            (self.rate_trace, "rate_trace"),
+            (self.overhead_drift, "overhead_drift"),
+            (self.bandwidth_drift, "bandwidth_drift"),
+        ):
+            if trace is not None and len(trace) != self.n_segments:
+                raise ValueError(
+                    f"{self.name}: {label} has {len(trace)} entries, "
+                    f"need n_segments={self.n_segments}"
+                )
+        for node, first, last in self.failures:
+            if not (0 <= node < m):
+                raise ValueError(f"{self.name}: failed node {node} not in [0, {m})")
+            if not (0 <= first <= last < self.n_segments):
+                raise ValueError(
+                    f"{self.name}: failure window [{first}, {last}] outside "
+                    f"[0, {self.n_segments})"
+                )
+        # every segment must keep >= max k_i nodes up (degraded reads need
+        # a feasible k-of-n subset)
+        up = self.avail_trace(m).sum(-1)
+        if (up < max(self.k)).any():
+            raise ValueError(
+                f"{self.name}: some segment leaves fewer than max k nodes up"
+            )
+
+    def scaled(self, factor: float, min_requests: int = 200) -> "ScenarioSpec":
+        """Same scenario at a reduced request volume (CI smoke / tests)."""
+        n = max(min_requests, int(self.requests_per_segment * factor))
+        return dataclasses.replace(self, requests_per_segment=n)
+
+
+_REGISTRY: dict[str, ScenarioSpec] = {}
+
+
+def register(spec: ScenarioSpec) -> ScenarioSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"scenario {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_scenario(name: str) -> ScenarioSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; known: {', '.join(scenario_names())}"
+        ) from None
+
+
+def scenario_names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def all_scenarios() -> list[ScenarioSpec]:
+    return [_REGISTRY[n] for n in scenario_names()]
+
+
+def diurnal_trace(n_segments: int, low: float = 0.6, high: float = 1.6) -> tuple:
+    """One full sine period across the schedule (a compressed day)."""
+    mid, amp = (high + low) / 2.0, (high - low) / 2.0
+    return tuple(
+        mid + amp * math.sin(2.0 * math.pi * s / n_segments)
+        for s in range(n_segments)
+    )

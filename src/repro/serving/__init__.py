@@ -1,3 +1,11 @@
-"""Probabilistic-scheduling request router (serving plane)."""
+"""Probabilistic-scheduling request router (serving plane) and the
+closed-loop control pieces (EWMA estimators + batched re-planning)."""
 
-from .router import ReplicaPool, Router, simulate_serving
+from .router import (
+    AdaptiveReplanner,
+    EwmaMomentEstimator,
+    EwmaRateEstimator,
+    ReplicaPool,
+    Router,
+    simulate_serving,
+)

@@ -10,6 +10,17 @@ Straggler mitigation beyond the paper: *hedged dispatch* — send each
 request to 1 + hedge replicas sampled without replacement and take the
 first completion. The simulator quantifies the tail-latency win (see
 benchmarks/serving_hedge.py).
+
+Closed-loop control (scenario engine): the paper optimizes against
+ground-truth service moments, but an operating system only sees
+measurements. :class:`EwmaMomentEstimator` folds per-segment node-side
+service observations (``storage.simulator.NodeObservations``) into EWMA
+estimates of the Lemma-3 moments, :class:`EwmaRateEstimator` tracks the
+per-class arrival rates the same way, and :class:`AdaptiveReplanner`
+re-solves JLCM from those *estimated* inputs — batching all candidate
+(theta, availability-mask) re-plans into one ``solve_batch`` call — to
+produce the next segment's dispatch matrix. `src/repro/scenarios/` wires
+this loop against the segmented simulator.
 """
 from __future__ import annotations
 
@@ -23,6 +34,7 @@ import numpy as np
 from repro.core import (
     JLCMProblem,
     ServiceMoments,
+    feasible_uniform,
     madow_sample,
     project_capped_simplex,
     solve,
@@ -186,6 +198,220 @@ class Router:
             failover={},
             failover_inputs=None,
         )
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop control: measured state in, batched re-plans out.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EwmaMomentEstimator:
+    """EWMA tracker of per-node service moments from segment observations.
+
+    Each :meth:`update` consumes one segment's ``NodeObservations`` (counts
+    + raw power sums of observed chunk service times), forms the segment's
+    unbiased raw-moment estimates, and blends them into exponentially-
+    weighted running estimates of E[X_j], E[X_j^2], E[X_j^3] — the inputs
+    Lemma 3's P-K formulas need. Nodes with no observations this segment
+    (down, or zero dispatch mass) keep their previous estimate, so a node
+    that fails and recovers resumes from its pre-failure state instead of
+    garbage. ``prior`` seeds the estimates (e.g. the moments the initial
+    plan was computed from); with a prior, :meth:`moments` is total —
+    every node always has a finite estimate.
+
+    On a stationary trace the per-segment estimates are unbiased and the
+    EWMA converges to the true moments (tested in
+    ``tests/test_scenarios.py``); under drift it tracks with time constant
+    ``~1/alpha`` segments.
+    """
+
+    prior: ServiceMoments
+    alpha: float = 0.35
+    m1: np.ndarray = dataclasses.field(init=False)
+    m2: np.ndarray = dataclasses.field(init=False)
+    m3: np.ndarray = dataclasses.field(init=False)
+
+    def __post_init__(self) -> None:
+        self.m1 = np.asarray(self.prior.mean, float).copy()
+        self.m2 = np.asarray(self.prior.m2, float).copy()
+        self.m3 = np.asarray(self.prior.m3, float).copy()
+
+    def update(self, obs: Any) -> ServiceMoments:
+        count = np.asarray(obs.count, float)
+        seen = count > 0
+        safe = np.maximum(count, 1.0)
+        h1 = np.asarray(obs.s1, float) / safe
+        h2 = np.asarray(obs.s2, float) / safe
+        h3 = np.asarray(obs.s3, float) / safe
+        a = self.alpha
+        self.m1 = np.where(seen, (1 - a) * self.m1 + a * h1, self.m1)
+        self.m2 = np.where(seen, (1 - a) * self.m2 + a * h2, self.m2)
+        self.m3 = np.where(seen, (1 - a) * self.m3 + a * h3, self.m3)
+        return self.moments()
+
+    def moments(self) -> ServiceMoments:
+        return ServiceMoments(
+            mu=jnp.asarray(1.0 / self.m1, jnp.float32),
+            m2=jnp.asarray(self.m2, jnp.float32),
+            m3=jnp.asarray(self.m3, jnp.float32),
+        )
+
+    def fitted_shifted_exp(self) -> tuple[np.ndarray, np.ndarray]:
+        """Method-of-moments fit of the cluster's service family D + Exp.
+
+        Returns per-node ``(overheads D_j, exp rates 1/s_j)`` matching the
+        estimated first two moments (s = sqrt(var), D = mean - s, clamped
+        to D >= 0). Used to *sample* service times from estimated state —
+        e.g. the replanner's candidate rollouts — without ever touching the
+        simulator's ground-truth parameters.
+        """
+        var = np.maximum(self.m2 - self.m1**2, 1e-9)
+        s = np.sqrt(var)
+        d = np.maximum(self.m1 - s, 0.0)
+        return d, 1.0 / s
+
+
+@dataclasses.dataclass
+class EwmaRateEstimator:
+    """EWMA of per-class (per-file) arrival rates from observed traffic.
+
+    :meth:`update` takes the request class ids seen in one segment and the
+    segment's wall-clock duration; the empirical rates ``n_i / duration``
+    are EWMA-blended so flash crowds and diurnal ramps show up in the
+    re-planner's lambda within ``~1/alpha`` segments.
+    """
+
+    prior: np.ndarray
+    alpha: float = 0.5
+    rates: np.ndarray = dataclasses.field(init=False)
+
+    def __post_init__(self) -> None:
+        self.rates = np.asarray(self.prior, float).copy()
+
+    def update(self, class_id: Any, duration: float) -> np.ndarray:
+        counts = np.bincount(
+            np.asarray(class_id).ravel(), minlength=self.rates.shape[0]
+        ).astype(float)
+        emp = counts / max(float(duration), 1e-9)
+        self.rates = (1 - self.alpha) * self.rates + self.alpha * emp
+        return self.rates.copy()
+
+
+@dataclasses.dataclass
+class AdaptiveReplanner:
+    """Re-solve JLCM from estimated state, one batched solve per re-plan.
+
+    Holds the pieces of the control loop that face the solver: the catalog
+    shape (``k``, per-node ``cost``), the operating tradeoff ``theta``, and
+    the moment estimator. :meth:`replan` builds the candidate set — the
+    cross product of ``thetas`` (defaults to the operating theta) and
+    candidate availability masks (defaults to the health-check mask alone),
+    each solved from BOTH a cold (feasible-uniform) and, when the current
+    plan is supplied, a warm start — and solves them all in ONE
+    ``solve_batch`` call. With the defaults that is two masked re-solves in
+    one XLA program, exactly the shape ``Router.precompute_failover``
+    batches over hypothetical failures.
+
+    Candidate selection is *model-predictive* when the caller supplies the
+    live queue state: each candidate plan is scored by a short exact-
+    simulator rollout from ``carry`` under the **estimated** service family
+    (:meth:`EwmaMomentEstimator.fitted_shifted_exp`) and the estimated
+    rates, and the lowest ``rollout mean + theta * cost`` (the same
+    objective the analytic fallback scores, with the rollout mean standing
+    in for the bound) wins. This matters twice over:
+    (a) the Lemma-2 bound is loose enough at high load to mis-rank plans
+    (a wide-spread plan can have a lower bound but a higher true latency —
+    slow nodes enter the k-th order statistic), and (b) after a surge or
+    failure the bound knows nothing about queue backlog, while the rollout
+    starts from the actual per-node departure state and so prefers plans
+    that drain it. Without ``carry``/``key`` the scorer falls back to the
+    analytic ``latency_tight + theta * cost``.
+
+    Warm starts track slow drift with fewer iterations (DC programming
+    keeps support); cold starts escape a stale support after abrupt
+    changes. The rollout arbitrates — no hand-tuned margins.
+    """
+
+    k: np.ndarray  # (r,) MDS k_i per class/file
+    cost: np.ndarray  # (m,) per-node cost V_j
+    theta: float
+    estimator: EwmaMomentEstimator
+    thetas: tuple[float, ...] | None = None
+    max_iters: int = 400
+    rollout_requests: int = 600
+    replans: int = 0
+
+    def replan(
+        self,
+        class_rates: np.ndarray,
+        avail: np.ndarray,
+        *,
+        candidate_masks: list[np.ndarray] | None = None,
+        pi0: np.ndarray | None = None,
+        carry: Any | None = None,
+        key: Any | None = None,
+    ) -> np.ndarray:
+        """New (r, m) dispatch matrix from estimated moments + health mask.
+
+        ``pi0`` (the plan currently dispatching) adds warm-started
+        candidates; ``carry`` (``storage.simulator.SimCarry``) plus a PRNG
+        ``key`` switch scoring to predictive rollouts from the live queue
+        state. All inputs are measured/estimated quantities — ground truth
+        never enters.
+        """
+        r = int(np.asarray(self.k).shape[0])
+        avail = np.asarray(avail, bool)
+        masks = [avail] if candidate_masks is None else candidate_masks
+        thetas = (self.theta,) if self.thetas is None else tuple(self.thetas)
+        mom = self.estimator.moments()
+        lam = jnp.asarray(class_rates, jnp.float32)
+        probs, starts = [], []
+        for t in thetas:
+            for mk in masks:
+                mask = jnp.broadcast_to(
+                    jnp.asarray(mk, bool), (r, avail.shape[-1])
+                )
+                prob = JLCMProblem(
+                    lam=lam,
+                    k=jnp.asarray(self.k, jnp.float32),
+                    moments=mom,
+                    cost=jnp.asarray(self.cost, jnp.float32),
+                    theta=float(t),
+                    mask=mask,
+                )
+                probs.append(prob)
+                starts.append(feasible_uniform(mask, prob.k))
+                if pi0 is not None:
+                    probs.append(prob)
+                    starts.append(jnp.asarray(pi0))
+        sols = solve_batch(probs, max_iters=self.max_iters, pi0=jnp.stack(starts))
+        self.replans += 1
+
+        cost_term = self.theta * np.asarray(sols.cost)
+        if carry is not None and key is not None:
+            from repro.storage.simulator import run_segment_raw
+
+            d, srv_rates = self.estimator.fitted_shifted_exp()
+            scores = []
+            for i in range(len(probs)):
+                _, res = run_segment_raw(
+                    carry,
+                    key,
+                    sols.pi[i],
+                    lam,
+                    jnp.asarray(d, jnp.float32),
+                    jnp.asarray(srv_rates, jnp.float32),
+                    jnp.asarray(avail),
+                    self.rollout_requests,
+                )
+                # same objective as the analytic fallback, with the rollout
+                # mean replacing the (loose, backlog-blind) latency bound
+                scores.append(float(res.latency.mean()) + float(cost_term[i]))
+        else:
+            scores = (np.asarray(sols.latency_tight) + cost_term).tolist()
+        best = int(np.argmin(scores))
+        return np.asarray(sols.pi[best])
 
 
 def simulate_serving(

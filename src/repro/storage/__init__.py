@@ -27,4 +27,17 @@ from .rs import (
     gf_invert_matrix,
     pad_and_split,
 )
-from .simulator import SimResult, generate_workload, simulate, simulate_latency_cdf
+from .simulator import (
+    NodeObservations,
+    SegmentResult,
+    SimCarry,
+    SimResult,
+    dispatch_masks,
+    generate_workload,
+    init_carry,
+    run_segment_raw,
+    simulate,
+    simulate_latency_cdf,
+    simulate_segment,
+    simulate_segments,
+)

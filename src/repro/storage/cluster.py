@@ -85,6 +85,34 @@ class Cluster:
         """Surviving-node cluster after failures (elastic replanning)."""
         return Cluster(tuple(self.nodes[i] for i in keep))
 
+    def perturbed(
+        self,
+        overhead_scale: float | Sequence[float] = 1.0,
+        bandwidth_scale: float | Sequence[float] = 1.0,
+    ) -> "Cluster":
+        """Cluster with drifted service parameters (same node identities).
+
+        Scales each node's deterministic overhead D_j and/or effective
+        bandwidth bw_j (scalar = every node, sequence = per node), so the
+        shifted-exponential service distribution — and therefore all three
+        moments fed to Lemma 3 — drifts consistently between what the
+        simulator samples and what :meth:`moments` reports. This is the
+        substrate for non-stationary scenarios (hotspots, congestion,
+        slow-disk degradation) where plans computed from stale moments go
+        sour and the closed loop must re-estimate.
+        """
+        ovh = np.broadcast_to(np.asarray(overhead_scale, float), (self.m,))
+        bwd = np.broadcast_to(np.asarray(bandwidth_scale, float), (self.m,))
+        nodes = tuple(
+            dataclasses.replace(
+                nd,
+                overhead_s=nd.overhead_s * float(o),
+                bandwidth_mbps=nd.bandwidth_mbps * float(b),
+            )
+            for nd, o, b in zip(self.nodes, ovh, bwd)
+        )
+        return Cluster(nodes)
+
 
 def tahoe_testbed(
     *,

@@ -13,9 +13,25 @@ This is an *exact* simulation of Def. 2 (not an approximation), fully
 vectorized over the node axis; 10^5+ requests simulate in milliseconds.
 Used to validate Lemma 2/3's analytic bound (Figs. 10-12) and to measure
 the true optimality gap of JLCM solutions.
+
+Non-stationary extension (scenario engine): :func:`simulate_segment` runs
+one *segment* of requests against a per-segment node-availability mask,
+arrival-rate scale, and service-moment perturbation, threading the FCFS
+queue state (:class:`SimCarry`) across segment boundaries so a multi-
+segment trace is one continuous system history. When a Madow-selected
+node is down the request performs a *degraded read*: the dead picks are
+replaced by uniformly-random available spares so the k-of-n MDS read size
+is preserved (any k chunks decode — `storage/rs.py`). Each segment also
+reports per-node service-time observations (:class:`NodeObservations`)
+that a control plane can feed to a moment estimator — the measured-state
+half of the closed loop in `serving/router.py`. :func:`simulate_segments`
+stacks per-segment parameters and runs the whole schedule as one nested
+``lax.scan`` (segments outer, requests inner) in a single compiled call —
+the open-loop fast path used for static/oblivious policies.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -37,10 +53,18 @@ class SimResult(NamedTuple):
         return jnp.mean(self.latency)
 
     def per_file_mean(self, r: int) -> Array:
+        """Mean simulated latency per file, shape (r,).
+
+        Contract: entry ``i`` is the empirical mean over the requests that
+        file ``i`` actually received; a file with **zero** requests in the
+        (post-warmup) trace gets **NaN**, never a silently-wrong 0-count
+        mean. Callers that aggregate across files must mask with
+        ``jnp.isnan`` (or ``np.nanmean``) rather than assume finiteness.
+        """
         one_hot = jax.nn.one_hot(self.file_id, r, dtype=jnp.float32)
         tot = one_hot.T @ self.latency
-        cnt = jnp.maximum(one_hot.sum(0), 1.0)
-        return tot / cnt
+        cnt = one_hot.sum(0)
+        return jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1.0), jnp.nan)
 
 
 def generate_workload(
@@ -117,3 +141,287 @@ def simulate_latency_cdf(result: SimResult, qs: np.ndarray | None = None):
     qs = np.linspace(0.01, 0.99, 99) if qs is None else qs
     lat = np.asarray(result.latency)
     return qs, np.quantile(lat, qs)
+
+
+# ---------------------------------------------------------------------------
+# Segmented (non-stationary) simulation: failures, flash crowds, drift.
+# ---------------------------------------------------------------------------
+
+
+class NodeObservations(NamedTuple):
+    """Per-node service-time measurements from one segment.
+
+    ``count`` chunks served per node plus raw power sums of the observed
+    chunk service times — exactly what a node-side agent would report to a
+    control plane, and enough to form unbiased estimates of the first three
+    raw moments (E[X], E[X^2], E[X^3]) that Lemma 3 needs. Nodes that
+    served nothing (down, or zero dispatch mass) have ``count == 0``.
+    """
+
+    count: Array  # (m,) chunks served
+    s1: Array  # (m,) sum of service times
+    s2: Array  # (m,) sum of squares
+    s3: Array  # (m,) sum of cubes
+
+
+class SimCarry(NamedTuple):
+    """FCFS queue state threaded across segment boundaries."""
+
+    dep: Array  # (m,) last scheduled departure per node
+    t0: Array  # () absolute clock at the segment boundary
+
+
+class SegmentResult(NamedTuple):
+    latency: Array  # (N,) per-request file latency
+    file_id: Array  # (N,)
+    arrival: Array  # (N,) absolute arrival times
+    node_busy: Array  # (m,) busy seconds added this segment
+    degraded: Array  # (N,) bool: >= 1 selected node was down (read fell back)
+    obs: NodeObservations
+    t_end: Array  # () absolute time of the last arrival
+
+    def mean_latency(self) -> Array:
+        return jnp.mean(self.latency)
+
+
+def init_carry(m: int) -> SimCarry:
+    return SimCarry(dep=jnp.zeros((m,)), t0=jnp.asarray(0.0))
+
+
+def dispatch_masks(
+    key: Array, pi: Array, file_id: Array, avail: Array
+) -> tuple[Array, Array]:
+    """Per-request service sets under availability mask ``avail`` (m,).
+
+    Each request Madow-samples its k_i-subset from ``pi[file_id]`` (exact
+    Theorem-1 marginals). Selected-but-down nodes are then replaced by
+    uniformly-random *available* spares, preserving the read size k_i —
+    a degraded read: any k chunks of an (n, k) MDS code decode. If fewer
+    than k_i nodes are available in total, the request reads everything
+    that is up (a partially-degraded read; scenarios avoid this regime).
+
+    Returns ``(masks, degraded)``: (N, m) bool service sets and (N,) bool
+    flags marking requests whose original selection hit a down node.
+    """
+    pi = jnp.asarray(pi)
+    avail = jnp.asarray(avail, bool)
+    n = file_id.shape[0]
+    k_per_file = jnp.round(jnp.sum(pi, axis=-1))
+    k_sel, k_prio = jax.random.split(key)
+    sel_keys = jax.random.split(k_sel, n)
+    prio = jax.random.uniform(k_prio, (n, pi.shape[-1]))
+
+    def one(skey, fid, pr):
+        sel = madow_sample(skey, pi[fid])
+        alive = jnp.logical_and(sel, avail)
+        need = k_per_file[fid].astype(jnp.int32) - jnp.sum(alive)
+        cand = jnp.logical_and(avail, jnp.logical_not(sel))
+        score = jnp.where(cand, pr, -1.0)
+        rank = jnp.argsort(jnp.argsort(-score))
+        add = jnp.logical_and(cand, rank < need)
+        return jnp.logical_or(alive, add), jnp.any(sel & ~avail)
+
+    return jax.vmap(one)(sel_keys, file_id, prio)
+
+
+def _run_segment(
+    carry: SimCarry,
+    key: Array,
+    pi: Array,
+    lam: Array,
+    overheads: Array,
+    rates: Array,
+    avail: Array,
+    n_requests: int,
+) -> tuple[SimCarry, SegmentResult]:
+    """One segment of the non-stationary simulation (jit-/scan-friendly).
+
+    ``lam`` is the (already rate-scaled) per-file arrival vector for this
+    segment; ``overheads``/``rates`` are the (already drift-scaled) shifted-
+    exponential service parameters; ``avail`` the (m,) availability mask.
+    Queue state flows in and out through ``carry`` so consecutive segments
+    form one continuous FCFS history (no warmup transient at boundaries).
+    """
+    m = overheads.shape[-1]
+    k_wl, k_sel, k_srv = jax.random.split(key, 3)
+    rel, file_id = generate_workload(k_wl, lam, n_requests)
+    arrival = carry.t0 + rel
+    e = jax.random.exponential(k_srv, (n_requests, m))
+    service = overheads + e / rates
+    masks, degraded = dispatch_masks(k_sel, pi, file_id, avail)
+
+    def step(dep, inp):
+        t, mask, srv = inp
+        start = jnp.maximum(t, dep)
+        finish = start + srv
+        new_dep = jnp.where(mask, finish, dep)
+        latency = jnp.max(jnp.where(mask, finish, -jnp.inf)) - t
+        busy = jnp.where(mask, srv, 0.0)
+        return new_dep, (latency, busy)
+
+    dep, (latency, busy) = jax.lax.scan(
+        step, carry.dep, (arrival, masks, service)
+    )
+    served = jnp.where(masks, service, 0.0)
+    obs = NodeObservations(
+        count=jnp.sum(masks, axis=0),
+        s1=jnp.sum(served, axis=0),
+        s2=jnp.sum(served**2, axis=0),
+        s3=jnp.sum(served**3, axis=0),
+    )
+    new_carry = SimCarry(dep=dep, t0=arrival[-1])
+    return new_carry, SegmentResult(
+        latency=latency,
+        file_id=file_id,
+        arrival=arrival,
+        node_busy=busy.sum(0),
+        degraded=degraded,
+        obs=obs,
+        t_end=arrival[-1],
+    )
+
+
+# Public raw-parameter entry point: one compiled segment from explicit
+# shifted-exponential service parameters (no Cluster object). This is the
+# surface control-plane code uses to roll out candidate plans from
+# *estimated* parameters (serving.router.AdaptiveReplanner); positional
+# signature: (carry, key, pi, lam, overheads, rates, avail, n_requests).
+run_segment_raw = jax.jit(_run_segment, static_argnames=("n_requests",))
+
+
+def simulate_segment(
+    key: Array,
+    pi: Array,
+    lam: Array,
+    cluster: Cluster,
+    chunk_mb: float,
+    n_requests: int,
+    *,
+    avail: Array | None = None,
+    rate_scale: float = 1.0,
+    overhead_scale: float | Array = 1.0,
+    bandwidth_scale: float | Array = 1.0,
+    carry: SimCarry | None = None,
+) -> tuple[SegmentResult, SimCarry]:
+    """Simulate one segment against a possibly-perturbed cluster state.
+
+    The host-facing entry point of the scenario engine's closed loop: the
+    caller owns ``pi`` (and may re-plan it between segments) while queue
+    state persists in ``carry``. ``rate_scale`` multiplies every file's
+    arrival rate (flash crowds / diurnal ramps); ``overhead_scale`` /
+    ``bandwidth_scale`` (scalar or per-node) drift the service moments the
+    same way :meth:`Cluster.perturbed` does.
+    """
+    m = cluster.m
+    avail = jnp.ones((m,), bool) if avail is None else jnp.asarray(avail, bool)
+    carry = init_carry(m) if carry is None else carry
+    overheads = cluster.overheads() * jnp.asarray(overhead_scale)
+    rates = cluster.bandwidths() * jnp.asarray(bandwidth_scale) / chunk_mb
+    lam_s = jnp.asarray(lam) * rate_scale
+    new_carry, res = run_segment_raw(
+        carry, key, jnp.asarray(pi), lam_s, overheads, rates, avail, n_requests
+    )
+    return res, new_carry
+
+
+@functools.partial(jax.jit, static_argnames=("n_requests",))
+def _simulate_segments_device(
+    key, pi_seq, lam, rate_scale, overheads_seq, rates_seq, avail_seq, n_requests
+):
+    n_seg = rate_scale.shape[0]
+    keys = jax.random.split(key, n_seg)
+
+    def seg(carry, inp):
+        skey, pi, scale, ovh, rt, av = inp
+        return _run_segment(carry, skey, pi, lam * scale, ovh, rt, av, n_requests)
+
+    carry0 = init_carry(overheads_seq.shape[-1])
+    _, results = jax.lax.scan(
+        seg,
+        carry0,
+        (keys, pi_seq, rate_scale, overheads_seq, rates_seq, avail_seq),
+    )
+    return results
+
+
+def simulate_segments(
+    key: Array,
+    pi_seq: Array,
+    lam: Array,
+    cluster: Cluster,
+    chunk_mb: float,
+    n_requests: int,
+    *,
+    avail_seq: Array | None = None,
+    rate_scale_seq: Array | None = None,
+    overhead_scale_seq: Array | None = None,
+    bandwidth_scale_seq: Array | None = None,
+) -> SegmentResult:
+    """Run a whole segment schedule as ONE nested ``lax.scan`` device call.
+
+    ``pi_seq`` is (S, r, m) — or (r, m), broadcast to every segment — and
+    the optional per-segment sequences are ``avail_seq`` (S, m) bool,
+    ``rate_scale_seq`` (S,), and ``overhead_scale_seq`` /
+    ``bandwidth_scale_seq`` (S,) or (S, m). The outer scan threads the
+    FCFS carry across segments; the inner scan replays each segment's
+    merged arrival stream. Every field of the returned
+    :class:`SegmentResult` gains a leading (S,) axis.
+
+    This is the open-loop fast path (static / oblivious policies, or any
+    precomputed plan schedule). The closed-loop engine instead alternates
+    :func:`simulate_segment` with host-side re-planning.
+    """
+    m = cluster.m
+    pi_seq = jnp.asarray(pi_seq)
+    n_seg = None
+    for cand in (
+        pi_seq.shape[0] if pi_seq.ndim == 3 else None,
+        None if rate_scale_seq is None else np.shape(rate_scale_seq)[0],
+        None if avail_seq is None else np.shape(avail_seq)[0],
+        None if overhead_scale_seq is None else np.shape(overhead_scale_seq)[0],
+        None if bandwidth_scale_seq is None else np.shape(bandwidth_scale_seq)[0],
+    ):
+        if cand is None:
+            continue
+        if n_seg is None:
+            n_seg = int(cand)
+        elif n_seg != int(cand):
+            raise ValueError(
+                f"inconsistent segment counts: {n_seg} vs {int(cand)}"
+            )
+    if n_seg is None:
+        raise ValueError(
+            "cannot infer the segment count: pass a (S, r, m) pi_seq or any "
+            "per-segment sequence"
+        )
+    if rate_scale_seq is None:
+        rate_scale_seq = jnp.ones((n_seg,))
+    rate_scale_seq = jnp.asarray(rate_scale_seq, jnp.float32)
+    if pi_seq.ndim == 2:
+        pi_seq = jnp.broadcast_to(pi_seq, (n_seg,) + pi_seq.shape)
+    avail_seq = (
+        jnp.ones((n_seg, m), bool)
+        if avail_seq is None
+        else jnp.asarray(avail_seq, bool)
+    )
+
+    def scales(seq):
+        if seq is None:
+            return jnp.ones((n_seg, m))
+        seq = jnp.asarray(seq, jnp.float32)
+        return jnp.broadcast_to(
+            seq[:, None] if seq.ndim == 1 else seq, (n_seg, m)
+        )
+
+    overheads_seq = cluster.overheads() * scales(overhead_scale_seq)
+    rates_seq = cluster.bandwidths() * scales(bandwidth_scale_seq) / chunk_mb
+    return _simulate_segments_device(
+        key,
+        pi_seq,
+        jnp.asarray(lam),
+        rate_scale_seq,
+        overheads_seq,
+        rates_seq,
+        avail_seq,
+        n_requests,
+    )

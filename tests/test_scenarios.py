@@ -1,0 +1,225 @@
+"""Scenario engine: segmented simulation, degraded reads, estimators,
+and the closed adaptive loop (ISSUE acceptance claims)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import feasible_uniform
+from repro.scenarios import (
+    POLICIES,
+    all_scenarios,
+    get_scenario,
+    run_all_policies,
+    run_scenario,
+    scenario_names,
+)
+from repro.serving import EwmaMomentEstimator, EwmaRateEstimator
+from repro.storage import (
+    dispatch_masks,
+    generate_workload,
+    simulate_segment,
+    simulate_segments,
+    tahoe_testbed,
+)
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    return tahoe_testbed()
+
+
+@pytest.fixture(scope="module")
+def pi(cluster):
+    return feasible_uniform(
+        jnp.ones((2, cluster.m), bool), jnp.asarray([4.0, 6.0])
+    )
+
+
+LAM = jnp.asarray([0.04, 0.03])
+
+
+class TestSegmentedSimulator:
+    def test_failure_segment_removes_node_from_service(self, cluster, pi):
+        """A down node must accrue zero busy time (utilisation check) and
+        zero observations while down, then return to service on recovery."""
+        avail = np.ones((4, cluster.m), bool)
+        avail[1:3, 0] = False  # node 0 down for segments 1-2
+        res = simulate_segments(
+            jax.random.key(0), pi, LAM, cluster, 12.5, 1500, avail_seq=avail
+        )
+        busy = np.asarray(res.node_busy)  # (4, m)
+        assert busy[1, 0] == 0.0 and busy[2, 0] == 0.0
+        assert busy[0, 0] > 0.0 and busy[3, 0] > 0.0
+        counts = np.asarray(res.obs.count)
+        assert counts[1, 0] == 0 and counts[2, 0] == 0
+        # degraded reads happen exactly while the node is down
+        deg = np.asarray(res.degraded).mean(-1)
+        assert deg[0] == 0.0 and deg[3] == 0.0
+        assert deg[1] > 0.0 and deg[2] > 0.0
+
+    def test_degraded_reads_keep_k_of_n(self, cluster, pi):
+        """With a node down, every dispatch set still has exactly k_i
+        available nodes (any k chunks of an MDS code decode)."""
+        avail = np.ones((cluster.m,), bool)
+        avail[[0, 5]] = False
+        _, fid = generate_workload(jax.random.key(1), LAM, 600)
+        masks, degraded = dispatch_masks(jax.random.key(2), pi, fid, avail)
+        masks = np.asarray(masks)
+        k_req = np.asarray([4, 6])[np.asarray(fid)]
+        np.testing.assert_array_equal(masks.sum(-1), k_req)
+        assert not masks[:, 0].any() and not masks[:, 5].any()
+        assert np.asarray(degraded).any()
+
+    def test_all_up_matches_plain_madow_sum(self, cluster, pi):
+        """Healthy cluster: the fallback path is inert — sets are exactly
+        the Madow k-subsets and nothing is flagged degraded."""
+        _, fid = generate_workload(jax.random.key(3), LAM, 400)
+        masks, degraded = dispatch_masks(
+            jax.random.key(4), pi, fid, np.ones((cluster.m,), bool)
+        )
+        k_req = np.asarray([4, 6])[np.asarray(fid)]
+        np.testing.assert_array_equal(np.asarray(masks).sum(-1), k_req)
+        assert not np.asarray(degraded).any()
+
+    def test_device_path_matches_host_loop(self, cluster, pi):
+        """simulate_segments (one nested lax.scan) reproduces the host-side
+        segment loop exactly — same keys, same carry threading."""
+        key = jax.random.key(5)
+        rate = np.asarray([1.0, 1.5, 0.8])
+        dev = simulate_segments(
+            key, pi, LAM, cluster, 12.5, 500, rate_scale_seq=rate
+        )
+        seg_keys = jax.random.split(key, 3)
+        carry = None
+        for s in range(3):
+            res, carry = simulate_segment(
+                seg_keys[s], pi, LAM, cluster, 12.5, 500,
+                rate_scale=float(rate[s]), carry=carry,
+            )
+            np.testing.assert_allclose(
+                np.asarray(dev.latency[s]), np.asarray(res.latency), rtol=1e-6
+            )
+
+    def test_carry_threads_clock_across_segments(self, cluster, pi):
+        res = simulate_segments(
+            jax.random.key(6), pi, LAM, cluster, 12.5, 400,
+            rate_scale_seq=np.ones(3),
+        )
+        arr = np.asarray(res.arrival).ravel()
+        assert (np.diff(arr) > 0).all()  # one continuous timeline
+
+
+class TestEstimators:
+    def test_ewma_converges_to_true_moments_on_stationary_trace(self, cluster, pi):
+        """Seeded with a deliberately wrong prior, the EWMA estimates must
+        converge to the cluster's true service moments on a healthy
+        stationary trace."""
+        true = cluster.moments(12.5)
+        wrong = cluster.perturbed(1.6, 0.6).moments(12.5)
+        est = EwmaMomentEstimator(prior=wrong, alpha=0.4)
+        carry = None
+        for s in range(10):
+            res, carry = simulate_segment(
+                jax.random.key(100 + s), pi, LAM, cluster, 12.5, 1500,
+                carry=carry,
+            )
+            est.update(res.obs)
+        np.testing.assert_allclose(est.m1, np.asarray(true.mean), rtol=0.08)
+        np.testing.assert_allclose(est.m2, np.asarray(true.m2), rtol=0.2)
+        np.testing.assert_allclose(est.m3, np.asarray(true.m3), rtol=0.45)
+
+    def test_fitted_shifted_exp_recovers_cluster_params(self, cluster):
+        est = EwmaMomentEstimator(prior=cluster.moments(12.5))
+        d, rate = est.fitted_shifted_exp()
+        np.testing.assert_allclose(d, np.asarray(cluster.overheads()), rtol=1e-4)
+        np.testing.assert_allclose(
+            rate, np.asarray(cluster.bandwidths()) / 12.5, rtol=1e-4
+        )
+
+    def test_rate_estimator_tracks_observed_traffic(self, cluster, pi):
+        est = EwmaRateEstimator(prior=np.asarray([0.01, 0.01]), alpha=0.6)
+        carry = None
+        for s in range(6):
+            t_start = 0.0 if carry is None else float(carry.t0)
+            res, carry = simulate_segment(
+                jax.random.key(200 + s), pi, LAM, cluster, 12.5, 2000,
+                carry=carry,
+            )
+            est.update(res.file_id, float(res.t_end) - t_start)
+        np.testing.assert_allclose(est.rates, np.asarray(LAM), rtol=0.15)
+
+
+class TestRegistry:
+    def test_registry_has_at_least_five_wellformed_scenarios(self):
+        names = scenario_names()
+        assert len(names) >= 5
+        for spec in all_scenarios():
+            spec.validate(12)
+            assert spec.description and spec.probes and spec.expected
+
+    def test_canned_names_present(self):
+        for name in ("steady-state", "node-failure", "flash-crowd"):
+            assert name in scenario_names()
+
+    def test_scaled_preserves_schedule(self):
+        spec = get_scenario("node-failure")
+        small = spec.scaled(0.1)
+        assert small.n_segments == spec.n_segments
+        assert small.failures == spec.failures
+        assert small.requests_per_segment < spec.requests_per_segment
+
+    def test_unknown_scenario_and_policy_raise(self):
+        with pytest.raises(KeyError):
+            get_scenario("no-such-scenario")
+        with pytest.raises(ValueError):
+            run_scenario(get_scenario("steady-state"), "clairvoyant")
+
+    def test_validate_rejects_malformed(self):
+        bad = dataclasses.replace(
+            get_scenario("steady-state"), rate_trace=(1.0, 1.0)
+        )
+        with pytest.raises(ValueError):
+            bad.validate(12)
+        bad = dataclasses.replace(
+            get_scenario("steady-state"),
+            failures=tuple((j, 0, 3) for j in range(8)),
+        )
+        with pytest.raises(ValueError):
+            bad.validate(12)
+
+
+class TestClosedLoop:
+    @pytest.fixture(scope="class")
+    def failure_outcomes(self):
+        spec = get_scenario("node-failure").scaled(0.4)
+        outs = run_all_policies(spec, seed=0)
+        return {o.policy: o for o in outs}
+
+    def test_all_policies_run(self, failure_outcomes):
+        assert set(failure_outcomes) == set(POLICIES)
+        for o in failure_outcomes.values():
+            assert np.isfinite(o.mean) and np.isfinite(o.p99)
+            assert o.seg_mean.shape == (8,)
+
+    def test_adaptive_beats_oblivious_on_failure(self, failure_outcomes):
+        assert (
+            failure_outcomes["adaptive"].mean < failure_outcomes["oblivious"].mean
+        )
+
+    def test_adaptive_beats_static_prefailure_plan(self, failure_outcomes):
+        """The ISSUE acceptance claim: closed-loop adaptive re-planning
+        beats the static plan computed from pre-failure moments."""
+        assert (
+            failure_outcomes["adaptive"].mean < failure_outcomes["static"].mean
+        )
+
+    def test_adaptive_routes_around_dead_node(self, failure_outcomes):
+        """Re-planning removes the dead node from pi, so adaptive sees
+        (almost) no degraded reads while static keeps hitting it."""
+        assert failure_outcomes["adaptive"].degraded_frac < 0.01
+        assert failure_outcomes["static"].degraded_frac > 0.1
+        assert failure_outcomes["adaptive"].replans > 0
+        assert failure_outcomes["static"].replans == 0

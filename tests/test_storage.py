@@ -215,6 +215,18 @@ class TestSimulator:
         per_file = res.per_file_mean(r)
         assert np.isfinite(np.asarray(per_file)).all()
 
+    def test_per_file_mean_nan_for_unrequested_files(self):
+        """Contract: files with zero requests get NaN, not a 0-count mean."""
+        cl = homogeneous_cluster(5)
+        pi = jnp.full((3, 5), 3 / 5)
+        # file 2 has (essentially) zero arrival rate -> no requests
+        lam = jnp.asarray([1 / 40.0, 1 / 50.0, 1e-12])
+        res = simulate(jax.random.key(7), pi, lam, cl, 12.5, 3000)
+        assert not (np.asarray(res.file_id) == 2).any()
+        per_file = np.asarray(res.per_file_mean(3))
+        assert np.isfinite(per_file[:2]).all()
+        assert np.isnan(per_file[2])
+
     def test_utilisation_matches_theory(self):
         cl = homogeneous_cluster(5)
         pi = jnp.full((1, 5), 3 / 5)

@@ -1,0 +1,67 @@
+"""Docs consistency checker (CI `docs` job; stdlib only).
+
+Fails (exit 1) when any markdown file in ``docs/`` or the top-level
+``README.md`` / ``ROADMAP.md`` contains:
+
+* a relative markdown link ``[text](path)`` whose target does not exist
+  (anchors are stripped; http(s)/mailto links are ignored), or
+* a backtick-quoted repo path reference (``src/...``, ``benchmarks/...``,
+  ``docs/...``, ``tests/...``, ``examples/...``, ``tools/...``) that does
+  not exist on disk.
+
+Keeps the "documentation maps back to the code" guarantee honest: renames
+and refactors that orphan a doc reference break CI instead of rotting.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# `src/repro/core/jlcm.py`, ``benchmarks/scenario_suite.py`` etc.
+PATH_REF = re.compile(
+    r"`{1,2}((?:src|benchmarks|docs|tests|examples|tools)/[A-Za-z0-9_./-]+)`{1,2}"
+)
+
+
+def doc_files() -> list[Path]:
+    files = [REPO / "README.md", REPO / "ROADMAP.md"]
+    files += sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    text = md.read_text()
+    for link in LINK.findall(text):
+        if link.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        target = link.split("#")[0]
+        if not target:
+            continue
+        resolved = (md.parent / target).resolve()
+        if not resolved.exists():
+            errors.append(f"{md.relative_to(REPO)}: broken link -> {link}")
+    for ref in PATH_REF.findall(text):
+        target = REPO / ref.rstrip(".")  # tolerate trailing sentence dots
+        if not target.exists():
+            errors.append(f"{md.relative_to(REPO)}: dead path reference -> {ref}")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    files = doc_files()
+    for md in files:
+        errors.extend(check_file(md))
+    for e in errors:
+        print(f"ERROR: {e}")
+    print(f"check_docs: {len(files)} files, {len(errors)} errors")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
