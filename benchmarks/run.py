@@ -18,6 +18,7 @@ MODULES = [
     "jlcm_scaling",
     "serving_hedge",
     "scenario_suite",
+    "tenant_tradeoff",
     "checkpoint_catalogs",
 ]
 

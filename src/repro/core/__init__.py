@@ -20,11 +20,23 @@ from .latency_bound import (
     optimal_shared_z,
     optimal_z,
     shared_z_latency,
+    tail_probability_bounds,
+)
+from .objectives import (
+    ObjectiveSpec,
+    class_mean_bounds,
+    class_tail_bounds,
+    compose_file_bounds,
+    composed_latency,
+    empirical_objective,
+    make_objective,
+    refresh_shared_z,
 )
 from .projection import feasible_uniform, project_capped_simplex
 from .queueing import (
     ServiceMoments,
     exponential_moments,
+    fit_shifted_exponential,
     node_arrival_rates,
     pk_sojourn_moments,
     shifted_exponential_moments,

@@ -34,6 +34,14 @@ Batching: :func:`solve_batch` vmaps the device-resident loop over a stacked
 leading axis of problems (shared (r, m) shape; ``lam``/``theta``/``cost``/
 ``moments``/``k``/``mask`` may all vary), so a whole theta- or lambda-sweep
 is one jitted call.
+
+Objective: the latency term is pluggable (``core/objectives.py``). A
+:class:`JLCMProblem` may carry an :class:`ObjectiveSpec` — per-file tenant
+classes, per-class weights, optional per-class tail deadlines — and every
+mode/batch path optimizes the composed convex objective instead of the
+paper's single request-weighted mean; objective *values* may vary across a
+stacked batch (the tenant-tradeoff sweep), only the structure must match.
+``objective=None`` is the paper's scalar objective, bit-for-bit.
 """
 from __future__ import annotations
 
@@ -45,10 +53,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax import Array
 
-from .latency_bound import (
-    file_latency_bounds,
-    optimal_shared_z,
-    shared_z_latency,
+from .latency_bound import file_latency_bounds
+from .objectives import (
+    ObjectiveSpec,
+    class_mean_bounds,
+    class_tail_bounds,
+    compose_file_bounds,
+    composed_latency,
+    refresh_shared_z,
 )
 from .projection import feasible_uniform, project_capped_simplex
 from .queueing import (
@@ -69,6 +81,9 @@ class JLCMProblem(NamedTuple):
     cost: Array  # (m,) per-chunk storage price V_j
     theta: float | Array  # tradeoff factor (sec/dollar)
     mask: Array | None = None  # (r, m) optional allowed-placement support
+    # pluggable objective (core/objectives.py): per-class weighted mean +
+    # tail-probability terms; None = the paper's uniform mean, bit-for-bit
+    objective: ObjectiveSpec | None = None
 
     @property
     def r(self) -> int:
@@ -82,13 +97,16 @@ class JLCMProblem(NamedTuple):
 class JLCMSolution(NamedTuple):
     pi: Array  # (r, m) dispatch probabilities
     z: Array  # shared auxiliary variable at optimum
-    objective: Array  # latency + theta * true (indicator) cost
-    latency: Array  # shared-z mean latency bound
-    latency_tight: Array  # per-file-z mean latency bound (reporting)
+    objective: Array  # composed latency + theta * true (indicator) cost
+    latency: Array  # shared-z composed latency objective value
+    latency_tight: Array  # per-file-z composed objective (reporting)
     cost: Array  # true storage cost sum_i sum_{S_i} V_j
     n: Array  # (r,) chosen code lengths n_i
     placement: Array  # (r, m) boolean S_i
     objective_trace: Array  # per-iteration smoothed objective (monitoring)
+    # per-class reporting, present iff the problem carried an ObjectiveSpec:
+    class_latency: Array | None = None  # (C,) per-class tight mean bounds
+    class_tail: Array | None = None  # (C,) per-class P[T_c > d_c] bounds
 
 
 def _true_cost(pi: Array, cost: Array, tol: float = SUPPORT_TOL) -> Array:
@@ -109,9 +127,13 @@ def _linearized_cost(pi: Array, pi_ref: Array, cost: Array, beta: float) -> Arra
 
 
 def _latency_term(pi: Array, z: Array, prob: JLCMProblem) -> Array:
-    lat = shared_z_latency(pi, z, prob.lam, prob.moments)
+    lat = composed_latency(pi, z, prob.lam, prob.moments, prob.objective)
     rates = node_arrival_rates(pi, prob.lam)
     return lat + stability_penalty(rates, prob.moments)
+
+
+def _refresh_z(pi: Array, prob: JLCMProblem) -> Array:
+    return refresh_shared_z(pi, prob.lam, prob.moments, prob.objective)
 
 
 def smoothed_objective(pi: Array, z: Array, prob: JLCMProblem, beta: float) -> Array:
@@ -168,7 +190,7 @@ def _device_merged_loop(
     Returns (pi, z, trace, iters); trace is NaN beyond entry `iters`.
     """
     pi = project_capped_simplex(pi, prob.k, mask)
-    z = optimal_shared_z(pi, prob.lam, prob.moments)
+    z = _refresh_z(pi, prob)
     prev = smoothed_objective(pi, z, prob, beta)
 
     g0 = jnp.max(jnp.abs(_merged_grad(pi, z, prob, beta)))
@@ -194,7 +216,7 @@ def _device_merged_loop(
 
         def attempt(step_lr):
             p = project_capped_simplex(s.pi - step_lr * g, prob.k, mask)
-            zz = optimal_shared_z(p, prob.lam, prob.moments)
+            zz = _refresh_z(p, prob)
             return p, zz, smoothed_objective(p, zz, prob, beta)
 
         def backtrack(_):
@@ -240,14 +262,25 @@ def _device_merged_loop(
 
 def _finalize(pi: Array, z: Array, prob: JLCMProblem, trace: Array) -> JLCMSolution:
     """Read the solution (Lemma 4 support extraction + reporting bounds)."""
+    spec = prob.objective
     placement = pi > SUPPORT_TOL
     n = jnp.sum(placement, axis=-1)
     rates = node_arrival_rates(pi, prob.lam)
     eq, varq = pk_sojourn_moments(rates, prob.moments)
-    t = file_latency_bounds(pi, eq[..., None, :], varq[..., None, :])
-    tight = jnp.sum(prob.lam * t, axis=-1) / jnp.sum(prob.lam, axis=-1)
-    latency = shared_z_latency(pi, z, prob.lam, prob.moments)
+    eq_b, varq_b = eq[..., None, :], varq[..., None, :]
+    t = file_latency_bounds(pi, eq_b, varq_b)
+    tight = compose_file_bounds(t, pi, eq_b, varq_b, prob.lam, spec)
+    latency = composed_latency(pi, z, prob.lam, prob.moments, spec)
     cost = _true_cost(pi, prob.cost)
+    class_latency = class_tail = None
+    # per-class reporting needs a statically-sized class axis: any of the
+    # per-class arrays provides it (a spec with none of them set is a pure
+    # fold-through and reports like the scalar objective)
+    if spec is not None and (
+        spec.weight is not None or spec.deadline is not None
+    ):
+        class_latency = class_mean_bounds(t, prob.lam, spec)
+        class_tail = class_tail_bounds(pi, eq_b, varq_b, prob.lam, spec)
     return JLCMSolution(
         pi=pi,
         z=z,
@@ -258,6 +291,8 @@ def _finalize(pi: Array, z: Array, prob: JLCMProblem, trace: Array) -> JLCMSolut
         n=n,
         placement=placement,
         objective_trace=trace,
+        class_latency=class_latency,
+        class_tail=class_tail,
     )
 
 
@@ -324,7 +359,7 @@ def _merged_step(
     (the paper's single-loop speedup for large r)."""
     g = _merged_grad(pi, z, prob, beta)
     pi = project_capped_simplex(pi - lr * g, prob.k, mask)
-    z = optimal_shared_z(pi, prob.lam, prob.moments)
+    z = _refresh_z(pi, prob)
     obj = smoothed_objective(pi, z, prob, beta)
     return pi, z, obj, jnp.max(jnp.abs(g))
 
@@ -342,7 +377,7 @@ def _solve_host_loop(
     eps: float,
     verbose: bool,
 ) -> JLCMSolution:
-    z = optimal_shared_z(pi, prob.lam, prob.moments)
+    z = _refresh_z(pi, prob)
     trace = []
     prev = smoothed_objective(pi, z, prob, beta)
     trace.append(float(prev))
@@ -381,7 +416,7 @@ def _solve_host_loop(
             pi = _inner_pgd(
                 pi, z, pi, prob, mask, beta=beta, inner_steps=inner_steps, lr=lr
             )
-            z = optimal_shared_z(pi, prob.lam, prob.moments)
+            z = _refresh_z(pi, prob)
             obj = smoothed_objective(pi, z, prob, beta)
         trace.append(float(obj))
         if verbose and t % 20 == 0:
@@ -460,9 +495,13 @@ def solve(
 def stack_problems(probs: Sequence[JLCMProblem]) -> JLCMProblem:
     """Stack problems with a shared (r, m) shape along a new leading axis.
 
-    ``lam``/``k``/``theta``/``cost``/``moments`` may vary per problem; a
-    ``mask`` of ones is substituted where a problem has ``mask=None`` (all
-    placements allowed).
+    ``lam``/``k``/``theta``/``cost``/``moments`` may vary per problem — and
+    so may the values inside an :class:`ObjectiveSpec` (class weights,
+    deadlines, tail weights: the tenant-tradeoff sweep stacks exactly
+    those) — but every problem must carry the same objective *structure*
+    (same class count, same None-ness of the optional fields), since the
+    stacked batch is one vmapped XLA program. A ``mask`` of ones is
+    substituted where a problem has ``mask=None`` (all placements allowed).
     """
     probs = list(probs)
     if not probs:
@@ -473,6 +512,21 @@ def stack_problems(probs: Sequence[JLCMProblem]) -> JLCMProblem:
             raise ValueError(
                 f"all problems must share (r, m): got {(p.r, p.m)} vs {(r, m)}"
             )
+    specs = [p.objective for p in probs]
+    if any(s is None for s in specs) and not all(s is None for s in specs):
+        raise ValueError(
+            "cannot stack problems mixing objective=None with ObjectiveSpec; "
+            "give every problem a spec (uniform: weight=None, deadline=None) "
+            "or none"
+        )
+    if specs[0] is not None:
+        shape0 = tuple(None if f is None else f.shape for f in specs[0])
+        for s in specs[1:]:
+            if tuple(None if f is None else f.shape for f in s) != shape0:
+                raise ValueError(
+                    "all problems must share the objective structure "
+                    "(class count and which optional fields are set)"
+                )
     normalized = [
         p._replace(
             theta=jnp.asarray(p.theta, jnp.float32),

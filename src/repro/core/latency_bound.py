@@ -11,8 +11,19 @@ minimizing z is found by bisection on the derivative:
   d/dz = 1 - sum_j pi_ij/2 - sum_j (pi_ij/2) (E[Q_j]-z)/sqrt((E[Q_j]-z)^2+Var)
 
 which is nondecreasing in z, -> 1 - k_i as z -> -inf and -> 1 as z -> +inf,
-so a root exists whenever k_i >= 1 (for k_i == 1 the infimum is approached
-as z -> -inf and equals E-weighted E[Q]; the bisection floor handles it).
+so a root exists whenever k_i > 1. For k_i == 1 the derivative is strictly
+positive at every finite z (r < 1 whenever Var[Q] > 0), the infimum is only
+approached as z -> -inf, and its value is the closed form
+``sum_j pi_ij E[Q_j]`` — handled by an explicit branch in :func:`optimal_z`
+/ :func:`file_latency_bounds` rather than implicitly by the bisection
+floor.
+
+Beyond the paper's mean bound, :func:`tail_probability_bounds` gives the
+z-parameterized tail bound ``P[T_i > d]`` from the same order-statistic
+machinery (used by the pluggable objective layer, ``core/objectives.py``),
+and :func:`shared_z_latency` / :func:`optimal_shared_z` accept optional
+per-file weights for differentiated (multi-tenant) mean latency in the
+style of arXiv:1602.05551.
 
 Everything is vectorized over files and jit-friendly.
 """
@@ -23,6 +34,9 @@ import jax.numpy as jnp
 from jax import Array
 
 from .queueing import ServiceMoments, node_arrival_rates, pk_sojourn_moments
+
+# sum_j pi_ij within this of 1 counts as k_i == 1 (z-infimum edge case)
+K1_TOL = 1e-3
 
 
 def bound_given_z(pi: Array, eq: Array, varq: Array, z: Array) -> Array:
@@ -43,10 +57,19 @@ def _dbound_dz(pi: Array, eq: Array, varq: Array, z: Array) -> Array:
 def optimal_z(
     pi: Array, eq: Array, varq: Array, *, iters: int = 80
 ) -> Array:
-    """Per-file minimizing z via bisection on the (monotone) derivative."""
+    """Per-file minimizing z via bisection on the (monotone) derivative.
+
+    ``k_i == 1`` (``sum_j pi_ij`` within :data:`K1_TOL` of 1) is handled by
+    an explicit branch: the derivative is then strictly positive at every
+    finite z, no root exists, and the minimizing z is the bisection *floor*
+    (the infimum is approached as z -> -inf). Relying on 80 halvings to
+    crawl back to the floor is what the module docstring used to call the
+    implicit handling; the branch makes it exact and iteration-independent.
+    """
     scale = jnp.max(eq) + jnp.sqrt(jnp.max(varq)) + 1.0
     batch = pi.shape[:-1]
-    lo = jnp.full(batch, -64.0) * scale
+    floor = jnp.full(batch, -64.0) * scale
+    lo = floor
     hi = jnp.full(batch, 4.0) * scale
 
     def step(_, carry):
@@ -58,13 +81,75 @@ def optimal_z(
         return lo, hi
 
     lo, hi = jax.lax.fori_loop(0, iters, step, (lo, hi))
-    return 0.5 * (lo + hi)
+    k = jnp.sum(pi, axis=-1)
+    return jnp.where(k <= 1.0 + K1_TOL, floor, 0.5 * (lo + hi))
 
 
 def file_latency_bounds(pi: Array, eq: Array, varq: Array) -> Array:
-    """Tightest per-file bound: min_z of Eq. (5). pi: (r, m) -> (r,)."""
+    """Tightest per-file bound: min_z of Eq. (5). pi: (r, m) -> (r,).
+
+    For ``k_i == 1`` files the minimum over z is not attained: the bound
+    decreases monotonically toward ``sum_j pi_ij E[Q_j]`` as z -> -inf
+    (every z still upper-bounds E[T_i], so the infimum does too — and for
+    k = 1 it is exact: the request reads one node drawn with marginals pi).
+    That closed form is returned directly instead of evaluating Eq. (5) at
+    the bisection floor.
+    """
     z = optimal_z(pi, eq, varq)
-    return bound_given_z(pi, eq, varq, z)
+    bound = bound_given_z(pi, eq, varq, z)
+    k = jnp.sum(pi, axis=-1)
+    inf_k1 = jnp.sum(pi * eq, axis=-1)
+    return jnp.where(k <= 1.0 + K1_TOL, inf_k1, bound)
+
+
+def tail_probability_bounds(
+    pi: Array, eq: Array, varq: Array, deadline: Array, *, iters: int = 54
+) -> Array:
+    """Upper bound on the per-file tail probability P[T_i > d_i].
+
+    From the Lemma-2 machinery: for any z < d,
+
+      T_i <= z + sum_{j in A_i} (Q_j - z)^+   and   Markov on (T_i - z)^+
+      give   P[T_i > d] <= sum_j pi_ij E[(Q_j - z)^+] / (d - z)
+                        <= N_i(z) / (d - z),
+
+    with ``N_i(z) = sum_j (pi_ij/2) [(E[Q_j] - z) + sqrt((E[Q_j]-z)^2 +
+    Var[Q_j])]`` — exactly the Eq.-(5) body. N is convex nonnegative and
+    ``d - z`` affine positive, so the ratio is quasiconvex in z; the
+    minimizing z is found by golden-section search (batch-safe
+    ``fori_loop``), and the returned value uses ``stop_gradient`` on z* so
+    gradients w.r.t. ``pi``/moments follow the envelope theorem. This is
+    the tail-objective primitive of arXiv:1703.08337's regime, expressed
+    with the probabilistic-scheduling bound of this paper.
+
+    Shapes follow :func:`file_latency_bounds`: ``pi`` (..., r, m), ``eq`` /
+    ``varq`` broadcastable against it, ``deadline`` (..., r) -> (..., r).
+    Values above 1 are vacuous (clip at reporting sites, not here — the
+    raw value keeps gradients alive for the optimizer).
+    """
+    deadline = jnp.asarray(deadline)
+
+    def excess(z: Array) -> Array:
+        x = eq - z[..., None]
+        return jnp.sum(0.5 * pi * (x + jnp.sqrt(x**2 + varq)), axis=-1)
+
+    scale = jnp.max(eq) + jnp.sqrt(jnp.max(varq)) + 1.0
+    lo = deadline - 64.0 * scale
+    hi = deadline - 1e-6 * scale
+    invphi = 0.6180339887498949  # 1/phi
+
+    def step(_, carry):
+        lo, hi = carry
+        a = hi - invphi * (hi - lo)
+        b = lo + invphi * (hi - lo)
+        fa = excess(a) / (deadline - a)
+        fb = excess(b) / (deadline - b)
+        shrink_hi = fa < fb  # minimum is left of b
+        return jnp.where(shrink_hi, lo, a), jnp.where(shrink_hi, b, hi)
+
+    lo, hi = jax.lax.fori_loop(0, iters, step, (lo, hi))
+    z = jax.lax.stop_gradient(0.5 * (lo + hi))
+    return excess(z) / (deadline - z)
 
 
 def mean_latency_bound(
@@ -82,7 +167,12 @@ def mean_latency_bound(
 
 
 def shared_z_latency(
-    pi: Array, z: Array, lam: Array, moments: ServiceMoments
+    pi: Array,
+    z: Array,
+    lam: Array,
+    moments: ServiceMoments,
+    *,
+    weights: Array | None = None,
 ) -> Array:
     """JLCM relaxation, Eq. (9) latency part, with one z for all files:
 
@@ -91,27 +181,51 @@ def shared_z_latency(
     with X_j = E[Q_j] - z, Y_j = Var[Q_j]. Follows from folding
     sum_i (lam_i/lam_hat) pi_ij = Lambda_j / lam_hat. Batch-safe:
     pi (..., r, m), z (...,), lam (..., r) -> (...,).
+
+    ``weights`` (..., r) generalizes to the *differentiated* weighted mean
+    ``sum_i (w_i lam_i / W) T_i`` with ``W = sum_i w_i lam_i``
+    (arXiv:1602.05551): the fold becomes ``sum_i w_i lam_i pi_ij / W``
+    while the P-K sojourn moments keep using the TRUE arrival rates — the
+    queues see every request regardless of how the objective weighs it.
+    ``weights=None`` is exactly the paper's uniform objective.
     """
     lam = jnp.asarray(lam)
     z = jnp.asarray(z)
-    lam_hat = jnp.sum(lam, axis=-1)
     node_rates = node_arrival_rates(pi, lam)
     eq, varq = pk_sojourn_moments(node_rates, moments)
+    if weights is None:
+        wlam, fold = lam, node_rates
+    else:
+        wlam = lam * jnp.asarray(weights)
+        fold = node_arrival_rates(pi, wlam)
+    lam_hat = jnp.sum(wlam, axis=-1)
     x = eq - z[..., None]
-    body = node_rates / (2.0 * lam_hat[..., None]) * (x + jnp.sqrt(x**2 + varq))
+    body = fold / (2.0 * lam_hat[..., None]) * (x + jnp.sqrt(x**2 + varq))
     return z + jnp.sum(body, axis=-1)
 
 
 def optimal_shared_z(
-    pi: Array, lam: Array, moments: ServiceMoments, *, iters: int = 80
+    pi: Array,
+    lam: Array,
+    moments: ServiceMoments,
+    *,
+    weights: Array | None = None,
+    iters: int = 80,
 ) -> Array:
     """Minimize Eq. (9) over the single auxiliary z (convex; bisection).
 
     Batch-safe: pi (..., r, m), lam (..., r) -> z of shape (...,).
+    ``weights`` matches :func:`shared_z_latency`: the minimized objective
+    is the weighted fold, the queue moments stay on true rates.
     """
     lam = jnp.asarray(lam)
-    lam_hat = jnp.sum(lam, axis=-1)
     node_rates = node_arrival_rates(pi, lam)
     eq, varq = pk_sojourn_moments(node_rates, moments)
-    w = node_rates / lam_hat[..., None]  # plays the role of pi in the bound
+    if weights is None:
+        wlam, fold = lam, node_rates
+    else:
+        wlam = lam * jnp.asarray(weights)
+        fold = node_arrival_rates(pi, wlam)
+    lam_hat = jnp.sum(wlam, axis=-1)
+    w = fold / lam_hat[..., None]  # plays the role of pi in the bound
     return optimal_z(w, eq, varq, iters=iters)

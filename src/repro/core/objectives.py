@@ -1,0 +1,312 @@
+"""Pluggable objective layer: convex compositions of per-class objectives.
+
+The paper optimizes ONE scalar — the request-weighted *mean* latency bound
+(Lemma 2 / Eq. 5) plus theta x storage cost. The same probabilistic-
+scheduling machinery supports differentiated per-tenant latency
+(arXiv:1602.05551: weighted per-class means through traffic engineering)
+and tail-latency objectives (arXiv:1703.08337: P[T > d] for erasure-coded
+reads). This module makes the objective a *value*, not a hard-coded
+formula: an :class:`ObjectiveSpec` travels inside :class:`~.jlcm.
+JLCMProblem` as a pytree, so the device-resident ``lax.while_loop`` solver,
+``solve_batch``/``stack_problems``, the simulator's per-class reporting,
+and the adaptive replanner's rollout scoring all consume the same spec.
+
+The composed latency objective is
+
+    F(pi, z) =  sum_i (w_{c_i} lam_i / W) T_i-bound(z)          (weighted mean)
+             +  sum_c  tw_c * P-bound[T_c > d_c]                (tail terms)
+
+with ``W = sum_i w_{c_i} lam_i`` and the per-class tail the request-rate-
+weighted average of per-file tail bounds. Both terms are convex in pi for
+the z-parameterizations used (see ``latency_bound.py``), so the DC-
+programming outer loop of Algorithm JLCM is unchanged — only its latency
+term is composed differently.
+
+Exactness contract: with ``spec=None`` (or uniform weights and no
+deadlines) every function below reproduces the single-objective code paths
+bit-for-bit — ``weights=None`` short-circuits to the original fold, and
+absent deadlines (``deadline=None`` statically) skip the tail computation
+entirely, so uniform problems pay zero overhead.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+from .latency_bound import (
+    optimal_shared_z,
+    shared_z_latency,
+    tail_probability_bounds,
+)
+from .queueing import ServiceMoments, node_arrival_rates, pk_sojourn_moments
+
+
+class ObjectiveSpec(NamedTuple):
+    """Declarative multi-tenant objective: who counts how much, and how.
+
+    ``class_id``    (r,) int32 — tenant/service class of each file.
+    ``weight``      (C,) or None — per-class weights for the weighted-mean
+                    term; ``None`` means uniform (the paper's objective,
+                    bit-for-bit).
+    ``deadline``    (C,) or None — per-class tail deadlines d_c. ``None``
+                    statically disables the tail terms (zero compute);
+                    ``inf`` entries disable single classes inside an
+                    otherwise tail-bearing spec.
+    ``tail_weight`` (C,) or None — weight tw_c on each class's
+                    P[T_c > d_c] bound. Must be present iff ``deadline``
+                    is.
+
+    The spec is a pytree of arrays: it stacks under
+    :func:`~.jlcm.stack_problems`, vmaps under ``solve_batch``, and lives
+    inside jitted solver state. All problems in one batch must share the
+    *structure* (same C, same None-ness of the optional fields).
+    """
+
+    class_id: Array
+    weight: Array | None = None
+    deadline: Array | None = None
+    tail_weight: Array | None = None
+
+    @property
+    def r(self) -> int:
+        return self.class_id.shape[-1]
+
+    @property
+    def n_classes(self) -> int:
+        for field in (self.weight, self.deadline, self.tail_weight):
+            if field is not None:
+                return field.shape[-1]
+        # no per-class array to read C from; only possible on concrete specs
+        # built by hand (make_objective always materializes `weight`)
+        return int(np.max(np.asarray(self.class_id))) + 1
+
+    def file_weights(self) -> Array | None:
+        """Per-file weights w_{c_i}, shape (r,); None when uniform."""
+        if self.weight is None:
+            return None
+        return self.weight[self.class_id]
+
+    def file_deadlines(self) -> Array | None:
+        """Per-file deadlines d_{c_i}, shape (r,); None when no tail terms."""
+        if self.deadline is None:
+            return None
+        return self.deadline[self.class_id]
+
+    def validate(self) -> None:
+        if (self.deadline is None) != (self.tail_weight is None):
+            raise ValueError(
+                "deadline and tail_weight must be both present or both None"
+            )
+        cid = np.asarray(self.class_id)
+        if cid.ndim != 1:
+            raise ValueError(f"class_id must be (r,), got {cid.shape}")
+        c = self.n_classes
+        if cid.min() < 0 or cid.max() >= c:
+            raise ValueError(
+                f"class ids must lie in [0, {c}), got [{cid.min()}, {cid.max()}]"
+            )
+        for field, label in ((self.weight, "weight"),
+                             (self.deadline, "deadline"),
+                             (self.tail_weight, "tail_weight")):
+            if field is not None and field.shape[-1] != c:
+                raise ValueError(
+                    f"{label} has {field.shape[-1]} classes, expected {c}"
+                )
+        if self.weight is not None and (np.asarray(self.weight) <= 0).any():
+            raise ValueError("class weights must be positive")
+        if self.deadline is not None and (np.asarray(self.deadline) <= 0).any():
+            raise ValueError("deadlines must be positive (use inf to disable)")
+        if self.tail_weight is not None and (
+            np.asarray(self.tail_weight) < 0
+        ).any():
+            raise ValueError("tail weights must be >= 0 (0 disables the term)")
+
+
+def make_objective(
+    class_id: Sequence[int] | Array,
+    weight: Sequence[float] | None = None,
+    deadline: Sequence[float] | None = None,
+    tail_weight: Sequence[float] | None = None,
+) -> ObjectiveSpec:
+    """Build a validated :class:`ObjectiveSpec` from plain sequences.
+
+    ``deadline`` entries may be ``inf`` (or ``None`` inside the sequence)
+    to disable the tail term for single classes; passing ``deadline``
+    without ``tail_weight`` defaults every tail weight to 1 for classes
+    with a finite deadline, 0 otherwise. ``weight=None`` materializes
+    uniform weights (the class count must be statically readable from some
+    per-class array once the spec is inside a jitted solver).
+    """
+    cid = jnp.asarray(class_id, jnp.int32)
+    if weight is None:
+        n_classes = int(np.max(np.asarray(cid))) + 1
+        weight = np.ones((n_classes,), np.float32)
+    w = jnp.asarray(weight, jnp.float32)
+    d = None
+    if deadline is not None:
+        d = jnp.asarray(
+            [np.inf if v is None else float(v) for v in deadline], jnp.float32
+        )
+        if tail_weight is None:
+            tail_weight = np.where(np.isfinite(np.asarray(d)), 1.0, 0.0)
+    tw = None if tail_weight is None else jnp.asarray(tail_weight, jnp.float32)
+    spec = ObjectiveSpec(class_id=cid, weight=w, deadline=d, tail_weight=tw)
+    spec.validate()
+    return spec
+
+
+def _class_sums(class_id: Array, values: Array, n_classes: int) -> Array:
+    """Segment-sum of per-file ``values`` into (C,) per-class totals."""
+    onehot = (class_id[..., None] == jnp.arange(n_classes)).astype(values.dtype)
+    return jnp.sum(onehot * values[..., None], axis=-2)
+
+
+def class_tail_bounds(
+    pi: Array, eq: Array, varq: Array, lam: Array, spec: ObjectiveSpec
+) -> Array | None:
+    """Per-class tail bounds, (C,): request-rate-weighted over the class.
+
+    ``P-bound[T_c > d_c] = sum_{i in c} lam_i tail_i / sum_{i in c} lam_i``
+    with per-file ``tail_i`` from :func:`tail_probability_bounds` at the
+    class deadline. Infinite deadlines are computed against a safe finite
+    stand-in and masked to exactly 0 afterwards (keeps gradients NaN-free).
+    Returns None when the spec has no tail terms.
+    """
+    if spec.deadline is None:
+        return None
+    d_file = spec.file_deadlines()
+    finite = jnp.isfinite(d_file)
+    d_safe = jnp.where(finite, d_file, 1.0)
+    tails = tail_probability_bounds(pi, eq, varq, d_safe)
+    tails = jnp.where(finite, tails, 0.0)
+    num = _class_sums(spec.class_id, lam * tails, spec.n_classes)
+    den = _class_sums(spec.class_id, lam, spec.n_classes)
+    return num / jnp.maximum(den, 1e-12)
+
+
+def tail_penalty(
+    pi: Array, eq: Array, varq: Array, lam: Array, spec: ObjectiveSpec
+) -> Array:
+    """``sum_c tw_c * P-bound[T_c > d_c]``; 0.0 when the spec has no tails."""
+    per_class = class_tail_bounds(pi, eq, varq, lam, spec)
+    if per_class is None:
+        return jnp.asarray(0.0, jnp.float32)
+    active = jnp.logical_and(jnp.isfinite(spec.deadline), spec.tail_weight > 0)
+    return jnp.sum(jnp.where(active, spec.tail_weight * per_class, 0.0), axis=-1)
+
+
+def composed_latency(
+    pi: Array,
+    z: Array,
+    lam: Array,
+    moments: ServiceMoments,
+    spec: ObjectiveSpec | None,
+) -> Array:
+    """The solver-facing latency objective at shared auxiliary z.
+
+    Weighted shared-z mean (Eq. 9 fold, weighted per arXiv:1602.05551) plus
+    the tail penalty. The tail terms carry their own per-file auxiliary z
+    (optimized internally, see ``tail_probability_bounds``), so the shared
+    z only parameterizes the mean term — exactly the existing solver state.
+    ``spec=None`` IS ``shared_z_latency``: same ops, bit-for-bit.
+    """
+    if spec is None:
+        return shared_z_latency(pi, z, lam, moments)
+    mean_term = shared_z_latency(
+        pi, z, lam, moments, weights=spec.file_weights()
+    )
+    if spec.deadline is None:
+        return mean_term
+    rates = node_arrival_rates(pi, lam)
+    eq, varq = pk_sojourn_moments(rates, moments)
+    return mean_term + tail_penalty(
+        pi, eq[..., None, :], varq[..., None, :], lam, spec
+    )
+
+
+def refresh_shared_z(
+    pi: Array, lam: Array, moments: ServiceMoments, spec: ObjectiveSpec | None
+) -> Array:
+    """argmin_z of :func:`composed_latency` — the solver's z-refresh step.
+
+    The tail penalty does not depend on the shared z, so minimizing the
+    (weighted) mean term alone is exact, not an approximation.
+    """
+    if spec is None:
+        return optimal_shared_z(pi, lam, moments)
+    return optimal_shared_z(pi, lam, moments, weights=spec.file_weights())
+
+
+def compose_file_bounds(
+    t_files: Array,
+    pi: Array,
+    eq: Array,
+    varq: Array,
+    lam: Array,
+    spec: ObjectiveSpec | None,
+) -> Array:
+    """Composed objective value from per-file *tight* bounds (reporting).
+
+    Mirrors :func:`composed_latency` but with the per-file-z Lemma-2 bounds
+    ``t_files`` in place of the shared-z relaxation — the tightest value of
+    the composed objective, used for ``JLCMSolution.latency_tight`` and for
+    analytic plan scoring in the replanner.
+    """
+    lam = jnp.asarray(lam)
+    if spec is None:
+        return jnp.sum(lam * t_files, axis=-1) / jnp.sum(lam, axis=-1)
+    wf = spec.file_weights()
+    wlam = lam if wf is None else lam * wf
+    mean_term = jnp.sum(wlam * t_files, axis=-1) / jnp.sum(wlam, axis=-1)
+    if spec.deadline is None:
+        return mean_term
+    return mean_term + tail_penalty(pi, eq, varq, lam, spec)
+
+
+def class_mean_bounds(
+    t_files: Array, lam: Array, spec: ObjectiveSpec
+) -> Array:
+    """Per-class request-weighted mean of per-file bounds, shape (C,)."""
+    lam = jnp.asarray(lam)
+    num = _class_sums(spec.class_id, lam * t_files, spec.n_classes)
+    den = _class_sums(spec.class_id, lam, spec.n_classes)
+    return num / jnp.maximum(den, 1e-12)
+
+
+def empirical_objective(
+    latency: np.ndarray,
+    file_id: np.ndarray,
+    spec: ObjectiveSpec | None,
+) -> float:
+    """The composed objective evaluated on SIMULATED latencies (host-side).
+
+    The empirical analog of :func:`composed_latency`: per-request weights
+    ``w_{c_i}`` (request counts already carry the lam_i proportions) give
+    the weighted mean, and per-class exceedance frequencies stand in for
+    the tail bounds. Used by the adaptive replanner to score rollout
+    candidates under the SAME objective the solver optimized — a premium
+    class stays protected through re-planning decisions, not just solves.
+    """
+    latency = np.asarray(latency).ravel()
+    if spec is None:
+        return float(latency.mean())
+    file_id = np.asarray(file_id).ravel()
+    cid = np.asarray(spec.class_id)[file_id]
+    if spec.weight is None:
+        w = np.ones_like(latency)
+    else:
+        w = np.asarray(spec.weight)[cid]
+    score = float((w * latency).sum() / w.sum())
+    if spec.deadline is not None:
+        d = np.asarray(spec.deadline)
+        tw = np.asarray(spec.tail_weight)
+        for c in range(spec.n_classes):
+            if not (np.isfinite(d[c]) and tw[c] > 0):
+                continue
+            in_c = cid == c
+            if in_c.any():
+                score += float(tw[c]) * float((latency[in_c] > d[c]).mean())
+    return score

@@ -71,6 +71,29 @@ def shifted_exponential_moments(shift: Array, rate: Array) -> ServiceMoments:
     return ServiceMoments(mu=1.0 / m1, m2=m2, m3=m3)
 
 
+def fit_shifted_exponential(m1: Array, m2: Array) -> tuple[Array, Array]:
+    """Method-of-moments inverse of :func:`shifted_exponential_moments`.
+
+    Given estimates of the first two raw moments (E[X], E[X^2]) recover the
+    ``D + Exp(rate)`` parameters matching them: the exponential part carries
+    all the variance (``s = sqrt(Var[X])``, rate = 1/s) and the shift is the
+    remainder of the mean, clamped to ``D >= 0`` (a negative shift is not a
+    service time; the clamp absorbs estimation noise near D = 0).
+
+    This is the single implementation used by the control plane
+    (``serving.router.EwmaMomentEstimator.fitted_shifted_exp`` samples
+    service times from *estimated* state with it) and by tests validating
+    that it round-trips ``storage.cluster.Cluster.moments``.
+    Returns per-node ``(shift D_j, exp rate 1/s_j)``.
+    """
+    m1 = jnp.asarray(m1)
+    m2 = jnp.asarray(m2)
+    var = jnp.maximum(m2 - m1**2, 1e-9)
+    s = jnp.sqrt(var)
+    d = jnp.maximum(m1 - s, 0.0)
+    return d, 1.0 / s
+
+
 def utilisation(node_rates: Array, moments: ServiceMoments) -> Array:
     """rho_j = Lambda_j / mu_j."""
     return node_rates / moments.mu

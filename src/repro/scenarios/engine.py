@@ -16,6 +16,12 @@ Three policies, deliberately spanning the control spectrum:
   exact-simulator rollout from the live queue state under the estimated
   service family (`serving.router.AdaptiveReplanner`).
 
+All solving policies (static's one-shot plan, every adaptive re-plan, and
+the rollout scoring that arbitrates candidates) optimize the scenario's
+*composed* objective when the spec declares a tenant mix
+(``ScenarioSpec.objective()`` -> ``core.objectives.ObjectiveSpec``);
+multi-class scenarios additionally report per-class empirical mean/p99.
+
 Open-loop policies run the whole schedule as ONE nested-``lax.scan``
 device call (``simulate_segments``); the closed loop alternates compiled
 segment calls with host-side re-planning. All policies see identical
@@ -40,6 +46,7 @@ from repro.core import JLCMProblem, proportional_lb_pi, solve
 from repro.serving import AdaptiveReplanner, EwmaMomentEstimator, EwmaRateEstimator
 from repro.storage import (
     Cluster,
+    per_class_latency_stats,
     simulate_segment,
     simulate_segments,
     tahoe_testbed,
@@ -62,9 +69,12 @@ class ScenarioOutcome:
     p99: float  # overall p99 latency
     degraded_frac: float  # fraction of requests that hit a down node
     replans: int  # closed-loop re-solves performed
+    # per-tenant-class empirical stats (multi-class scenarios only)
+    class_mean: np.ndarray | None = None  # (C,)
+    class_p99: np.ndarray | None = None  # (C,)
 
     def row(self) -> dict:
-        return dict(
+        out = dict(
             scenario=self.scenario,
             policy=self.policy,
             mean=round(self.mean, 3),
@@ -73,10 +83,19 @@ class ScenarioOutcome:
             replans=self.replans,
             seg_means="|".join(f"{v:.2f}" for v in self.seg_mean),
         )
+        if self.class_mean is not None:
+            out["class_means"] = "|".join(f"{v:.2f}" for v in self.class_mean)
+            out["class_p99s"] = "|".join(f"{v:.2f}" for v in self.class_p99)
+        return out
 
 
 def initial_plan(spec: ScenarioSpec, cluster: Cluster, *, max_iters: int = 300):
-    """The pre-run JLCM plan from ground-truth healthy-cluster moments."""
+    """The pre-run JLCM plan from ground-truth healthy-cluster moments.
+
+    Solves the scenario's *composed* objective (tenant weights / deadlines
+    from ``spec.objective()``) so static and adaptive policies both start
+    from the plan the scenario actually asks for.
+    """
     mom = cluster.moments(spec.chunk_mb)
     prob = JLCMProblem(
         lam=jnp.asarray(spec.lam, jnp.float32),
@@ -84,6 +103,7 @@ def initial_plan(spec: ScenarioSpec, cluster: Cluster, *, max_iters: int = 300):
         moments=mom,
         cost=cluster.cost,
         theta=spec.theta,
+        objective=spec.objective(),
     )
     sol = solve(prob, max_iters=max_iters)
     return np.asarray(sol.pi), mom
@@ -147,6 +167,7 @@ def run_scenario(
         )
         lat = np.asarray(res.latency)  # (S, N)
         degraded = np.asarray(res.degraded)
+        fid = np.asarray(res.file_id)
     else:
         mom0 = cluster.moments(spec.chunk_mb)
         moment_est = EwmaMomentEstimator(prior=mom0)
@@ -156,12 +177,13 @@ def run_scenario(
             cost=np.asarray(cluster.cost),
             theta=spec.theta,
             estimator=moment_est,
+            objective=spec.objective(),
         )
         # same per-segment keys as the device path splits internally
         seg_keys = jax.random.split(key, n_seg)
         rollout_keys = jax.random.split(jax.random.key(seed + 0x5EED), n_seg)
         carry = None
-        lats, degs = [], []
+        lats, degs, fids = [], [], []
         for s in range(n_seg):
             if s > 0 and s % spec.replan_every == 0:
                 pi = replanner.replan(
@@ -189,9 +211,18 @@ def run_scenario(
             rate_est.update(res_s.file_id, float(res_s.t_end) - t_start)
             lats.append(np.asarray(res_s.latency))
             degs.append(np.asarray(res_s.degraded))
+            fids.append(np.asarray(res_s.file_id))
         lat = np.stack(lats)
         degraded = np.stack(degs)
+        fid = np.stack(fids)
         replans = replanner.replans
+
+    class_mean = class_p99 = None
+    if spec.class_id is not None:
+        stats = per_class_latency_stats(
+            lat, fid, np.asarray(spec.class_id), spec.n_classes
+        )
+        class_mean, class_p99 = stats.mean, stats.p99
 
     return ScenarioOutcome(
         scenario=spec.name,
@@ -202,6 +233,8 @@ def run_scenario(
         p99=float(np.percentile(lat, 99)),
         degraded_frac=float(degraded.mean()),
         replans=replans,
+        class_mean=class_mean,
+        class_p99=class_p99,
     )
 
 

@@ -20,6 +20,8 @@ import math
 
 import numpy as np
 
+from repro.core import ObjectiveSpec, make_objective
+
 # Default catalog: 4 heterogeneous files on the 12-node Tahoe testbed,
 # loaded to rho ~ 0.3 aggregate (per-node much higher under optimized
 # routing) so failures and crowds bite without destabilizing the queues.
@@ -39,6 +41,15 @@ class ScenarioSpec:
     true moments away from what any pre-computed plan assumed.
     ``replan_every`` is the closed-loop cadence: the adaptive policy
     re-solves at segment boundaries ``s`` with ``s % replan_every == 0``.
+
+    Tenant mix (pluggable objective layer, ``core/objectives.py``):
+    ``class_id`` assigns each file to a tenant class (``None`` = one
+    class); ``class_weight`` weights each class's mean latency in the
+    solver objective; ``class_deadline`` / ``class_tail_weight`` add
+    per-class tail-probability terms (``P[T_c > d_c]``). The engine builds
+    the :class:`~repro.core.ObjectiveSpec` once (:meth:`objective`) and
+    threads it through the initial solve, the adaptive replanner, and the
+    per-class outcome statistics.
     """
 
     name: str
@@ -57,10 +68,38 @@ class ScenarioSpec:
     drift_nodes: tuple[int, ...] | None = None
     overhead_drift: tuple[float, ...] | None = None
     bandwidth_drift: tuple[float, ...] | None = None
+    class_id: tuple[int, ...] | None = None
+    class_weight: tuple[float, ...] | None = None
+    class_deadline: tuple[float, ...] | None = None
+    class_tail_weight: tuple[float, ...] | None = None
 
     @property
     def r(self) -> int:
         return len(self.lam)
+
+    @property
+    def n_classes(self) -> int:
+        for trace in (self.class_weight, self.class_deadline,
+                      self.class_tail_weight):
+            if trace is not None:
+                return len(trace)
+        return 1 if self.class_id is None else max(self.class_id) + 1
+
+    def objective(self) -> ObjectiveSpec | None:
+        """The composed solver objective, or None (single uniform class)."""
+        if all(
+            f is None
+            for f in (self.class_id, self.class_weight, self.class_deadline,
+                      self.class_tail_weight)
+        ):
+            return None
+        cid = (0,) * self.r if self.class_id is None else self.class_id
+        return make_objective(
+            cid,
+            weight=self.class_weight,
+            deadline=self.class_deadline,
+            tail_weight=self.class_tail_weight,
+        )
 
     def avail_trace(self, m: int) -> np.ndarray:
         """(S, m) bool availability from the failure trace."""
@@ -115,6 +154,15 @@ class ScenarioSpec:
             raise ValueError(
                 f"{self.name}: some segment leaves fewer than max k nodes up"
             )
+        if self.class_id is not None and len(self.class_id) != self.r:
+            raise ValueError(
+                f"{self.name}: class_id has {len(self.class_id)} entries, "
+                f"need one per file (r={self.r})"
+            )
+        try:
+            self.objective()  # delegates per-class shape/value checks
+        except ValueError as e:
+            raise ValueError(f"{self.name}: {e}") from None
 
     def scaled(self, factor: float, min_requests: int = 200) -> "ScenarioSpec":
         """Same scenario at a reduced request volume (CI smoke / tests)."""

@@ -33,8 +33,11 @@ import numpy as np
 
 from repro.core import (
     JLCMProblem,
+    ObjectiveSpec,
     ServiceMoments,
+    empirical_objective,
     feasible_uniform,
+    fit_shifted_exponential,
     madow_sample,
     project_capped_simplex,
     solve,
@@ -261,15 +264,14 @@ class EwmaMomentEstimator:
         """Method-of-moments fit of the cluster's service family D + Exp.
 
         Returns per-node ``(overheads D_j, exp rates 1/s_j)`` matching the
-        estimated first two moments (s = sqrt(var), D = mean - s, clamped
-        to D >= 0). Used to *sample* service times from estimated state —
-        e.g. the replanner's candidate rollouts — without ever touching the
-        simulator's ground-truth parameters.
+        estimated first two moments via ``core.queueing.
+        fit_shifted_exponential`` (the inverse of
+        ``shifted_exponential_moments``). Used to *sample* service times
+        from estimated state — e.g. the replanner's candidate rollouts —
+        without ever touching the simulator's ground-truth parameters.
         """
-        var = np.maximum(self.m2 - self.m1**2, 1e-9)
-        s = np.sqrt(var)
-        d = np.maximum(self.m1 - s, 0.0)
-        return d, 1.0 / s
+        d, rate = fit_shifted_exponential(self.m1, self.m2)
+        return np.asarray(d), np.asarray(rate)
 
 
 @dataclasses.dataclass
@@ -331,12 +333,21 @@ class AdaptiveReplanner:
     Warm starts track slow drift with fewer iterations (DC programming
     keeps support); cold starts escape a stale support after abrupt
     changes. The rollout arbitrates — no hand-tuned margins.
+
+    ``objective`` (an ``ObjectiveSpec``) makes the whole loop multi-tenant:
+    candidate solves optimize the composed per-class objective, the
+    analytic fallback scores plans by the composed tight bound
+    (``latency_tight`` already folds weights and tail terms), and rollout
+    scoring applies the SAME objective to the simulated latencies
+    (``core.objectives.empirical_objective``) — so a premium class is
+    protected by the *selection* step too, e.g. during node failures.
     """
 
     k: np.ndarray  # (r,) MDS k_i per class/file
     cost: np.ndarray  # (m,) per-node cost V_j
     theta: float
     estimator: EwmaMomentEstimator
+    objective: ObjectiveSpec | None = None  # scenario's composed objective
     thetas: tuple[float, ...] | None = None
     max_iters: int = 400
     rollout_requests: int = 600
@@ -379,6 +390,7 @@ class AdaptiveReplanner:
                     cost=jnp.asarray(self.cost, jnp.float32),
                     theta=float(t),
                     mask=mask,
+                    objective=self.objective,
                 )
                 probs.append(prob)
                 starts.append(feasible_uniform(mask, prob.k))
@@ -405,9 +417,18 @@ class AdaptiveReplanner:
                     jnp.asarray(avail),
                     self.rollout_requests,
                 )
-                # same objective as the analytic fallback, with the rollout
-                # mean replacing the (loose, backlog-blind) latency bound
-                scores.append(float(res.latency.mean()) + float(cost_term[i]))
+                # same objective as the analytic fallback, with the
+                # empirical composed objective (weighted mean + per-class
+                # exceedance frequencies) replacing the loose, backlog-
+                # blind analytic bound
+                scores.append(
+                    empirical_objective(
+                        np.asarray(res.latency),
+                        np.asarray(res.file_id),
+                        self.objective,
+                    )
+                    + float(cost_term[i])
+                )
         else:
             scores = (np.asarray(sols.latency_tight) + cost_term).tolist()
         best = int(np.argmin(scores))

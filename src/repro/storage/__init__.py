@@ -28,6 +28,7 @@ from .rs import (
     pad_and_split,
 )
 from .simulator import (
+    ClassLatencyStats,
     NodeObservations,
     SegmentResult,
     SimCarry,
@@ -35,6 +36,7 @@ from .simulator import (
     dispatch_masks,
     generate_workload,
     init_carry,
+    per_class_latency_stats,
     run_segment_raw,
     simulate,
     simulate_latency_cdf,

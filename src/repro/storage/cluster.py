@@ -10,7 +10,10 @@ a chunk of size B as
 
 with D_j the deterministic overhead (RTT x protocol round-trips) and bw_j
 the effective client<->site bandwidth. Moments in closed form feed the
-analysis; the same distribution is sampled by the simulator.
+analysis; the same distribution is sampled by the simulator. The control
+plane inverts this parameterization from measured moments with
+``core.queueing.fit_shifted_exponential`` (tested to round-trip
+:meth:`Cluster.moments` exactly).
 
 Default constants are calibrated so a (7,4)-coded 50 MB file (12.5 MB
 chunks) read from a site mix reproduces the paper's measured service

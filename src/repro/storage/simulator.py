@@ -28,6 +28,12 @@ half of the closed loop in `serving/router.py`. :func:`simulate_segments`
 stacks per-segment parameters and runs the whole schedule as one nested
 ``lax.scan`` (segments outer, requests inner) in a single compiled call —
 the open-loop fast path used for static/oblivious policies.
+
+Multi-tenant reporting: :func:`per_class_latency_stats` groups simulated
+latencies by tenant class (per-class mean and empirical p95/p99), the
+measurement counterpart of the pluggable objective layer
+(``core/objectives.py``) — analytic per-class mean/tail bounds are
+validated against these empirical statistics.
 """
 from __future__ import annotations
 
@@ -43,6 +49,50 @@ from repro.core.scheduling import madow_sample
 from .cluster import Cluster
 
 
+class ClassLatencyStats(NamedTuple):
+    """Per-tenant-class empirical latency statistics (host-side reporting).
+
+    Shapes are all (C,). A class that received zero (post-warmup) requests
+    gets NaN mean/quantiles and count 0 — same contract as
+    :meth:`SimResult.per_file_mean`.
+    """
+
+    count: np.ndarray  # requests observed per class
+    mean: np.ndarray  # empirical mean latency
+    p95: np.ndarray  # empirical 95th percentile
+    p99: np.ndarray  # empirical 99th percentile
+
+
+def per_class_latency_stats(
+    latency: np.ndarray,
+    file_id: np.ndarray,
+    class_of_file: np.ndarray,
+    n_classes: int,
+) -> ClassLatencyStats:
+    """Group simulated request latencies by tenant class.
+
+    ``class_of_file`` maps file id -> class id (the ``ObjectiveSpec.
+    class_id`` vector of the plan under test). This is the measurement side
+    of the pluggable objective layer: the analytic per-class mean and tail
+    bounds (``core/objectives.py``) are validated against exactly these
+    empirical means and p95/p99 quantiles. Host-side numpy — reporting, not
+    a jit path; arrays may carry leading segment axes (flattened here).
+    """
+    latency = np.asarray(latency).ravel()
+    cls = np.asarray(class_of_file)[np.asarray(file_id).ravel()]
+    count = np.zeros(n_classes, np.int64)
+    mean = np.full(n_classes, np.nan)
+    p95 = np.full(n_classes, np.nan)
+    p99 = np.full(n_classes, np.nan)
+    for c in range(n_classes):
+        lat_c = latency[cls == c]
+        count[c] = lat_c.size
+        if lat_c.size:
+            mean[c] = lat_c.mean()
+            p95[c], p99[c] = np.percentile(lat_c, [95, 99])
+    return ClassLatencyStats(count=count, mean=mean, p95=p95, p99=p99)
+
+
 class SimResult(NamedTuple):
     latency: Array  # (N,) per-request file latency
     file_id: Array  # (N,) which file each request was for
@@ -51,6 +101,14 @@ class SimResult(NamedTuple):
 
     def mean_latency(self) -> Array:
         return jnp.mean(self.latency)
+
+    def per_class_stats(
+        self, class_of_file: np.ndarray, n_classes: int
+    ) -> ClassLatencyStats:
+        """Per-class empirical mean/p95/p99; see :func:`per_class_latency_stats`."""
+        return per_class_latency_stats(
+            self.latency, self.file_id, class_of_file, n_classes
+        )
 
     def per_file_mean(self, r: int) -> Array:
         """Mean simulated latency per file, shape (r,).

@@ -13,6 +13,7 @@ from repro.core import (
     exponential_moments,
     feasible_uniform,
     file_latency_bounds,
+    fit_shifted_exponential,
     madow_sample,
     mean_latency_bound,
     optimal_z,
@@ -57,6 +58,23 @@ class TestQueueing:
         )
         mom.validate()
 
+    def test_fit_shifted_exponential_round_trips(self):
+        # the single fit implementation (reused by router + cluster tests):
+        # moments -> fit -> the original (shift, rate) parameters
+        shift = jnp.asarray([0.0, 1.5, 7.5])
+        rate = jnp.asarray([2.0, 0.5, 0.16])
+        mom = shifted_exponential_moments(shift, rate)
+        d, r = fit_shifted_exponential(mom.mean, mom.m2)
+        np.testing.assert_allclose(np.asarray(d), np.asarray(shift), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(r), np.asarray(rate), rtol=1e-4)
+
+    def test_fit_shifted_exponential_clamps_negative_shift(self):
+        # estimated m2 larger than mean^2*2 implies std > mean -> D clamps 0
+        d, r = fit_shifted_exponential(
+            jnp.asarray([1.0]), jnp.asarray([5.0])
+        )
+        assert float(d[0]) == 0.0 and float(r[0]) > 0.0
+
 
 class TestLatencyBound:
     def test_bound_k1_equals_mean(self):
@@ -90,6 +108,31 @@ class TestLatencyBound:
         best = bound_given_z(pi, eq, varq, z)
         for dz in (-0.5, -0.05, 0.05, 0.5):
             assert (bound_given_z(pi, eq, varq, z + dz) >= best - 1e-4).all()
+
+    def test_k1_infimum_branch_regression(self):
+        """k_i == 1: the explicit branch returns the exact infimum
+        sum_j pi_j E[Q_j] (z -> -inf limit), finite and no worse than
+        Eq. (5) at ANY finite z — previously only implicitly handled by
+        the bisection floor."""
+        rng = np.random.default_rng(3)
+        eq = jnp.asarray(rng.uniform(0.5, 20.0, (5, 7)))
+        varq = jnp.asarray(rng.uniform(0.0, 9.0, (5, 7)))
+        pi = project_capped_simplex(
+            jnp.asarray(rng.uniform(0, 1, (5, 7))), jnp.ones((5,))
+        )
+        t = file_latency_bounds(pi, eq, varq)
+        expected = np.asarray(jnp.sum(pi * eq, axis=-1))
+        np.testing.assert_allclose(np.asarray(t), expected, rtol=1e-6)
+        assert np.isfinite(np.asarray(t)).all()
+        for zv in (-1e4, -100.0, 0.0, 50.0):
+            at_z = bound_given_z(pi, eq, varq, jnp.full((5,), zv))
+            assert (np.asarray(t) <= np.asarray(at_z) + 1e-4).all()
+        # and optimal_z itself parks k=1 rows on the explicit floor while
+        # k>1 rows still bisect to an interior stationary point
+        mixed_pi = jnp.concatenate([pi, 2.0 * pi], axis=0)
+        z = optimal_z(mixed_pi, jnp.tile(eq, (2, 1)), jnp.tile(varq, (2, 1)))
+        assert (np.asarray(z[:5]) < -1e3).all()
+        assert (np.asarray(z[5:]) > -1e3).all()
 
     def test_bound_monotone_in_load(self):
         mom = exponential_moments(jnp.ones((5,)) * 2.0)

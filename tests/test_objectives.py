@@ -1,0 +1,329 @@
+"""Pluggable objective layer (core/objectives.py) through the solver.
+
+Covers the ISSUE acceptance criteria: uniform specs reproduce the
+single-objective solver to <= 1e-6 on the fig8-/fig13-style catalogs, a
+weighted two-class solve measurably shifts latency toward the premium
+class in both the bound and the simulator, tail-probability bounds are
+valid and act on the optimizer, and `solve_batch` runs a weight sweep as
+one stacked call that matches sequential solves.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    JLCMProblem,
+    ObjectiveSpec,
+    empirical_objective,
+    make_objective,
+    node_arrival_rates,
+    pk_sojourn_moments,
+    shifted_exponential_moments,
+    solve,
+    solve_batch,
+    stack_problems,
+    tail_probability_bounds,
+)
+from repro.storage import per_class_latency_stats, simulate, tahoe_testbed
+
+M = 8
+R = 4
+CID = (0, 0, 1, 1)
+
+
+def _problem(objective=None, theta=2.0, seed=0):
+    rng = np.random.default_rng(seed)
+    mom = shifted_exponential_moments(
+        jnp.asarray(rng.uniform(4.0, 8.0, M), jnp.float32),
+        jnp.asarray(rng.uniform(0.08, 0.15, M), jnp.float32),
+    )
+    cost = jnp.asarray(rng.uniform(0.5, 2.0, M), jnp.float32)
+    lam = jnp.asarray([0.04, 0.03, 0.035, 0.05])
+    k = jnp.asarray([3.0, 4.0, 3.0, 2.0])
+    return JLCMProblem(
+        lam=lam, k=k, moments=mom, cost=cost, theta=theta, objective=objective
+    )
+
+
+def _testbed_problem(objective=None):
+    """The tenant_tradeoff operating point (tahoe testbed, 1.5x load)."""
+    cl = tahoe_testbed()
+    return cl, JLCMProblem(
+        lam=jnp.asarray([0.0675, 0.0525, 0.03, 0.0225]),
+        k=jnp.asarray([4.0, 4.0, 6.0, 6.0]),
+        moments=cl.moments(12.5),
+        cost=cl.cost,
+        theta=2.0,
+        objective=objective,
+    )
+
+
+class TestUniformEquivalence:
+    def test_uniform_spec_matches_plain_solver(self):
+        """Acceptance: uniform weights + no deadlines == scalar objective
+        to <= 1e-6 (same ops modulo XLA fusion)."""
+        prob = _problem()
+        ref = solve(prob, max_iters=200)
+        uni = solve(
+            prob._replace(objective=make_objective(CID)), max_iters=200
+        )
+        np.testing.assert_allclose(
+            np.asarray(uni.pi), np.asarray(ref.pi), atol=1e-6
+        )
+        np.testing.assert_allclose(
+            float(uni.objective), float(ref.objective), rtol=1e-6
+        )
+        np.testing.assert_allclose(
+            float(uni.latency_tight), float(ref.latency_tight), rtol=1e-6
+        )
+        np.testing.assert_array_equal(
+            np.asarray(uni.placement), np.asarray(ref.placement)
+        )
+
+    def test_uniform_spec_matches_on_fig13_catalog(self):
+        """The fig13 problem (3 files, 200 MB, k = 6,7,4, testbed)."""
+        cl = tahoe_testbed()
+        ks = jnp.asarray([6.0, 7.0, 4.0])
+        lam = jnp.asarray([0.125 / 3] * 3)
+        chunk = float(np.average(200.0 / np.asarray(ks)))
+        prob = JLCMProblem(
+            lam=lam, k=ks, moments=cl.moments(chunk), cost=cl.cost, theta=2.0
+        )
+        ref = solve(prob, max_iters=300)
+        uni = solve(
+            prob._replace(objective=make_objective([0, 0, 0])), max_iters=300
+        )
+        np.testing.assert_allclose(
+            np.asarray(uni.pi), np.asarray(ref.pi), atol=1e-6
+        )
+        np.testing.assert_allclose(
+            float(uni.objective), float(ref.objective), rtol=1e-6
+        )
+
+    def test_uniform_spec_matches_on_fig8_style_catalog(self):
+        """A reduced fig8 catalog (quartered k = 6,7,6,4, paper rates)."""
+        from benchmarks.common import paper_catalog
+
+        cl = tahoe_testbed()
+        lam, ks, chunk_mb = paper_catalog(r=64)
+        eff = float(np.average(chunk_mb, weights=np.asarray(lam)))
+        prob = JLCMProblem(
+            lam=lam, k=ks, moments=cl.moments(eff), cost=cl.cost, theta=2.0
+        )
+        ref = solve(prob, max_iters=150, eps=0.01)
+        uni = solve(
+            prob._replace(objective=make_objective([0] * 64)),
+            max_iters=150,
+            eps=0.01,
+        )
+        np.testing.assert_allclose(
+            np.asarray(uni.pi), np.asarray(ref.pi), atol=1e-6
+        )
+        np.testing.assert_allclose(
+            float(uni.objective), float(ref.objective), rtol=1e-6
+        )
+
+    def test_uniform_class_reporting(self):
+        sol = solve(_problem(objective=make_objective(CID)), max_iters=150)
+        assert sol.class_latency.shape == (2,)
+        assert sol.class_tail is None  # no deadlines -> no tail reporting
+        # single class == the overall tight bound
+        sol1 = solve(
+            _problem(objective=make_objective([0] * R)), max_iters=150
+        )
+        np.testing.assert_allclose(
+            float(sol1.class_latency[0]), float(sol1.latency_tight), rtol=1e-5
+        )
+
+
+class TestWeightedObjective:
+    def test_weight_shifts_bound_toward_premium(self):
+        uni = solve(
+            _problem(objective=make_objective(CID, weight=(1.0, 1.0))),
+            max_iters=300,
+        )
+        wtd = solve(
+            _problem(objective=make_objective(CID, weight=(8.0, 1.0))),
+            max_iters=300,
+        )
+        assert float(wtd.class_latency[0]) < float(uni.class_latency[0])
+        assert float(wtd.class_latency[1]) > float(uni.class_latency[1])
+
+    def test_weight_shifts_simulated_latency_on_testbed(self):
+        """Acceptance: premium mean AND p99 strictly below the uniform
+        baseline in the exact simulator, not just in the bound."""
+        cl, base = _testbed_problem()
+        probs = [
+            base._replace(objective=make_objective(CID, weight=(w, 1.0)))
+            for w in (1.0, 16.0)
+        ]
+        sols = solve_batch(probs, max_iters=400)
+        stats = []
+        for i in range(2):
+            res = simulate(
+                jax.random.key(0), sols.pi[i], base.lam, cl, 12.5, 30000
+            )
+            stats.append(res.per_class_stats(np.asarray(CID), 2))
+        assert float(sols.class_latency[1, 0]) < float(
+            sols.class_latency[0, 0]
+        )
+        assert stats[1].mean[0] < stats[0].mean[0]
+        assert stats[1].p99[0] < stats[0].p99[0]
+
+    def test_weight_sweep_batch_matches_sequential(self):
+        """Acceptance: solve_batch runs the weight sweep as ONE stacked
+        call and agrees with per-problem solves."""
+        weights = (1.0, 2.0, 4.0, 8.0)
+        probs = [
+            _problem(objective=make_objective(CID, weight=(w, 1.0)))
+            for w in weights
+        ]
+        bat = solve_batch(probs, max_iters=200)
+        assert bat.class_latency.shape == (len(weights), 2)
+        for i, p in enumerate(probs):
+            ref = solve(p, max_iters=200)
+            rel = abs(float(bat.objective[i]) - float(ref.objective)) / max(
+                1.0, abs(float(ref.objective))
+            )
+            assert rel < 1e-4, f"weight={weights[i]}: rel diff {rel}"
+
+    def test_stack_rejects_mixed_objective_structure(self):
+        p = _problem()
+        q = _problem(objective=make_objective(CID))
+        with pytest.raises(ValueError, match="mixing"):
+            stack_problems([p, q])
+        q3 = _problem(
+            objective=make_objective([0, 1, 2, 0], weight=(1.0, 1.0, 1.0))
+        )
+        with pytest.raises(ValueError, match="structure"):
+            stack_problems([q, q3])
+
+    def test_make_objective_validates(self):
+        with pytest.raises(ValueError):
+            make_objective(CID, weight=(1.0, -2.0))
+        with pytest.raises(ValueError):  # class id outside [0, C)
+            make_objective([0, 0, 1, 2], weight=(1.0, 1.0))
+        with pytest.raises(ValueError):  # negative tail weight
+            make_objective(
+                CID, deadline=(28.0, None), tail_weight=(-1.0, 0.0)
+            )
+        with pytest.raises(ValueError):
+            ObjectiveSpec(
+                class_id=jnp.asarray([0, 1], jnp.int32),
+                deadline=jnp.asarray([5.0, 5.0]),
+            ).validate()  # deadline without tail_weight
+
+
+class TestTailObjective:
+    def _plan_moments(self):
+        prob = _problem()
+        sol = solve(prob, max_iters=200)
+        rates = node_arrival_rates(sol.pi, prob.lam)
+        eq, varq = pk_sojourn_moments(rates, prob.moments)
+        return prob, sol, eq[None, :], varq[None, :]
+
+    def test_tail_bound_is_the_z_minimum(self):
+        """Envelope: the searched z beats any hand-picked z."""
+        _, sol, eq, varq = self._plan_moments()
+        d = jnp.full((R,), 40.0)
+        tb = np.asarray(tail_probability_bounds(sol.pi, eq, varq, d))
+        for zv in (-80.0, -10.0, 0.0, 20.0, 35.0):
+            z = jnp.full((R,), zv)
+            x = eq - z[:, None]
+            num = jnp.sum(
+                0.5 * sol.pi * (x + jnp.sqrt(x**2 + varq)), axis=-1
+            )
+            ratio = np.asarray(num / (d - z))
+            assert (tb <= ratio + 1e-4).all(), f"z={zv}"
+
+    def test_tail_bound_decreases_in_deadline(self):
+        _, sol, eq, varq = self._plan_moments()
+        prev = None
+        for dv in (30.0, 50.0, 80.0):
+            tb = np.asarray(
+                tail_probability_bounds(sol.pi, eq, varq, jnp.full((R,), dv))
+            )
+            if prev is not None:
+                assert (tb <= prev + 1e-6).all()
+            prev = tb
+
+    def test_tail_bound_upper_bounds_simulation(self):
+        """Validity on the testbed: analytic P[T > d] >= empirical."""
+        cl, base = _testbed_problem()
+        sol = solve(base, max_iters=300)
+        rates = node_arrival_rates(sol.pi, base.lam)
+        eq, varq = pk_sojourn_moments(rates, base.moments)
+        d = jnp.full((R,), 45.0)
+        tb = np.asarray(
+            tail_probability_bounds(sol.pi, eq[None, :], varq[None, :], d)
+        )
+        res = simulate(jax.random.key(1), sol.pi, base.lam, cl, 12.5, 30000)
+        lat, fid = np.asarray(res.latency), np.asarray(res.file_id)
+        for i in range(R):
+            if (fid == i).sum() > 100:
+                emp = float((lat[fid == i] > 45.0).mean())
+                assert tb[i] >= emp - 1e-6, f"file {i}: {tb[i]} < {emp}"
+
+    def test_tail_term_reduces_class_tail_bound(self):
+        """The optimizer acts on the tail term: adding it must not leave
+        the premium tail bound worse than the mean-only solve."""
+        cl, base = _testbed_problem()
+        no_tail = base._replace(
+            objective=make_objective(
+                CID, weight=(1.0, 1.0), deadline=(35.0, None),
+                tail_weight=(0.0, 0.0),
+            )
+        )
+        with_tail = base._replace(
+            objective=make_objective(
+                CID, weight=(1.0, 1.0), deadline=(35.0, None),
+                tail_weight=(10.0, 0.0),
+            )
+        )
+        sols = solve_batch([no_tail, with_tail], max_iters=400)
+        assert float(sols.class_tail[1, 0]) < float(sols.class_tail[0, 0])
+
+    def test_infinite_deadline_contributes_nothing(self):
+        spec_inf = make_objective(
+            CID, weight=(2.0, 1.0), deadline=(np.inf, np.inf),
+            tail_weight=(0.0, 0.0),
+        )
+        spec_none = make_objective(CID, weight=(2.0, 1.0))
+        a = solve(_problem(objective=spec_inf), max_iters=200)
+        b = solve(_problem(objective=spec_none), max_iters=200)
+        np.testing.assert_allclose(
+            float(a.objective), float(b.objective), rtol=1e-6
+        )
+        assert np.isfinite(np.asarray(a.pi)).all()
+        np.testing.assert_array_equal(np.asarray(a.class_tail), [0.0, 0.0])
+
+
+class TestEmpiricalObjective:
+    def test_uniform_is_plain_mean(self):
+        lat = np.asarray([1.0, 2.0, 3.0, 4.0])
+        fid = np.asarray([0, 1, 2, 3])
+        assert empirical_objective(lat, fid, None) == pytest.approx(2.5)
+
+    def test_weighted_mean_and_tail(self):
+        spec = make_objective(
+            [0, 1], weight=(3.0, 1.0), deadline=(2.5, None),
+            tail_weight=(2.0, 0.0),
+        )
+        lat = np.asarray([1.0, 3.0, 2.0, 4.0])
+        fid = np.asarray([0, 0, 1, 1])
+        # weighted mean: (3*1 + 3*3 + 2 + 4) / (3+3+1+1) = 18/8
+        # premium exceedance P[T>2.5] = 1/2, weighted by 2.0
+        expected = 18.0 / 8.0 + 2.0 * 0.5
+        assert empirical_objective(lat, fid, spec) == pytest.approx(expected)
+
+    def test_per_class_latency_stats_grouping(self):
+        lat = np.asarray([1.0, 2.0, 10.0, 20.0, 30.0])
+        fid = np.asarray([0, 1, 2, 3, 3])
+        st = per_class_latency_stats(lat, fid, np.asarray(CID), 2)
+        np.testing.assert_array_equal(st.count, [2, 3])
+        assert st.mean[0] == pytest.approx(1.5)
+        assert st.mean[1] == pytest.approx(20.0)
+        # empty class -> NaN, count 0
+        st3 = per_class_latency_stats(lat, fid, np.asarray([0, 0, 1, 1]), 3)
+        assert st3.count[2] == 0 and np.isnan(st3.mean[2])

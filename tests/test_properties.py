@@ -9,6 +9,7 @@ from repro.core import (
     exponential_moments,
     file_latency_bounds,
     madow_sample,
+    madow_sample_batch,
     optimal_z,
     pk_sojourn_moments,
     project_capped_simplex,
@@ -51,6 +52,30 @@ def test_madow_always_selects_exactly_k(v, seed):
     assert mask.sum() == k
     # never selects a zero-probability node
     assert not (mask & (pi <= 1e-9)).any()
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    v=st.lists(st.floats(0.05, 1.0), min_size=4, max_size=8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_madow_batch_inclusion_frequencies_converge_to_pi(v, seed):
+    """Theorem 1 in distribution, not just cardinality: over many draws
+    the empirical per-node inclusion frequency of ``madow_sample_batch``
+    converges to the marginals pi (the existing property test only checks
+    the exact-k subset size)."""
+    m = len(v)
+    v = np.asarray(v)
+    k = max(1, min(m - 1, int(round(v.sum() * 0.6))))
+    pi = project_capped_simplex(
+        jnp.asarray(np.stack([v, v[::-1]])), jnp.asarray([float(k), float(k)])
+    )  # (r=2, m): batch rows with distinct marginals
+    n_draws = 3000
+    keys = jax.random.split(jax.random.key(seed), n_draws)
+    masks = jax.vmap(lambda kk: madow_sample_batch(kk, pi))(keys)
+    freq = np.asarray(masks, float).mean(0)  # (r, m)
+    # Binomial std per entry is sqrt(pi(1-pi)/N) <= 0.0092; 5 sigma ~ 0.046
+    np.testing.assert_allclose(freq, np.asarray(pi), atol=0.05)
 
 
 @settings(max_examples=30, deadline=None)

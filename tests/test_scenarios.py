@@ -223,3 +223,56 @@ class TestClosedLoop:
         assert failure_outcomes["static"].degraded_frac > 0.1
         assert failure_outcomes["adaptive"].replans > 0
         assert failure_outcomes["static"].replans == 0
+
+
+class TestMultiTenant:
+    """premium-burst: the pluggable objective layer through the engine."""
+
+    def test_spec_builds_composed_objective(self):
+        spec = get_scenario("premium-burst")
+        obj = spec.objective()
+        assert obj is not None and spec.n_classes == 2
+        np.testing.assert_array_equal(np.asarray(obj.class_id), [0, 0, 1, 1])
+        assert float(obj.weight[0]) > float(obj.weight[1])
+        assert np.isfinite(float(obj.deadline[0]))
+        assert not np.isfinite(float(obj.deadline[1]))
+
+    def test_single_class_scenarios_have_no_objective(self):
+        assert get_scenario("node-failure").objective() is None
+
+    def test_validate_rejects_bad_tenant_mix(self):
+        spec = get_scenario("premium-burst")
+        bad = dataclasses.replace(spec, class_id=(0, 0, 1))
+        with pytest.raises(ValueError):
+            bad.validate(12)
+        bad = dataclasses.replace(spec, class_weight=(1.0, 2.0, 3.0))
+        with pytest.raises(ValueError):
+            bad.validate(12)
+
+    @pytest.fixture(scope="class")
+    def burst_outcomes(self):
+        spec = get_scenario("premium-burst").scaled(0.15, min_requests=250)
+        outs = run_all_policies(spec, seed=0)
+        return {o.policy: o for o in outs}
+
+    def test_class_stats_reported_for_all_policies(self, burst_outcomes):
+        for o in burst_outcomes.values():
+            assert o.class_mean is not None and o.class_mean.shape == (2,)
+            assert np.isfinite(o.class_mean).all()
+            assert np.isfinite(o.class_p99).all()
+            assert "class_means" in o.row()
+
+    def test_weighted_plan_protects_premium_class(self, burst_outcomes):
+        """Under the composed objective the premium class must sit below
+        the background class on mean latency for the planned policies
+        (static and adaptive solve the weighted objective; oblivious
+        ignores it)."""
+        for policy in ("static", "adaptive"):
+            o = burst_outcomes[policy]
+            assert o.class_mean[0] < o.class_mean[1]
+
+    def test_adaptive_tracks_burst_no_worse_than_oblivious(self, burst_outcomes):
+        assert (
+            burst_outcomes["adaptive"].class_mean[0]
+            < burst_outcomes["oblivious"].class_mean[0]
+        )

@@ -7,13 +7,20 @@ Fails (exit 1) when any markdown file in ``docs/`` or the top-level
   (anchors are stripped; http(s)/mailto links are ignored), or
 * a backtick-quoted repo path reference (``src/...``, ``benchmarks/...``,
   ``docs/...``, ``tests/...``, ``examples/...``, ``tools/...``) that does
-  not exist on disk.
+  not exist on disk, or
+* a ``benchmarks/results/*.csv`` reference that NO benchmark can write.
+  The results directory is generated (gitignored), so existence on disk
+  proves nothing in CI; instead the referenced file name must match an
+  ``emit(rows, "<name>")`` literal somewhere in ``benchmarks/*.py``
+  (f-string placeholders become wildcards, e.g. the scenario suite's
+  ``scenario_{...}`` covers ``scenario_node_failure.csv``).
 
 Keeps the "documentation maps back to the code" guarantee honest: renames
 and refactors that orphan a doc reference break CI instead of rotting.
 """
 from __future__ import annotations
 
+import fnmatch
 import re
 import sys
 from pathlib import Path
@@ -25,6 +32,22 @@ LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 PATH_REF = re.compile(
     r"`{1,2}((?:src|benchmarks|docs|tests|examples|tools)/[A-Za-z0-9_./-]+)`{1,2}"
 )
+RESULTS_REF = re.compile(r"^benchmarks/results/([A-Za-z0-9_.*{}-]+\.csv)$")
+# emit(rows, "fig8_convergence") / emit(rows, f"scenario_{...}"); the name
+# runs lazily to the quote that closes the call, so f-string placeholders
+# may contain nested quotes (e.g. .replace('-', '_'))
+EMIT_CALL = re.compile(r"""emit\(\s*[^,]+,\s*(f?)(["'])(.+?)\2\s*\)""")
+
+
+def emittable_csv_patterns() -> list[str]:
+    """fnmatch patterns for every CSV name some benchmark can write."""
+    patterns = []
+    for py in sorted((REPO / "benchmarks").glob("*.py")):
+        for is_f, _quote, name in EMIT_CALL.findall(py.read_text()):
+            if is_f:  # f-string: any {placeholder} matches anything
+                name = re.sub(r"\{[^}]*\}", "*", name)
+            patterns.append(f"{name}.csv")
+    return patterns
 
 
 def doc_files() -> list[Path]:
@@ -33,7 +56,7 @@ def doc_files() -> list[Path]:
     return [f for f in files if f.exists()]
 
 
-def check_file(md: Path) -> list[str]:
+def check_file(md: Path, csv_patterns: list[str]) -> list[str]:
     errors = []
     text = md.read_text()
     for link in LINK.findall(text):
@@ -46,8 +69,19 @@ def check_file(md: Path) -> list[str]:
         if not resolved.exists():
             errors.append(f"{md.relative_to(REPO)}: broken link -> {link}")
     for ref in PATH_REF.findall(text):
-        target = REPO / ref.rstrip(".")  # tolerate trailing sentence dots
-        if not target.exists():
+        ref = ref.rstrip(".")  # tolerate trailing sentence dots
+        m = RESULTS_REF.match(ref)
+        if m:
+            # generated CSVs: validate against what benchmarks can emit,
+            # not the (gitignored) disk state
+            name = m.group(1)
+            if not any(fnmatch.fnmatch(name, p) for p in csv_patterns):
+                errors.append(
+                    f"{md.relative_to(REPO)}: results CSV no benchmark "
+                    f"writes -> {ref}"
+                )
+            continue
+        if not (REPO / ref).exists():
             errors.append(f"{md.relative_to(REPO)}: dead path reference -> {ref}")
     return errors
 
@@ -55,8 +89,9 @@ def check_file(md: Path) -> list[str]:
 def main() -> int:
     errors = []
     files = doc_files()
+    csv_patterns = emittable_csv_patterns()
     for md in files:
-        errors.extend(check_file(md))
+        errors.extend(check_file(md, csv_patterns))
     for e in errors:
         print(f"ERROR: {e}")
     print(f"check_docs: {len(files)} files, {len(errors)} errors")
