@@ -1,0 +1,182 @@
+"""Codec data-plane throughput: batched device codec vs the host loop.
+
+Three sections, one CSV (``benchmarks/results/codec_throughput.csv``):
+
+1. **encode** — batched systematic encode MB/s per backend and batch
+   size (`storage.codec.encode_batch`; the whole batch folds into one
+   GF(256) matmul).
+2. **decode** — batched degraded-read decode MB/s per backend and batch
+   size (`storage.codec.decode_batch`; decode-matrix bank gathered on
+   device, one `gf256_matmul_batch` call per (n, k) group).
+3. **degraded-read comparison** — the ISSUE acceptance measurement:
+   ≥256 concurrent degraded reads decoded by the batched path (ONE
+   compiled call) vs the seed-state per-request host loop (per-call
+   Gauss–Jordan + per-call matmul dispatch, `storage.codec.
+   host_loop_decode`). Every output is asserted bit-exact against the
+   `storage/rs.py` reference before timing, and the batched path must
+   beat the host loop by >= 10x.
+
+CPU note: the perf-relevant backends here are ``ref`` (XLA-compiled scan)
+and ``bitplane`` (integer-matmul lifting); ``pallas`` runs in interpret
+mode on CPU — a correctness harness, so it is only timed at smoke scale
+and its MB/s column is marked accordingly. On TPU the same entry points
+select the MXU/VPU kernels.
+
+CLI:
+    PYTHONPATH=src:. python benchmarks/codec_throughput.py          # full
+    PYTHONPATH=src:. python benchmarks/codec_throughput.py --smoke  # CI
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.storage import codec, rs
+
+from benchmarks.common import emit
+
+SPEEDUP_FLOOR = 10.0  # acceptance: batched >= 10x the host loop
+
+
+def _time(fn, *args, repeats: int = 3, **kw) -> float:
+    out = fn(*args, **kw)  # warmup/compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats
+
+
+def _patterns(rng, n: int, k: int, batch: int) -> list[list[int]]:
+    """Random erasure patterns, always including >= 1 parity chunk (a
+    true degraded read — all-systematic patterns skip the matmul)."""
+    if n <= k:
+        raise ValueError(f"degraded reads need parity chunks: n={n} <= k={k}")
+    pats = []
+    for _ in range(batch):
+        while True:
+            ids = sorted(rng.choice(n, size=k, replace=False).tolist())
+            if any(i >= k for i in ids):
+                break
+        pats.append(ids)
+    return pats
+
+
+def run(smoke: bool = False) -> list[dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+    nbytes = 1 << 10 if smoke else 1 << 12
+    batches = (16, 64) if smoke else (16, 64, 256)
+    backends = ("ref", "bitplane")
+
+    for n, k in ((9, 6), (12, 8)):
+        for batch in batches:
+            data = rng.integers(0, 256, (batch, k, nbytes), dtype=np.uint8)
+            payload_mb = batch * k * nbytes / 2**20
+            for backend in backends:
+                dt = _time(codec.encode_batch, jnp.asarray(data), n, backend=backend)
+                rows.append(dict(
+                    section="encode", backend=backend, n=n, k=k, batch=batch,
+                    payload_mb=round(payload_mb, 2),
+                    ms_per_call=round(dt * 1e3, 2),
+                    mb_s=round(payload_mb / dt, 1),
+                ))
+            coded = np.asarray(codec.encode_batch(jnp.asarray(data), n))
+            pats = _patterns(rng, n, k, batch)
+            chunks = np.stack([coded[i][pats[i]] for i in range(batch)])
+            for backend in backends:
+                dt = _time(
+                    codec.decode_batch, jnp.asarray(chunks), pats, n, k,
+                    backend=backend,
+                )
+                rows.append(dict(
+                    section="decode", backend=backend, n=n, k=k, batch=batch,
+                    payload_mb=round(payload_mb, 2),
+                    ms_per_call=round(dt * 1e3, 2),
+                    mb_s=round(payload_mb / dt, 1),
+                ))
+
+    # pallas interpret: correctness-scale timing only (the interpreter is a
+    # Python loop; MB/s is not comparable — 'interp' marks the row)
+    n, k, batch = 9, 6, 8
+    data = rng.integers(0, 256, (batch, k, 512), dtype=np.uint8)
+    coded = np.asarray(codec.encode_batch(jnp.asarray(data), n))
+    pats = _patterns(rng, n, k, batch)
+    chunks = np.stack([coded[i][pats[i]] for i in range(batch)])
+    dt = _time(
+        codec.decode_batch, jnp.asarray(chunks), pats, n, k,
+        backend="pallas", repeats=1,
+    )
+    rows.append(dict(
+        section="decode", backend="pallas_interp", n=n, k=k, batch=batch,
+        payload_mb=round(batch * k * 512 / 2**20, 3),
+        ms_per_call=round(dt * 1e3, 2), mb_s="n/a (interpreter)",
+    ))
+
+    # --- the acceptance measurement: batched vs per-request host loop ----
+    n, k = 9, 6
+    batch = 64 if smoke else 256
+    dec_bytes = 1 << 10 if smoke else 1 << 12
+    data = rng.integers(0, 256, (batch, k, dec_bytes), dtype=np.uint8)
+    coded = np.asarray(codec.encode_batch(jnp.asarray(data), n))
+    pats = _patterns(rng, n, k, batch)
+    chunks = np.stack([coded[i][pats[i]] for i in range(batch)])
+
+    # bit-exactness gate on every pattern in the batch, BOTH paths, before
+    # any timing: batched output == host loop output == original data
+    got = np.asarray(codec.decode_batch(jnp.asarray(chunks), pats, n, k))
+    host = codec.host_loop_decode(list(chunks), pats, n, k)
+    for i in range(batch):
+        np.testing.assert_array_equal(got[i], data[i])
+        np.testing.assert_array_equal(host[i], data[i])
+
+    payload_mb = batch * k * dec_bytes / 2**20
+    dt_batched = _time(
+        codec.decode_batch, jnp.asarray(chunks), pats, n, k, repeats=3
+    )
+    t0 = time.perf_counter()
+    codec.host_loop_decode(list(chunks), pats, n, k)
+    dt_host = time.perf_counter() - t0
+    speedup = dt_host / dt_batched
+    rows.append(dict(
+        section="degraded_read", backend="host_loop", n=n, k=k, batch=batch,
+        payload_mb=round(payload_mb, 2), ms_per_call=round(dt_host * 1e3, 1),
+        mb_s=round(payload_mb / dt_host, 2),
+    ))
+    rows.append(dict(
+        section="degraded_read", backend="batched", n=n, k=k, batch=batch,
+        payload_mb=round(payload_mb, 2),
+        ms_per_call=round(dt_batched * 1e3, 1),
+        mb_s=round(payload_mb / dt_batched, 2),
+    ))
+    rows.append(dict(
+        section="degraded_read", backend="speedup", n=n, k=k, batch=batch,
+        payload_mb=round(payload_mb, 2), ms_per_call="-",
+        mb_s=round(speedup, 1),
+    ))
+    assert speedup >= SPEEDUP_FLOOR, (
+        f"batched degraded-read decode must beat the per-request host loop "
+        f"by >= {SPEEDUP_FLOOR}x, measured {speedup:.1f}x "
+        f"(batch={batch}, {dt_host*1e3:.0f} ms vs {dt_batched*1e3:.1f} ms)"
+    )
+    emit(rows, "codec_throughput")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="reduced sizes for CI (still asserts the 10x floor)",
+    )
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ MODULES = [
     "fig12_arrival_rates",
     "fig13_tradeoff",
     "kernel_gf256",
+    "codec_throughput",
     "jlcm_scaling",
     "serving_hedge",
     "scenario_suite",

@@ -10,7 +10,9 @@ latency, degraded-read fraction, re-plan count, and per-segment means.
 Asserts the headline claims documented in `docs/scenarios.md`:
 on ``node-failure``, closed-loop adaptive re-planning beats both the
 static plan computed from pre-failure moments and the oblivious baseline
-on mean simulated latency.
+on mean simulated latency; on ``node-failure-repair``, reconstruction
+traffic flows and the repair-aware closed loop beats the repair-oblivious
+static plan on client mean AND p99.
 
 CLI:
     PYTHONPATH=src:. python benchmarks/scenario_suite.py                  # all
@@ -50,6 +52,17 @@ def run(
         ]
         emit(rows, f"scenario_{spec.name.replace('-', '_')}")
         results[spec.name] = outs
+        if spec.name == "node-failure-repair":
+            ada, sta = by_policy["adaptive"], by_policy["static"]
+            assert ada.repair_frac > 0 and sta.repair_frac > 0, (
+                "reconstruction traffic must actually flow"
+            )
+            assert ada.mean < sta.mean and ada.p99 < sta.p99, (
+                "repair-aware adaptive re-planning must beat the repair-"
+                f"oblivious static plan during reconstruction: adaptive "
+                f"{ada.mean:.2f}/{ada.p99:.2f} vs static "
+                f"{sta.mean:.2f}/{sta.p99:.2f} (mean/p99)"
+            )
         if spec.name == "node-failure":
             ada, sta, obl = (
                 by_policy["adaptive"],

@@ -1,5 +1,16 @@
 """TPU kernels for the GF(256) erasure-coding hot path."""
 
-from .gf256_matmul import gf256_matmul_pallas
-from .ops import gf256_matmul, gf256_matmul_bitplane, rs_decode, rs_encode
+from .gf256_matmul import (
+    gf256_matmul_pallas,
+    gf256_matmul_pallas_batched,
+    select_block_sizes,
+)
+from .ops import (
+    gf256_matmul,
+    gf256_matmul_batch,
+    gf256_matmul_batch_bitplane,
+    gf256_matmul_bitplane,
+    rs_decode,
+    rs_encode,
+)
 from .ref import gf256_matmul_dense_ref, gf256_matmul_ref

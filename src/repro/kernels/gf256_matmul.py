@@ -48,17 +48,11 @@ def _gf_mul_tile(a: Array, b: Array) -> Array:
     return acc
 
 
-def _kernel(a_ref, b_ref, o_ref):
-    """Grid (Mi, Nj, Kk): XOR-accumulate a_block @GF b_block into o_block."""
-    k_step = pl.program_id(2)
-
-    @pl.when(k_step == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    a = a_ref[...]  # (bm, bk)
-    b = b_ref[...]  # (bk, bn)
+def _block_matmul(a: Array, b: Array) -> Array:
+    """(bm, bk) @GF (bk, bn) -> (bm, bn): the shared per-block inner loop
+    of both kernels (one K-slice outer product per round, XOR-reduced)."""
     bk = a.shape[1]
+    out_shape = (a.shape[0], b.shape[1])
 
     def body(kk, acc):
         a_col = jax.lax.dynamic_slice_in_dim(a, kk, 1, axis=1)  # (bm, 1)
@@ -68,8 +62,42 @@ def _kernel(a_ref, b_ref, o_ref):
         )
         return acc ^ contrib
 
-    acc = jax.lax.fori_loop(0, bk, body, jnp.zeros_like(o_ref))
-    o_ref[...] ^= acc
+    return jax.lax.fori_loop(0, bk, body, jnp.zeros(out_shape, jnp.uint8))
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    """Grid (Mi, Nj, Kk): XOR-accumulate a_block @GF b_block into o_block."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] ^= _block_matmul(a_ref[...], b_ref[...])
+
+
+def select_block_sizes(m: int, n: int, k: int) -> tuple[int, int, int]:
+    """(bm, bn, bk) for a GF(256) matmul of logical shape (m, k) x (k, n).
+
+    Everything is byte-wide, so VMEM cost per grid step is just
+    ``bm*bk + bk*bn + bm*bn`` bytes — tiny. The binding considerations are
+    (a) lane/sublane alignment: bn should be a multiple of 128 lanes when
+    the operand allows it, bm/bk multiples of 8 sublanes; (b) grid overhead:
+    tiny operands should be a single block. RS shapes are extreme — encode
+    is (n-k, k) x (k, bytes) with single-digit m/k and huge n — so blocks
+    clamp to the operand and widen along n.
+    """
+
+    def _clamp(want: int, dim: int, align: int) -> int:
+        if dim <= want:
+            return dim
+        return max(align, (want // align) * align)
+
+    bm = _clamp(128, m, 8)
+    bk = _clamp(128, k, 8)
+    # wide-n operands amortize the 8-round multiply over more lanes
+    bn = _clamp(512 if n >= 4096 else 256, n, 128)
+    return bm, bn, bk
 
 
 @functools.partial(
@@ -114,3 +142,70 @@ def gf256_matmul_pallas(
         interpret=interpret,
     )(a_p, b_p)
     return out[:m, :n]
+
+
+def _kernel_batched(a_ref, b_ref, o_ref):
+    """Grid (B, Mi, Nj, Kk): per-batch-element GF matmul, XOR-accumulated.
+
+    The batch axis is the OUTERMOST grid dimension (not a vmap): every
+    (n, k) group of a codec batch runs as one pallas_call whose grid walks
+    the B independent decodes, each reusing the same VMEM-resident block
+    machinery (`_block_matmul`) as the unbatched kernel. Block refs carry
+    a leading batch block of size 1.
+    """
+    k_step = pl.program_id(3)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[0] ^= _block_matmul(a_ref[0], b_ref[0])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def gf256_matmul_pallas_batched(
+    a: Array,
+    b: Array,
+    *,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+    interpret: bool = False,
+) -> Array:
+    """Batched GF(256) matmul C (B,M,N) = A (B,M,K) @GF B (B,K,N).
+
+    ONE compiled call for the whole batch: the batch axis becomes the
+    outermost grid dimension (see :func:`_kernel_batched`), so a codec
+    group's B degraded-read decodes issue a single XLA program instead of
+    B kernel launches. Block sizes default to :func:`select_block_sizes`
+    on the per-element shape.
+    """
+    a = jnp.asarray(a, jnp.uint8)
+    b = jnp.asarray(b, jnp.uint8)
+    bsz, m, k = a.shape
+    b2, k2, n = b.shape
+    assert bsz == b2 and k == k2, (a.shape, b.shape)
+    sm, sn, sk = select_block_sizes(m, n, k)
+    bm = min(block_m or sm, m)
+    bn = min(block_n or sn, n)
+    bk = min(block_k or sk, k)
+    pad_m, pad_n, pad_k = (-m) % bm, (-n) % bn, (-k) % bk
+    a_p = jnp.pad(a, ((0, 0), (0, pad_m), (0, pad_k)))
+    b_p = jnp.pad(b, ((0, 0), (0, pad_k), (0, pad_n)))
+    _, mp, kp = a_p.shape
+    _, _, np_ = b_p.shape
+    grid = (bsz, mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _kernel_batched,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda bb, i, j, kk: (bb, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda bb, i, j, kk: (bb, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda bb, i, j, kk: (bb, i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, mp, np_), jnp.uint8),
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:, :m, :n]

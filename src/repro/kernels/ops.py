@@ -26,7 +26,11 @@ from repro.storage.gf256 import (
     gf_const_to_bitmatrix,
 )
 from . import ref as _ref
-from .gf256_matmul import gf256_matmul_pallas
+from .gf256_matmul import (
+    gf256_matmul_pallas,
+    gf256_matmul_pallas_batched,
+    select_block_sizes,
+)
 
 
 def _on_tpu() -> bool:
@@ -70,7 +74,81 @@ def gf256_matmul(a: Array, b: Array, *, backend: str = "auto") -> Array:
     if backend == "bitplane":
         return gf256_matmul_bitplane(a, b)
     if backend == "pallas":
-        return gf256_matmul_pallas(a, b, interpret=not _on_tpu())
+        bm, bn, bk = select_block_sizes(a.shape[0], b.shape[1], a.shape[1])
+        return gf256_matmul_pallas(
+            a, b, block_m=bm, block_n=bn, block_k=bk, interpret=not _on_tpu()
+        )
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+# --- the batched (B, k, bytes) contract ------------------------------------
+#
+# One call, B independent GF matmuls: C[b] = A[b] @GF B[b]. This is the
+# codec pipeline's shape — a decode-matrix bank (B, k, k) against gathered
+# chunk payloads (B, k, bytes) — and every backend accepts it bit-exactly:
+#
+#   * ref      — jax.vmap of the K-scan oracle (XLA fuses the batch axis),
+#   * bitplane — ONE block-diagonal-free MXU matmul: the bit-lifted batch
+#                folds into the contraction via dot_general batching dims,
+#   * pallas   — the batch axis as the outermost kernel grid dimension
+#                (gf256_matmul_pallas_batched), no vmap-of-pallas_call.
+
+
+@jax.jit
+def _gf256_matmul_batch_ref(a: Array, b: Array) -> Array:
+    return jax.vmap(_ref.gf256_matmul_ref)(
+        jnp.asarray(a, jnp.uint8), jnp.asarray(b, jnp.uint8)
+    )
+
+
+@jax.jit
+def gf256_matmul_batch_bitplane(a: Array, b: Array) -> Array:
+    """Batched MXU path: per-element GF(2) bit-lifting, one dot_general.
+
+    bits(C[v,i,j])_p = sum_{k,q} M_{A[v,i,k]}[p,q] * bits(B[v,k,j])_q (mod 2)
+    with the batch axis v carried as a dot_general batching dimension, so
+    the whole bank still issues a single integer contraction.
+    """
+    a = jnp.asarray(a, jnp.uint8)
+    b = jnp.asarray(b, jnp.uint8)
+    bsz, m, k = a.shape
+    _, _, n = b.shape
+    big_a = gf_const_to_bitmatrix(a)  # (B, M, K, 8, 8) [p, q]
+    big_a = big_a.transpose(0, 1, 3, 2, 4).reshape(bsz, m * 8, k * 8)
+    big_b = bytes_to_bits(b.transpose(0, 2, 1))  # (B, N, K, 8)
+    big_b = big_b.transpose(0, 2, 3, 1).reshape(bsz, k * 8, n)
+    c_bits = (
+        jax.lax.dot_general(
+            big_a.astype(jnp.int8),
+            big_b.astype(jnp.int8),
+            dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.int32,
+        )
+        & 1
+    )  # (B, 8M, N)
+    c_bits = c_bits.reshape(bsz, m, 8, n).transpose(0, 1, 3, 2)  # (B, M, N, 8)
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    return jnp.sum(
+        (c_bits.astype(jnp.uint8) << shifts).astype(jnp.int32), axis=-1
+    ).astype(jnp.uint8)
+
+
+def gf256_matmul_batch(a: Array, b: Array, *, backend: str = "auto") -> Array:
+    """C (B,M,N) = A (B,M,K) @GF B (B,K,N); bit-exact across backends."""
+    a = jnp.asarray(a, jnp.uint8)
+    b = jnp.asarray(b, jnp.uint8)
+    if a.ndim != 3 or b.ndim != 3 or a.shape[0] != b.shape[0]:
+        raise ValueError(
+            f"batched contract needs (B,M,K) x (B,K,N), got {a.shape} x {b.shape}"
+        )
+    if backend == "auto":
+        backend = "bitplane" if _on_tpu() else "ref"
+    if backend == "ref":
+        return _gf256_matmul_batch_ref(a, b)
+    if backend == "bitplane":
+        return gf256_matmul_batch_bitplane(a, b)
+    if backend == "pallas":
+        return gf256_matmul_pallas_batched(a, b, interpret=not _on_tpu())
     raise ValueError(f"unknown backend {backend!r}")
 
 

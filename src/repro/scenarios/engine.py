@@ -33,6 +33,22 @@ measurements, but node availability is taken from the scenario's health
 trace at each segment boundary — i.e. we assume a health checker flags
 dead nodes within one segment, and study the value of *re-planning*, not
 of failure detection.
+
+Repair traffic (``spec.repair_rate > 0``): the physical reconstruction
+process is policy-independent — whoever plans dispatch, the chunks that
+sat on a dead node must be re-built — so the engine injects the repair
+rows (`storage.repair.repair_schedule`, derived from the *initial* JLCM
+plan's placement: that is where the bytes physically live) into the
+simulation under EVERY policy, as extra (pi, lam) rows activated per
+segment through the simulator's per-file rate scaling. What differs is
+the control plane: static/oblivious are repair-*oblivious* by
+construction, while the adaptive policy passes each segment's
+``RepairFlow`` into ``AdaptiveReplanner.replan`` (repair-aware: candidate
+solves see the reconstruction load and jointly optimize the repair reads'
+dispatch). ``repair_aware=False`` runs the ablation — a closed loop that
+re-plans around the failure but never sees the repair load. All reported
+statistics cover client requests only (``file_id < r``); repair traffic
+is load, not workload.
 """
 from __future__ import annotations
 
@@ -46,7 +62,9 @@ from repro.core import JLCMProblem, proportional_lb_pi, solve
 from repro.serving import AdaptiveReplanner, EwmaMomentEstimator, EwmaRateEstimator
 from repro.storage import (
     Cluster,
+    build_repair_flow,
     per_class_latency_stats,
+    repair_schedule,
     simulate_segment,
     simulate_segments,
     tahoe_testbed,
@@ -69,6 +87,7 @@ class ScenarioOutcome:
     p99: float  # overall p99 latency
     degraded_frac: float  # fraction of requests that hit a down node
     replans: int  # closed-loop re-solves performed
+    repair_frac: float = 0.0  # reconstruction reads / all simulated requests
     # per-tenant-class empirical stats (multi-class scenarios only)
     class_mean: np.ndarray | None = None  # (C,)
     class_p99: np.ndarray | None = None  # (C,)
@@ -81,6 +100,7 @@ class ScenarioOutcome:
             p99=round(self.p99, 3),
             degraded_frac=round(self.degraded_frac, 4),
             replans=self.replans,
+            repair_frac=round(self.repair_frac, 4),
             seg_means="|".join(f"{v:.2f}" for v in self.seg_mean),
         )
         if self.class_mean is not None:
@@ -94,7 +114,11 @@ def initial_plan(spec: ScenarioSpec, cluster: Cluster, *, max_iters: int = 300):
 
     Solves the scenario's *composed* objective (tenant weights / deadlines
     from ``spec.objective()``) so static and adaptive policies both start
-    from the plan the scenario actually asks for.
+    from the plan the scenario actually asks for. Returns
+    ``(pi, moments, solution)`` — the full solution carries the Lemma-4
+    placement that fixes where chunks physically live (the repair
+    inventory and the batched codec both read it,
+    ``storage.codec.CodecPlan.from_solution``).
     """
     mom = cluster.moments(spec.chunk_mb)
     prob = JLCMProblem(
@@ -106,7 +130,7 @@ def initial_plan(spec: ScenarioSpec, cluster: Cluster, *, max_iters: int = 300):
         objective=spec.objective(),
     )
     sol = solve(prob, max_iters=max_iters)
-    return np.asarray(sol.pi), mom
+    return np.asarray(sol.pi), mom, sol
 
 
 def oblivious_plan(spec: ScenarioSpec, cluster: Cluster) -> np.ndarray:
@@ -124,11 +148,17 @@ def run_scenario(
     cluster: Cluster | None = None,
     requests_per_segment: int | None = None,
     pi0: np.ndarray | None = None,
+    placement0: np.ndarray | None = None,
+    repair_aware: bool = True,
 ) -> ScenarioOutcome:
     """Simulate ``spec`` under ``policy``; see module docstring.
 
     ``pi0`` lets callers reuse an already-solved initial plan (the suite
-    shares one across the static and adaptive policies).
+    shares one across the static and adaptive policies); ``placement0``
+    is the physical chunk layout repair traffic derives from (defaults to
+    the initial JLCM plan's Lemma-4 placement). ``repair_aware=False``
+    runs the adaptive policy WITHOUT folding repair flows into its
+    re-solves — the repair-oblivious closed-loop ablation.
     """
     if policy not in POLICIES:
         raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
@@ -137,6 +167,7 @@ def run_scenario(
     spec.validate(m)
     n_req = requests_per_segment or spec.requests_per_segment
     n_seg = spec.n_segments
+    r = spec.r
     lam = jnp.asarray(spec.lam, jnp.float32)
     avail_tr = spec.avail_trace(m)
     rate_tr = spec.rate_scales()
@@ -144,24 +175,69 @@ def run_scenario(
     bw_tr = spec.bandwidth_scales(m)
     key = jax.random.key(seed)
 
+    with_repair = spec.repair_rate > 0
+    if (pi0 is None and policy != "oblivious") or (
+        with_repair and placement0 is None
+    ):
+        pi_init, _, sol0 = initial_plan(spec, cluster)
+        if placement0 is None:
+            placement0 = np.asarray(sol0.placement, bool)
+    else:
+        pi_init = None
+
     if policy == "oblivious":
         pi = oblivious_plan(spec, cluster)
     elif pi0 is not None:
         pi = np.asarray(pi0)
     else:
-        pi, _ = initial_plan(spec, cluster)
+        pi = pi_init
+
+    # The physical reconstruction process: per-segment repair rows from
+    # the placement, activated through per-file rate scaling. lam of every
+    # repair row is fixed at 1.0; the actual reads/sec ride in the scale.
+    if with_repair:
+        lam_rep_seq, pi_rep_seq = repair_schedule(
+            placement0, np.asarray(spec.k), avail_tr, spec.repair_rate
+        )
+        lam_sim = jnp.concatenate([lam, jnp.ones((r,), jnp.float32)])
+    else:
+        lam_rep_seq = pi_rep_seq = None
+        lam_sim = lam
+
+    def seg_scale(s: int) -> np.ndarray | float:
+        if not with_repair:
+            return float(rate_tr[s])
+        return np.concatenate(
+            [np.full((r,), float(rate_tr[s])), lam_rep_seq[s]]
+        )
+
+    def seg_pi(client_pi: np.ndarray, s: int, repair_pi=None) -> np.ndarray:
+        if not with_repair:
+            return np.asarray(client_pi)
+        rep = pi_rep_seq[s] if repair_pi is None else repair_pi
+        return np.concatenate([np.asarray(client_pi), rep], axis=0)
 
     replans = 0
     if policy in ("static", "oblivious"):
+        pi_seq = (
+            jnp.asarray(np.stack([seg_pi(pi, s) for s in range(n_seg)]))
+            if with_repair
+            else jnp.asarray(pi)
+        )
+        scale_seq = (
+            np.stack([seg_scale(s) for s in range(n_seg)])
+            if with_repair
+            else rate_tr
+        )
         res = simulate_segments(
             key,
-            jnp.asarray(pi),
-            lam,
+            pi_seq,
+            lam_sim,
             cluster,
             spec.chunk_mb,
             n_req,
             avail_seq=avail_tr,
-            rate_scale_seq=rate_tr,
+            rate_scale_seq=scale_seq,
             overhead_scale_seq=ovh_tr,
             bandwidth_scale_seq=bw_tr,
         )
@@ -183,56 +259,96 @@ def run_scenario(
         seg_keys = jax.random.split(key, n_seg)
         rollout_keys = jax.random.split(jax.random.key(seed + 0x5EED), n_seg)
         carry = None
+        repair_pi = None  # replanner-optimized reconstruction dispatch
+        repair_avail = None  # the health mask repair_pi was solved under
         lats, degs, fids = [], [], []
         for s in range(n_seg):
             if s > 0 and s % spec.replan_every == 0:
+                flow = (
+                    build_repair_flow(
+                        placement0,
+                        np.asarray(spec.k),
+                        avail_tr[s],
+                        spec.repair_rate,
+                    )
+                    if with_repair and repair_aware
+                    else None
+                )
                 pi = replanner.replan(
                     rate_est.rates,
                     avail_tr[s],
                     pi0=pi,
                     carry=carry,
                     key=rollout_keys[s],
+                    repair=flow,
                 )
+                repair_pi = replanner.repair_pi
+                repair_avail = avail_tr[s].copy()
+            # the optimized reconstruction dispatch is only valid for the
+            # health mask it was solved under; if availability moved
+            # between replans (replan_every > 1, staggered failures) fall
+            # back to the schedule's k-of-surviving rows for this segment
+            rep_s = (
+                repair_pi
+                if repair_pi is not None
+                and np.array_equal(avail_tr[s], repair_avail)
+                else None
+            )
             t_start = 0.0 if carry is None else float(carry.t0)
             res_s, carry = simulate_segment(
                 seg_keys[s],
-                jnp.asarray(pi),
-                lam,
+                jnp.asarray(seg_pi(pi, s, rep_s)),
+                lam_sim,
                 cluster,
                 spec.chunk_mb,
                 n_req,
                 avail=avail_tr[s],
-                rate_scale=float(rate_tr[s]),
+                rate_scale=seg_scale(s),
                 overhead_scale=ovh_tr[s],
                 bandwidth_scale=bw_tr[s],
                 carry=carry,
             )
             moment_est.update(res_s.obs)
-            rate_est.update(res_s.file_id, float(res_s.t_end) - t_start)
+            fid_s = np.asarray(res_s.file_id)
+            client_s = fid_s < r
+            rate_est.update(fid_s[client_s], float(res_s.t_end) - t_start)
             lats.append(np.asarray(res_s.latency))
             degs.append(np.asarray(res_s.degraded))
-            fids.append(np.asarray(res_s.file_id))
+            fids.append(fid_s)
         lat = np.stack(lats)
         degraded = np.stack(degs)
         fid = np.stack(fids)
         replans = replanner.replans
 
+    # All reported statistics cover CLIENT requests only; repair rows
+    # (file_id >= r) are background load.
+    client = fid < r
+    seg_mean = np.asarray(
+        [lat[s][client[s]].mean() if client[s].any() else np.nan
+         for s in range(n_seg)]
+    )
+    seg_p99 = np.asarray(
+        [np.percentile(lat[s][client[s]], 99) if client[s].any() else np.nan
+         for s in range(n_seg)]
+    )
+
     class_mean = class_p99 = None
     if spec.class_id is not None:
         stats = per_class_latency_stats(
-            lat, fid, np.asarray(spec.class_id), spec.n_classes
+            lat[client], fid[client], np.asarray(spec.class_id), spec.n_classes
         )
         class_mean, class_p99 = stats.mean, stats.p99
 
     return ScenarioOutcome(
         scenario=spec.name,
         policy=policy,
-        seg_mean=lat.mean(-1),
-        seg_p99=np.percentile(lat, 99, axis=-1),
-        mean=float(lat.mean()),
-        p99=float(np.percentile(lat, 99)),
-        degraded_frac=float(degraded.mean()),
+        seg_mean=seg_mean,
+        seg_p99=seg_p99,
+        mean=float(lat[client].mean()),
+        p99=float(np.percentile(lat[client], 99)),
+        degraded_frac=float(degraded[client].mean()),
         replans=replans,
+        repair_frac=float(1.0 - client.mean()),
         class_mean=class_mean,
         class_p99=class_p99,
     )
@@ -244,11 +360,14 @@ def run_all_policies(
     seed: int = 0,
     cluster: Cluster | None = None,
     requests_per_segment: int | None = None,
+    repair_aware: bool = True,
 ) -> list[ScenarioOutcome]:
     """All three policies on identical arrival/service randomness, sharing
-    one initial JLCM solve between static and adaptive."""
+    one initial JLCM solve between static and adaptive — and one physical
+    placement (hence one repair schedule) across all three."""
     cluster = tahoe_testbed() if cluster is None else cluster
-    pi0, _ = initial_plan(spec, cluster)
+    pi0, _, sol0 = initial_plan(spec, cluster)
+    placement0 = np.asarray(sol0.placement, bool)
     return [
         run_scenario(
             spec,
@@ -257,6 +376,8 @@ def run_all_policies(
             cluster=cluster,
             requests_per_segment=requests_per_segment,
             pi0=None if policy == "oblivious" else pi0,
+            placement0=placement0,
+            repair_aware=repair_aware,
         )
         for policy in POLICIES
     ]

@@ -42,6 +42,15 @@ class ScenarioSpec:
     ``replan_every`` is the closed-loop cadence: the adaptive policy
     re-solves at segment boundaries ``s`` with ``s % replan_every == 0``.
 
+    Repair (``storage/repair.py``): ``repair_rate`` > 0 switches on the
+    reconstruction process — while any placed chunk sits on a down node,
+    repair reads are issued at this aggregate rate (reads/sec), split
+    across affected files by lost-chunk share, each a k_i-of-surviving
+    fetch injected into the simulation as background load under EVERY
+    policy. The adaptive policy additionally folds the repair rows into
+    its re-solves (repair-aware re-planning) unless the engine is asked
+    for the repair-oblivious ablation.
+
     Tenant mix (pluggable objective layer, ``core/objectives.py``):
     ``class_id`` assigns each file to a tenant class (``None`` = one
     class); ``class_weight`` weights each class's mean latency in the
@@ -64,6 +73,7 @@ class ScenarioSpec:
     theta: float = 2.0
     replan_every: int = 1
     failures: tuple[tuple[int, int, int], ...] = ()
+    repair_rate: float = 0.0
     rate_trace: tuple[float, ...] | None = None
     drift_nodes: tuple[int, ...] | None = None
     overhead_drift: tuple[float, ...] | None = None
@@ -139,6 +149,13 @@ class ScenarioSpec:
                     f"{self.name}: {label} has {len(trace)} entries, "
                     f"need n_segments={self.n_segments}"
                 )
+        if self.repair_rate < 0:
+            raise ValueError(f"{self.name}: repair_rate must be >= 0")
+        if self.repair_rate > 0 and not self.failures:
+            raise ValueError(
+                f"{self.name}: repair_rate > 0 without a failure trace — "
+                "nothing would ever need reconstruction"
+            )
         for node, first, last in self.failures:
             if not (0 <= node < m):
                 raise ValueError(f"{self.name}: failed node {node} not in [0, {m})")

@@ -341,6 +341,19 @@ class AdaptiveReplanner:
     scoring applies the SAME objective to the simulated latencies
     (``core.objectives.empirical_objective``) — so a premium class is
     protected by the *selection* step too, e.g. during node failures.
+
+    Repair awareness (``storage/repair.py``): passing a ``RepairFlow`` to
+    :meth:`replan` folds reconstruction traffic into every candidate —
+    the repair rows join the solve as extra (lam, k, mask) rows (their
+    arrival rates are *known* from the repair pacer, not estimated), so
+    the optimizer sees the background load repair puts on each node and
+    steers client dispatch around it, while simultaneously optimizing
+    *which* surviving chunks the repair reads fetch. With a tenant
+    ``objective``, repair rows get a zero-weight class: their latency does
+    not count, but their queueing load still shifts every client class's
+    bound. Rollout candidates simulate the augmented plan and are scored
+    on client requests only. The chosen repair dispatch lands in
+    :attr:`repair_pi` for the caller to inject into the next segment.
     """
 
     k: np.ndarray  # (r,) MDS k_i per class/file
@@ -352,6 +365,45 @@ class AdaptiveReplanner:
     max_iters: int = 400
     rollout_requests: int = 600
     replans: int = 0
+    # optimized reconstruction-read dispatch from the last repair-aware
+    # replan (None when the last replan saw no active repair flow)
+    repair_pi: np.ndarray | None = None
+
+    def _repair_objective(self) -> ObjectiveSpec | None:
+        """The client objective extended with a zero-weight repair class.
+
+        Even with no tenant mix (``objective=None``) the repair-augmented
+        solve gets a two-class spec — clients weight 1, repair weight 0 —
+        so reconstruction reads contribute *load* (through every node's
+        P-K term) but never latency credit: the optimizer cannot trade
+        client latency away to make repair finish sooner.
+        """
+        r = int(np.asarray(self.k).shape[0])
+        if self.objective is None:
+            return ObjectiveSpec(
+                class_id=jnp.concatenate(
+                    [jnp.zeros((r,), jnp.int32), jnp.ones((r,), jnp.int32)]
+                ),
+                weight=jnp.asarray([1.0, 0.0], jnp.float32),
+            )
+        spec = self.objective
+        n_classes = int(spec.weight.shape[-1])
+        cid = jnp.concatenate(
+            [spec.class_id, jnp.full((r,), n_classes, jnp.int32)]
+        )
+        weight = jnp.concatenate([spec.weight, jnp.zeros((1,), jnp.float32)])
+        deadline = tail_weight = None
+        if spec.deadline is not None:
+            deadline = jnp.concatenate(
+                [spec.deadline, jnp.asarray([jnp.inf], jnp.float32)]
+            )
+            tail_weight = jnp.concatenate(
+                [spec.tail_weight, jnp.zeros((1,), jnp.float32)]
+            )
+        return ObjectiveSpec(
+            class_id=cid, weight=weight, deadline=deadline,
+            tail_weight=tail_weight,
+        )
 
     def replan(
         self,
@@ -362,41 +414,63 @@ class AdaptiveReplanner:
         pi0: np.ndarray | None = None,
         carry: Any | None = None,
         key: Any | None = None,
+        repair: Any | None = None,
     ) -> np.ndarray:
         """New (r, m) dispatch matrix from estimated moments + health mask.
 
         ``pi0`` (the plan currently dispatching) adds warm-started
         candidates; ``carry`` (``storage.simulator.SimCarry``) plus a PRNG
         ``key`` switch scoring to predictive rollouts from the live queue
-        state. All inputs are measured/estimated quantities — ground truth
+        state. ``repair`` (a ``storage.repair.RepairFlow``) folds known
+        reconstruction traffic into every candidate solve and rollout; the
+        jointly-optimized repair dispatch is left in :attr:`repair_pi`.
+        All other inputs are measured/estimated quantities — ground truth
         never enters.
         """
+        from repro.storage.repair import augment_plan
+
         r = int(np.asarray(self.k).shape[0])
         avail = np.asarray(avail, bool)
         masks = [avail] if candidate_masks is None else candidate_masks
         thetas = (self.theta,) if self.thetas is None else tuple(self.thetas)
         mom = self.estimator.moments()
-        lam = jnp.asarray(class_rates, jnp.float32)
+        with_repair = repair is not None and repair.active
+        k_vec = np.asarray(self.k, np.float32)
+        lam_np = np.asarray(class_rates, np.float64)
+        if with_repair:
+            lam_np = np.concatenate([lam_np, np.asarray(repair.lam)])
+            k_vec = np.concatenate([k_vec, np.asarray(repair.k, np.float32)])
+        lam = jnp.asarray(lam_np, jnp.float32)
+        objective = self._repair_objective() if with_repair else self.objective
         probs, starts = [], []
         for t in thetas:
             for mk in masks:
-                mask = jnp.broadcast_to(
-                    jnp.asarray(mk, bool), (r, avail.shape[-1])
+                mask = np.broadcast_to(
+                    np.asarray(mk, bool), (r, avail.shape[-1])
                 )
+                if with_repair:
+                    mask = np.concatenate(
+                        [mask, np.asarray(repair.mask, bool)], axis=0
+                    )
+                mask = jnp.asarray(mask)
                 prob = JLCMProblem(
                     lam=lam,
-                    k=jnp.asarray(self.k, jnp.float32),
+                    k=jnp.asarray(k_vec),
                     moments=mom,
                     cost=jnp.asarray(self.cost, jnp.float32),
                     theta=float(t),
                     mask=mask,
-                    objective=self.objective,
+                    objective=objective,
                 )
                 probs.append(prob)
                 starts.append(feasible_uniform(mask, prob.k))
                 if pi0 is not None:
+                    if with_repair:
+                        start, _ = augment_plan(pi0, class_rates, repair)
+                    else:
+                        start = np.asarray(pi0)
                     probs.append(prob)
-                    starts.append(jnp.asarray(pi0))
+                    starts.append(jnp.asarray(start, jnp.float32))
         sols = solve_batch(probs, max_iters=self.max_iters, pi0=jnp.stack(starts))
         self.replans += 1
 
@@ -417,22 +491,25 @@ class AdaptiveReplanner:
                     jnp.asarray(avail),
                     self.rollout_requests,
                 )
+                lat_np = np.asarray(res.latency)
+                fid_np = np.asarray(res.file_id)
+                if with_repair:  # score client traffic only
+                    client = fid_np < r
+                    lat_np, fid_np = lat_np[client], fid_np[client]
                 # same objective as the analytic fallback, with the
                 # empirical composed objective (weighted mean + per-class
                 # exceedance frequencies) replacing the loose, backlog-
                 # blind analytic bound
                 scores.append(
-                    empirical_objective(
-                        np.asarray(res.latency),
-                        np.asarray(res.file_id),
-                        self.objective,
-                    )
+                    empirical_objective(lat_np, fid_np, self.objective)
                     + float(cost_term[i])
                 )
         else:
             scores = (np.asarray(sols.latency_tight) + cost_term).tolist()
         best = int(np.argmin(scores))
-        return np.asarray(sols.pi[best])
+        pi_best = np.asarray(sols.pi[best])
+        self.repair_pi = pi_best[r:] if with_repair else None
+        return pi_best[:r]
 
 
 def simulate_serving(

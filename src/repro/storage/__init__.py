@@ -8,6 +8,21 @@ from .cluster import (
     measured_fig6_moments,
     tahoe_testbed,
 )
+from .codec import (
+    CodecGroup,
+    CodecPlan,
+    decode_bank,
+    decode_batch,
+    encode_batch,
+    host_loop_decode,
+)
+from .repair import (
+    RepairFlow,
+    augment_plan,
+    build_repair_flow,
+    lost_chunk_inventory,
+    repair_schedule,
+)
 from .gf256 import (
     bits_to_bytes,
     bytes_to_bits,
@@ -22,6 +37,7 @@ from .rs import (
     cauchy_parity_matrix,
     decode,
     decode_bytes,
+    decode_matrix,
     encode,
     generator_matrix,
     gf_invert_matrix,

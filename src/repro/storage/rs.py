@@ -82,8 +82,16 @@ def gf_invert_matrix(m: np.ndarray) -> np.ndarray:
 
 
 def pad_and_split(data: bytes | np.ndarray, k: int) -> np.ndarray:
-    """bytes -> (k, chunk_len) uint8 rows, zero-padded. Also returns via
-    attribute-free contract: caller tracks original length for unpad."""
+    """Split a payload into k equal rows for encoding.
+
+    Returns a (k, chunk_len) uint8 array with ``chunk_len = ceil(len / k)``;
+    the tail of the last logical byte range is zero-padded. The original
+    length is NOT stored anywhere in the coded representation — the caller
+    tracks it and passes it back to :func:`decode_bytes` (the ``length``
+    argument), which truncates the zero padding after reassembly. This is
+    the Tahoe/zfec convention: chunk metadata lives in the storage index,
+    not in the chunk bytes.
+    """
     buf = np.frombuffer(bytes(data), dtype=np.uint8) if isinstance(data, (bytes, bytearray)) else np.asarray(data, np.uint8).ravel()
     chunk = -(-buf.size // k)  # ceil
     padded = np.zeros(k * chunk, dtype=np.uint8)
@@ -101,6 +109,21 @@ def encode(
     return jnp.concatenate([data_rows, parity], axis=0)
 
 
+@functools.lru_cache(maxsize=4096)
+def decode_matrix(n: int, k: int, ids: tuple[int, ...]) -> np.ndarray:
+    """(k, k) decode matrix for erasure pattern ``ids``, LRU-cached.
+
+    ``decode = inv(G[ids])``: the rows of the generator matrix picked by
+    the surviving chunk indices, Gauss-Jordan-inverted once per distinct
+    ``(n, k, ids)`` and reused — degraded-read storms hit the same few
+    erasure patterns over and over (one per failed-node/file pair), so the
+    inversion cost amortizes to zero.
+    """
+    if len(ids) != k or len(set(ids)) != k:
+        raise ValueError(f"need exactly k={k} distinct chunks, got {list(ids)}")
+    return gf_invert_matrix(generator_matrix(n, k)[list(ids)])
+
+
 def decode(
     chunks: Array,
     chunk_ids: Sequence[int],
@@ -112,21 +135,33 @@ def decode(
     """Recover (k, B) data rows from any k coded chunks.
 
     ``chunks`` is (k, B) holding the surviving chunks whose original row
-    indices (0..n-1) are ``chunk_ids``.
+    indices (0..n-1) are ``chunk_ids``. When all k data chunks arrived
+    (every id < k — the common healthy-read case) the code is systematic,
+    so the rows are returned by permutation with no inversion and no
+    matmul at all; otherwise the (LRU-cached) inverse of the picked
+    generator rows is applied.
     """
     ids = list(chunk_ids)
     if len(ids) != k or len(set(ids)) != k:
         raise ValueError(f"need exactly k={k} distinct chunks, got {ids}")
     chunks = jnp.asarray(chunks, jnp.uint8)
-    g = generator_matrix(n, k)[ids]  # (k, k)
-    if all(i < k for i in ids) and ids == sorted(ids):
-        pass  # still run the general path; systematic fast path below
-    dec = gf_invert_matrix(g)
+    if all(i < k for i in ids):
+        # systematic fast path: G[ids] is a permutation of I_k, so
+        # data[ids[j]] = chunks[j]; undo the permutation directly.
+        order = np.argsort(np.asarray(ids))
+        return chunks[jnp.asarray(order)]
+    dec = decode_matrix(n, k, tuple(ids))
     return matmul(jnp.asarray(dec), chunks)
 
 
 def decode_bytes(
     chunks: Array, chunk_ids: Sequence[int], n: int, k: int, length: int, **kw
 ) -> bytes:
+    """Decode + unpad: reassemble the payload and truncate to ``length``.
+
+    ``length`` is the original payload size the caller recorded at
+    :func:`pad_and_split` time (the codec itself never stores it); the
+    zero padding appended there is cut off here.
+    """
     rows = np.asarray(decode(chunks, chunk_ids, n, k, **kw))
     return rows.reshape(-1).tobytes()[:length]

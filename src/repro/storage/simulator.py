@@ -356,7 +356,7 @@ def simulate_segment(
     n_requests: int,
     *,
     avail: Array | None = None,
-    rate_scale: float = 1.0,
+    rate_scale: float | Array = 1.0,
     overhead_scale: float | Array = 1.0,
     bandwidth_scale: float | Array = 1.0,
     carry: SimCarry | None = None,
@@ -365,8 +365,10 @@ def simulate_segment(
 
     The host-facing entry point of the scenario engine's closed loop: the
     caller owns ``pi`` (and may re-plan it between segments) while queue
-    state persists in ``carry``. ``rate_scale`` multiplies every file's
-    arrival rate (flash crowds / diurnal ramps); ``overhead_scale`` /
+    state persists in ``carry``. ``rate_scale`` multiplies arrival rates —
+    a scalar scales every file (flash crowds / diurnal ramps), an (r,)
+    vector scales per file (e.g. switching repair-traffic rows on and off
+    per segment, `storage/repair.py`). ``overhead_scale`` /
     ``bandwidth_scale`` (scalar or per-node) drift the service moments the
     same way :meth:`Cluster.perturbed` does.
     """
@@ -419,11 +421,13 @@ def simulate_segments(
 
     ``pi_seq`` is (S, r, m) — or (r, m), broadcast to every segment — and
     the optional per-segment sequences are ``avail_seq`` (S, m) bool,
-    ``rate_scale_seq`` (S,), and ``overhead_scale_seq`` /
-    ``bandwidth_scale_seq`` (S,) or (S, m). The outer scan threads the
-    FCFS carry across segments; the inner scan replays each segment's
-    merged arrival stream. Every field of the returned
-    :class:`SegmentResult` gains a leading (S,) axis.
+    ``rate_scale_seq`` (S,) — or (S, r) for per-file scaling, the hook
+    `storage/repair.py` uses to activate reconstruction-read rows only in
+    outage segments — and ``overhead_scale_seq`` / ``bandwidth_scale_seq``
+    (S,) or (S, m). The outer scan threads the FCFS carry across segments;
+    the inner scan replays each segment's merged arrival stream. Every
+    field of the returned :class:`SegmentResult` gains a leading (S,)
+    axis.
 
     This is the open-loop fast path (static / oblivious policies, or any
     precomputed plan schedule). The closed-loop engine instead alternates
