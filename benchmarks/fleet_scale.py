@@ -1,0 +1,169 @@
+"""Fleet-scale simulation throughput: one vmapped program vs a seed loop.
+
+The geo simulator's fleet path (`src/repro/storage/simulator.py::
+simulate_fleet`) runs S independent systems — seeds x client-site
+streams on the 4-client-site fabric (``geo_testbed``) — as ONE device
+program: a purpose-built healthy-fleet kernel (inverse-CDF workload
+marks, plain Madow dispatch — no availability machinery) vmapped over
+the seed axis, with a ``shard_map`` over a seed mesh on top when
+multiple devices are present.
+
+The sequential baseline is **a Python loop over seeds** calling the
+host-facing per-seed geo segment simulator (``simulate_geo_segment``) —
+the pre-existing way to obtain S independent runs, paying per call for
+host-side parameter prep, the availability-aware dispatch path, and
+per-(site, node) observation reduction that fleet-scale throughput runs
+do not need. Both paths are warmed (compiled) before timing; the fleet
+result is additionally validated bit-for-bit against per-seed calls of
+its own kernel (``fleet_one_raw``) and statistically against the loop.
+
+**Asserts the ISSUE floor: >= 10x fleet speedup at >= 32 seeds x 4
+client sites.** Writes ``benchmarks/results/fleet_scale.csv``.
+
+CLI:
+    PYTHONPATH=src:. python benchmarks/fleet_scale.py            # full
+    PYTHONPATH=src:. python benchmarks/fleet_scale.py --smoke    # CI
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import JLCMProblem, solve
+from repro.storage import (
+    fleet_one_raw,
+    geo_testbed,
+    simulate_fleet,
+    simulate_geo_segment,
+)
+
+from benchmarks.common import emit
+
+LAM = np.asarray([0.036, 0.028, 0.016, 0.012])
+K = np.asarray([4.0, 4.0, 6.0, 6.0])
+CHUNK_MB = 12.5
+MIX = np.asarray([0.4, 0.25, 0.25, 0.1])  # client-population share by site
+SPEEDUP_FLOOR = 10.0
+
+
+def _plan(fabric) -> jnp.ndarray:
+    """One JLCM plan (single-implicit-client view) shared by both paths."""
+    prob = JLCMProblem(
+        lam=jnp.asarray(LAM, jnp.float32),
+        k=jnp.asarray(K, jnp.float32),
+        moments=fabric.cluster.moments(CHUNK_MB),
+        cost=fabric.cluster.cost,
+        theta=2.0,
+    )
+    return solve(prob, max_iters=200).pi
+
+
+def _time_interleaved(fns, repeats: int = 5) -> list[float]:
+    """Best-of-repeats wall time for each fn, with the repeats
+    *interleaved* so a noisy window on a shared/small machine hits every
+    candidate instead of biasing whichever happened to run through it
+    (min is the standard noise-robust microbenchmark estimator)."""
+    for fn in fns:
+        fn()  # warmup / compile
+    best = [float("inf")] * len(fns)
+    for _ in range(repeats):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            fn()
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return best
+
+
+def run(
+    n_seeds: int = 32, n_requests: int = 2000, *, seed: int = 0
+) -> dict[str, float]:
+    fabric = geo_testbed()
+    assert fabric.n_sites == 4
+    pi = _plan(fabric)
+    lam_cs = jnp.asarray(MIX[:, None] * LAM[None, :], jnp.float32)  # (C, r)
+    d, rates = fabric.service_params(CHUNK_MB)
+    key = jax.random.key(seed)
+    keys = jax.random.split(key, n_seeds)
+    warm = int(n_requests * 0.1)
+
+    fleet = simulate_fleet(
+        key, pi, lam_cs, fabric, CHUNK_MB, n_requests, n_seeds
+    )
+
+    def run_fleet():
+        jax.block_until_ready(
+            simulate_fleet(
+                key, pi, lam_cs, fabric, CHUNK_MB, n_requests, n_seeds
+            ).latency
+        )
+
+    def run_loop():
+        for k in keys:
+            res, _ = simulate_geo_segment(
+                k, pi, lam_cs, fabric, CHUNK_MB, n_requests
+            )
+            jax.block_until_ready(res.latency)
+
+    t_fleet, t_loop = _time_interleaved([run_fleet, run_loop])
+    total = n_seeds * n_requests
+    speedup = t_loop / t_fleet
+
+    # correctness: the vmapped fleet is bit-identical to per-seed calls of
+    # its own kernel, and statistically consistent with the loop baseline
+    one = fleet_one_raw(keys[0], pi, lam_cs, d, rates, n_requests, warm)
+    np.testing.assert_allclose(
+        np.asarray(fleet.latency[0]), np.asarray(one[0]), rtol=1e-6
+    )
+    loop_res, _ = simulate_geo_segment(
+        keys[0], pi, lam_cs, fabric, CHUNK_MB, n_requests
+    )
+    fleet_mean = float(fleet.mean_latency())
+    loop_mean = float(np.asarray(loop_res.latency)[warm:].mean())
+    assert abs(fleet_mean - loop_mean) / loop_mean < 0.25, (
+        f"fleet and loop paths disagree on mean latency: "
+        f"{fleet_mean:.2f} vs {loop_mean:.2f}"
+    )
+
+    row = dict(
+        n_seeds=n_seeds,
+        n_sites=fabric.n_sites,
+        n_requests=n_requests,
+        fleet_s=round(t_fleet, 4),
+        loop_s=round(t_loop, 4),
+        fleet_req_per_s=round(total / t_fleet),
+        loop_req_per_s=round(total / t_loop),
+        speedup=round(speedup, 1),
+        mean_latency=round(fleet_mean, 3),
+    )
+    emit([row], "fleet_scale")
+    if n_seeds >= 32:
+        assert speedup >= SPEEDUP_FLOOR, (
+            f"fleet path must be >= {SPEEDUP_FLOOR}x faster than the "
+            f"sequential seed loop at {n_seeds} seeds x {fabric.n_sites} "
+            f"client sites; measured {speedup:.1f}x "
+            f"({t_loop:.3f}s loop vs {t_fleet:.3f}s fleet)"
+        )
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seeds", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=2000)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="reduced request volume (CI; keeps the 32-seed floor assert)",
+    )
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    n_requests = 1000 if args.smoke else args.requests
+    run(args.seeds, n_requests, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

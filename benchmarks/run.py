@@ -20,6 +20,7 @@ MODULES = [
     "serving_hedge",
     "scenario_suite",
     "tenant_tradeoff",
+    "fleet_scale",
     "checkpoint_catalogs",
 ]
 

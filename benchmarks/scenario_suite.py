@@ -12,7 +12,10 @@ on ``node-failure``, closed-loop adaptive re-planning beats both the
 static plan computed from pre-failure moments and the oblivious baseline
 on mean simulated latency; on ``node-failure-repair``, reconstruction
 traffic flows and the repair-aware closed loop beats the repair-oblivious
-static plan on client mean AND p99.
+static plan on client mean AND p99; on ``geo-client-shift``, the
+geo-aware closed loop (client fabric, `src/repro/core/geo.py`) beats the
+static geo-oblivious plan on mean latency while the client population
+migrates.
 
 CLI:
     PYTHONPATH=src:. python benchmarks/scenario_suite.py                  # all
@@ -62,6 +65,14 @@ def run(
                 f"oblivious static plan during reconstruction: adaptive "
                 f"{ada.mean:.2f}/{ada.p99:.2f} vs static "
                 f"{sta.mean:.2f}/{sta.p99:.2f} (mean/p99)"
+            )
+        if spec.name == "geo-client-shift":
+            ada, sta = by_policy["adaptive"], by_policy["static"]
+            assert ada.replans > 0
+            assert ada.mean < sta.mean, (
+                "geo-aware adaptive re-placement must beat the static "
+                f"geo-oblivious plan on mean latency: adaptive "
+                f"{ada.mean:.2f} vs static {sta.mean:.2f}"
             )
         if spec.name == "node-failure":
             ada, sta, obl = (

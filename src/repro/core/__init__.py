@@ -2,6 +2,17 @@
 upper bound (Lemmas 2-3), and Algorithm JLCM (joint latency-cost opt)."""
 
 from .baselines import split_merge_bound
+from .geo import (
+    GeoSpec,
+    geo_eq_varq,
+    geo_optimal_shared_z,
+    geo_problem,
+    geo_shared_z_latency,
+    geo_sojourn_moments,
+    make_geo,
+    node_mixture_moments,
+    pair_moments,
+)
 from .jlcm import (
     JLCMProblem,
     JLCMSolution,

@@ -1,0 +1,297 @@
+"""Geo-aware client fabric: per-(client-site, node) service heterogeneity.
+
+The paper's prototype (§V.A, Fig. 5) spans three data centers, and the
+measured chunk service time is dominated by *which client site reads from
+which storage site* — the NJ client sees CA nodes with a larger RTT but
+more bandwidth than TX (the paper remarks on exactly this inversion). The
+base model collapses that to one implicit client; this module restores
+the client axis so placement can trade locality against storage cost, the
+regime arXiv:1807.02253 (network-scale latency under general service
+times) and the monograph arXiv:2005.10855 treat as decisive for the
+optimal code/placement.
+
+Model. A request for file i issued from client site c and served by node
+j draws the shifted-exponential service time
+
+    X_{c,j} = D_j + RTT_{c,j} + Exp(bw_{c,j} / B)
+
+whose first three raw moments are closed-form per (c, j) pair
+(``queueing.shifted_exponential_moments`` on (C, m)-shaped parameters —
+``storage.cluster.GeoFabric`` builds them). File i carries a *client mix*
+``mix_{i,c}`` (the probability its next request originates at site c), so
+the service time of a file-i request at node j is the mixture with raw
+moments
+
+    m^{(p)}_{i,j} = sum_c mix_{i,c} m^{(p)}_{c,j}            (r, m)-shaped,
+
+while node j's *queue* serves the superposition of every file's traffic:
+its service distribution is the arrival-weighted mixture over (i, c)
+with weights ``lam_i mix_{i,c} / lam_hat`` (:func:`node_mixture_moments`
+— pi-independent by construction: the mixture is taken over the offered
+request population, the standard decomposition that is exact whenever the
+dispatch marginals do not correlate with the client site, and a
+documented approximation otherwise). Lemma 3's P-K machinery then splits
+per-pair sojourn moments as
+
+    E[Q_{i,j}]   = m1_{i,j} + W_j,      W_j    from mixture moments
+    Var[Q_{i,j}] = var_{i,j} + VarW_j,  VarW_j from mixture moments
+
+(:func:`geo_sojourn_moments`) — waiting is a property of the queue, the
+served request only contributes its own service moments. The Lemma-2
+order-statistic bound and its shared-z JLCM relaxation (Eq. 9) then fold
+over *pairs* instead of nodes:
+
+    z + sum_{i,j} (w_i lam_i pi_{i,j} / 2 W) [X_{i,j} + sqrt(X_{i,j}^2 + Y_{i,j})]
+
+(:func:`geo_shared_z_latency` / :func:`geo_optimal_shared_z`): the
+``latency_bound`` primitives are already batch-safe in ``(..., r, m)``
+shapes, so the per-pair fold reuses them by flattening the (r, m) axes.
+
+Degeneracy contract: :func:`geo_problem` with a single client site
+collapses to a plain :class:`~.jlcm.JLCMProblem` (``geo=None``) — the
+solver output is bit-for-bit the existing single-site path, which is how
+all current calibrations and tests keep holding exactly. With C identical
+sites and any mix, the general path is mathematically equal to the plain
+one (tested to float32 tolerance in ``tests/test_geo.py``).
+
+Everything here is a pytree of arrays: a :class:`GeoSpec` stacks under
+``stack_problems`` and vmaps under ``solve_batch``, so a sweep over
+client mixes (follow-the-sun planning) is ONE compiled call.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+from jax import Array
+
+from .latency_bound import optimal_z
+from .queueing import RHO_MAX, ServiceMoments, node_arrival_rates
+
+
+class GeoSpec(NamedTuple):
+    """Per-(client-site, node) service moments plus the per-file client mix.
+
+    ``m1``/``m2``/``m3`` are (C, m) raw service moments of the pair
+    distributions X_{c,j}; ``mix`` is (r, C) with rows on the simplex
+    (file i's request-origin distribution). A pure pytree: it travels
+    inside :class:`~.jlcm.JLCMProblem`, stacks, and vmaps.
+    """
+
+    m1: Array  # (..., C, m) per-pair E[X]
+    m2: Array  # (..., C, m) per-pair E[X^2]
+    m3: Array  # (..., C, m) per-pair E[X^3]
+    mix: Array  # (..., r, C) per-file client mix (rows sum to 1)
+
+    @property
+    def n_sites(self) -> int:
+        return self.mix.shape[-1]
+
+
+def make_geo(site_moments: ServiceMoments, mix) -> GeoSpec:
+    """Build a :class:`GeoSpec` from (C, m)-shaped site moments + mix."""
+    mix = jnp.asarray(mix, jnp.float32)
+    return GeoSpec(
+        m1=jnp.asarray(site_moments.mean, jnp.float32),
+        m2=jnp.asarray(site_moments.m2, jnp.float32),
+        m3=jnp.asarray(site_moments.m3, jnp.float32),
+        mix=mix,
+    )
+
+
+def pair_moments(geo: GeoSpec) -> tuple[Array, Array, Array]:
+    """Per-(file, node) mixture raw moments, each (..., r, m).
+
+    Raw moments of a mixture are the mixture of raw moments, so the file-i
+    service distribution at node j has ``m^{(p)}_{ij} = sum_c mix_ic
+    m^{(p)}_{cj}`` — one matmul per moment order.
+    """
+    return (
+        geo.mix @ geo.m1,
+        geo.mix @ geo.m2,
+        geo.mix @ geo.m3,
+    )
+
+
+def node_mixture_moments(lam: Array, geo: GeoSpec) -> ServiceMoments:
+    """Node-level queue service moments under the offered traffic mix.
+
+    Node j's queue serves requests from every (file, site) pair; its
+    service distribution is the arrival-weighted mixture with site weights
+    ``w_c = sum_i lam_i mix_ic / lam_hat`` — independent of pi (see module
+    docstring). Returns (..., m)-shaped :class:`ServiceMoments`, the
+    drop-in for the plain model's per-node moments (stability penalties,
+    utilisation checks, and the P-K waiting terms all consume it).
+    """
+    lam = jnp.asarray(lam)
+    w = jnp.sum(lam[..., None] * geo.mix, axis=-2)  # (..., C)
+    w = w / jnp.sum(lam, axis=-1, keepdims=True)
+    m1 = jnp.sum(w[..., None] * geo.m1, axis=-2)
+    m2 = jnp.sum(w[..., None] * geo.m2, axis=-2)
+    m3 = jnp.sum(w[..., None] * geo.m3, axis=-2)
+    return ServiceMoments(mu=1.0 / m1, m2=m2, m3=m3)
+
+
+def geo_sojourn_moments(
+    node_rates: Array,
+    node_mom: ServiceMoments,
+    p1: Array,
+    p2: Array,
+    *,
+    rho_max: float = RHO_MAX,
+) -> tuple[Array, Array]:
+    """Per-(file, node) P-K sojourn moments, (..., r, m).
+
+    The waiting-time part of Lemma 3 belongs to the *queue* (mixture
+    moments, :func:`node_mixture_moments`); the served request adds only
+    its own service moments (``p1``/``p2`` from :func:`pair_moments`):
+
+      E[Q_ij]   = p1_ij + W_j
+      Var[Q_ij] = (p2_ij - p1_ij^2) + VarW_j
+
+    with ``W_j = Lambda_j m2_j / 2(1 - rho_j)`` and ``VarW_j = Lambda_j
+    m3_j / 3(1 - rho_j) + Lambda_j^2 m2_j^2 / 4(1 - rho_j)^2`` — exactly
+    the waiting terms of ``queueing.pk_sojourn_moments`` split off the
+    service terms. Denominators are clamped at ``1 - rho_max`` like the
+    plain path.
+    """
+    lam = jnp.asarray(node_rates)
+    rho = lam / node_mom.mu
+    slack = jnp.maximum(1.0 - rho, 1.0 - rho_max)
+    wait = lam * node_mom.m2 / (2.0 * slack)
+    varw = lam * node_mom.m3 / (3.0 * slack) + lam**2 * node_mom.m2**2 / (
+        4.0 * slack**2
+    )
+    eq = p1 + wait[..., None, :]
+    varq = (p2 - p1**2) + varw[..., None, :]
+    return eq, varq
+
+
+def geo_eq_varq(pi: Array, lam: Array, geo: GeoSpec) -> tuple[Array, Array]:
+    """Convenience: (..., r, m) sojourn moments straight from (pi, lam, geo)."""
+    rates = node_arrival_rates(pi, lam)
+    node_mom = node_mixture_moments(lam, geo)
+    p1, p2, _ = pair_moments(geo)
+    return geo_sojourn_moments(rates, node_mom, p1, p2)
+
+
+def _pair_fold(
+    pi: Array, lam: Array, weights: Array | None
+) -> tuple[Array, Array]:
+    """Per-pair fold weights ``w_ij = wlam_i pi_ij / W`` and W itself."""
+    lam = jnp.asarray(lam)
+    wlam = lam if weights is None else lam * jnp.asarray(weights)
+    w_hat = jnp.sum(wlam, axis=-1)
+    return wlam[..., None] * pi / w_hat[..., None, None], w_hat
+
+
+def geo_shared_z_latency(
+    pi: Array,
+    z: Array,
+    lam: Array,
+    geo: GeoSpec,
+    *,
+    weights: Array | None = None,
+) -> Array:
+    """Shared-z JLCM latency (Eq. 9) folded over (file, node) *pairs*.
+
+      z + sum_{i,j} (w_i lam_i pi_ij / 2 W) [X_ij + sqrt(X_ij^2 + Y_ij)]
+
+    with X_ij = E[Q_ij] - z from :func:`geo_sojourn_moments`. With C
+    identical sites this equals ``latency_bound.shared_z_latency`` (the
+    inner sum over i collapses to Lambda_j); with one site the caller
+    should not be here at all — :func:`geo_problem` collapses C == 1 to
+    the plain path bit-for-bit. ``weights`` follows the differentiated-
+    mean convention of ``shared_z_latency``: the fold is re-weighted, the
+    queue moments stay on TRUE rates. Batch-safe: pi (..., r, m),
+    z (...,), lam (..., r) -> (...,).
+    """
+    z = jnp.asarray(z)
+    eq, varq = geo_eq_varq(pi, lam, geo)
+    w, _ = _pair_fold(pi, lam, weights)
+    x = eq - z[..., None, None]
+    body = 0.5 * w * (x + jnp.sqrt(x**2 + varq))
+    return z + jnp.sum(body, axis=(-2, -1))
+
+
+def geo_optimal_shared_z(
+    pi: Array,
+    lam: Array,
+    geo: GeoSpec,
+    *,
+    weights: Array | None = None,
+    iters: int = 80,
+) -> Array:
+    """argmin_z of :func:`geo_shared_z_latency` (convex; bisection).
+
+    Flattens the (r, m) pair axes into one and reuses
+    ``latency_bound.optimal_z`` — the primitives are batch-safe in any
+    (..., n) shape, a pair is just a "node" with weight w_ij.
+    """
+    eq, varq = geo_eq_varq(pi, lam, geo)
+    w, _ = _pair_fold(pi, lam, weights)
+    flat = w.shape[:-2] + (w.shape[-2] * w.shape[-1],)
+    return optimal_z(
+        w.reshape(flat), eq.reshape(flat), varq.reshape(flat), iters=iters
+    )
+
+
+def geo_problem(
+    lam,
+    k,
+    site_moments: ServiceMoments,
+    mix,
+    cost,
+    theta,
+    *,
+    mask=None,
+    objective=None,
+):
+    """Build a geo-aware :class:`~.jlcm.JLCMProblem`.
+
+    ``site_moments`` carries (C, m)-shaped per-(client-site, node) moments
+    (e.g. ``storage.cluster.GeoFabric.moments``); ``mix`` is the (r, C)
+    per-file client mix. The problem's ``moments`` field is set to the
+    node-level mixture (:func:`node_mixture_moments`) so every consumer of
+    node moments — stability penalty, utilisation, reporting — works
+    unchanged, while the ``geo`` field carries the per-pair data the
+    latency objective folds over.
+
+    C == 1 collapses to a plain problem (``geo=None``) whose ``moments``
+    are exactly the single site's rows: the degenerate fabric reproduces
+    the existing solver bit-for-bit, not merely to tolerance.
+    """
+    from .jlcm import JLCMProblem  # deferred: jlcm imports this module
+
+    mix = jnp.asarray(mix, jnp.float32)
+    if mix.ndim != 2:
+        raise ValueError(f"mix must be (r, C), got shape {mix.shape}")
+    lam = jnp.asarray(lam, jnp.float32)
+    if mix.shape[0] != lam.shape[-1]:
+        raise ValueError(
+            f"mix has {mix.shape[0]} files, lam has {lam.shape[-1]}"
+        )
+    if mix.shape[-1] == 1:
+        mom = ServiceMoments(
+            mu=site_moments.mu[0], m2=site_moments.m2[0], m3=site_moments.m3[0]
+        )
+        return JLCMProblem(
+            lam=lam,
+            k=jnp.asarray(k, jnp.float32),
+            moments=mom,
+            cost=jnp.asarray(cost, jnp.float32),
+            theta=theta,
+            mask=mask,
+            objective=objective,
+        )
+    geo = make_geo(site_moments, mix)
+    return JLCMProblem(
+        lam=lam,
+        k=jnp.asarray(k, jnp.float32),
+        moments=node_mixture_moments(lam, geo),
+        cost=jnp.asarray(cost, jnp.float32),
+        theta=theta,
+        mask=mask,
+        objective=objective,
+        geo=geo,
+    )

@@ -53,6 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import Array
 
+from .geo import GeoSpec, geo_eq_varq
 from .latency_bound import file_latency_bounds
 from .objectives import (
     ObjectiveSpec,
@@ -84,6 +85,12 @@ class JLCMProblem(NamedTuple):
     # pluggable objective (core/objectives.py): per-class weighted mean +
     # tail-probability terms; None = the paper's uniform mean, bit-for-bit
     objective: ObjectiveSpec | None = None
+    # geo-aware client fabric (core/geo.py): per-(client-site, node)
+    # service moments + per-file client mix. None = the single-implicit-
+    # client model, op-for-op; build geo problems with `core.geo.
+    # geo_problem` (which also keeps `moments` consistent as the node
+    # mixture and collapses C == 1 to the plain path exactly)
+    geo: GeoSpec | None = None
 
     @property
     def r(self) -> int:
@@ -127,13 +134,17 @@ def _linearized_cost(pi: Array, pi_ref: Array, cost: Array, beta: float) -> Arra
 
 
 def _latency_term(pi: Array, z: Array, prob: JLCMProblem) -> Array:
-    lat = composed_latency(pi, z, prob.lam, prob.moments, prob.objective)
+    lat = composed_latency(
+        pi, z, prob.lam, prob.moments, prob.objective, prob.geo
+    )
     rates = node_arrival_rates(pi, prob.lam)
     return lat + stability_penalty(rates, prob.moments)
 
 
 def _refresh_z(pi: Array, prob: JLCMProblem) -> Array:
-    return refresh_shared_z(pi, prob.lam, prob.moments, prob.objective)
+    return refresh_shared_z(
+        pi, prob.lam, prob.moments, prob.objective, prob.geo
+    )
 
 
 def smoothed_objective(pi: Array, z: Array, prob: JLCMProblem, beta: float) -> Array:
@@ -265,12 +276,17 @@ def _finalize(pi: Array, z: Array, prob: JLCMProblem, trace: Array) -> JLCMSolut
     spec = prob.objective
     placement = pi > SUPPORT_TOL
     n = jnp.sum(placement, axis=-1)
-    rates = node_arrival_rates(pi, prob.lam)
-    eq, varq = pk_sojourn_moments(rates, prob.moments)
-    eq_b, varq_b = eq[..., None, :], varq[..., None, :]
+    if prob.geo is not None:
+        # per-(file, node) sojourn moments: the Lemma-2 machinery is
+        # batch-safe in (r, m) shapes, so the geo fabric drops straight in
+        eq_b, varq_b = geo_eq_varq(pi, prob.lam, prob.geo)
+    else:
+        rates = node_arrival_rates(pi, prob.lam)
+        eq, varq = pk_sojourn_moments(rates, prob.moments)
+        eq_b, varq_b = eq[..., None, :], varq[..., None, :]
     t = file_latency_bounds(pi, eq_b, varq_b)
     tight = compose_file_bounds(t, pi, eq_b, varq_b, prob.lam, spec)
-    latency = composed_latency(pi, z, prob.lam, prob.moments, spec)
+    latency = composed_latency(pi, z, prob.lam, prob.moments, spec, prob.geo)
     cost = _true_cost(pi, prob.cost)
     class_latency = class_tail = None
     # per-class reporting needs a statically-sized class axis: any of the
@@ -526,6 +542,21 @@ def stack_problems(probs: Sequence[JLCMProblem]) -> JLCMProblem:
                 raise ValueError(
                     "all problems must share the objective structure "
                     "(class count and which optional fields are set)"
+                )
+    geos = [p.geo for p in probs]
+    if any(g is None for g in geos) and not all(g is None for g in geos):
+        raise ValueError(
+            "cannot stack problems mixing geo=None with GeoSpec; build every "
+            "problem through core.geo.geo_problem (values may vary, e.g. a "
+            "client-mix sweep — the structure must match)"
+        )
+    if geos[0] is not None:
+        shape0 = tuple(f.shape for f in geos[0])
+        for g in geos[1:]:
+            if tuple(f.shape for f in g) != shape0:
+                raise ValueError(
+                    "all problems must share the geo structure "
+                    "(site count and (C, m)/(r, C) shapes)"
                 )
     normalized = [
         p._replace(

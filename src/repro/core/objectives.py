@@ -36,6 +36,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax import Array
 
+from .geo import (
+    GeoSpec,
+    geo_eq_varq,
+    geo_optimal_shared_z,
+    geo_shared_z_latency,
+)
 from .latency_bound import (
     optimal_shared_z,
     shared_z_latency,
@@ -204,6 +210,7 @@ def composed_latency(
     lam: Array,
     moments: ServiceMoments,
     spec: ObjectiveSpec | None,
+    geo: GeoSpec | None = None,
 ) -> Array:
     """The solver-facing latency objective at shared auxiliary z.
 
@@ -212,12 +219,22 @@ def composed_latency(
     (optimized internally, see ``tail_probability_bounds``), so the shared
     z only parameterizes the mean term — exactly the existing solver state.
     ``spec=None`` IS ``shared_z_latency``: same ops, bit-for-bit.
+
+    ``geo`` (a ``core.geo.GeoSpec``) switches the mean fold and the tail
+    terms to per-(file, node) *pair* sojourn moments — the geo-aware
+    client fabric. ``geo=None`` is the single-implicit-client path,
+    untouched op-for-op.
     """
+    wf = None if spec is None else spec.file_weights()
+    if geo is not None:
+        mean_term = geo_shared_z_latency(pi, z, lam, geo, weights=wf)
+        if spec is None or spec.deadline is None:
+            return mean_term
+        eq, varq = geo_eq_varq(pi, lam, geo)
+        return mean_term + tail_penalty(pi, eq, varq, lam, spec)
     if spec is None:
         return shared_z_latency(pi, z, lam, moments)
-    mean_term = shared_z_latency(
-        pi, z, lam, moments, weights=spec.file_weights()
-    )
+    mean_term = shared_z_latency(pi, z, lam, moments, weights=wf)
     if spec.deadline is None:
         return mean_term
     rates = node_arrival_rates(pi, lam)
@@ -228,16 +245,23 @@ def composed_latency(
 
 
 def refresh_shared_z(
-    pi: Array, lam: Array, moments: ServiceMoments, spec: ObjectiveSpec | None
+    pi: Array,
+    lam: Array,
+    moments: ServiceMoments,
+    spec: ObjectiveSpec | None,
+    geo: GeoSpec | None = None,
 ) -> Array:
     """argmin_z of :func:`composed_latency` — the solver's z-refresh step.
 
     The tail penalty does not depend on the shared z, so minimizing the
     (weighted) mean term alone is exact, not an approximation.
     """
+    wf = None if spec is None else spec.file_weights()
+    if geo is not None:
+        return geo_optimal_shared_z(pi, lam, geo, weights=wf)
     if spec is None:
         return optimal_shared_z(pi, lam, moments)
-    return optimal_shared_z(pi, lam, moments, weights=spec.file_weights())
+    return optimal_shared_z(pi, lam, moments, weights=wf)
 
 
 def compose_file_bounds(

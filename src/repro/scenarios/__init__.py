@@ -9,6 +9,7 @@ from .engine import (
     initial_plan,
     oblivious_plan,
     run_all_policies,
+    run_geo_scenario,
     run_scenario,
 )
 from .spec import (

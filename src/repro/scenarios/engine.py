@@ -49,6 +49,13 @@ dispatch). ``repair_aware=False`` runs the ablation — a closed loop that
 re-plans around the failure but never sees the repair load. All reported
 statistics cover client requests only (``file_id < r``); repair traffic
 is load, not workload.
+
+Geo scenarios (``spec.sites`` set) run through :func:`run_geo_scenario`
+against the 4-client-site fabric: per-(client-site, node) service
+sampling, a per-segment client-population mix schedule, optional egress
+degradation — and a geo-aware closed loop (``GeoAdaptiveReplanner``)
+whose static baseline is deliberately *geo-oblivious* (the paper's
+single-implicit-client plan). See that function's docstring.
 """
 from __future__ import annotations
 
@@ -59,12 +66,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import JLCMProblem, proportional_lb_pi, solve
-from repro.serving import AdaptiveReplanner, EwmaMomentEstimator, EwmaRateEstimator
+from repro.serving import (
+    AdaptiveReplanner,
+    EwmaMomentEstimator,
+    EwmaRateEstimator,
+    GeoAdaptiveReplanner,
+)
 from repro.storage import (
     Cluster,
+    GeoFabric,
     build_repair_flow,
+    geo_testbed,
     per_class_latency_stats,
     repair_schedule,
+    simulate_geo_segment,
+    simulate_geo_segments,
     simulate_segment,
     simulate_segments,
     tahoe_testbed,
@@ -91,6 +107,8 @@ class ScenarioOutcome:
     # per-tenant-class empirical stats (multi-class scenarios only)
     class_mean: np.ndarray | None = None  # (C,)
     class_p99: np.ndarray | None = None  # (C,)
+    # per-client-site empirical mean latency (geo scenarios only)
+    site_mean: np.ndarray | None = None  # (C_sites,)
 
     def row(self) -> dict:
         out = dict(
@@ -106,6 +124,8 @@ class ScenarioOutcome:
         if self.class_mean is not None:
             out["class_means"] = "|".join(f"{v:.2f}" for v in self.class_mean)
             out["class_p99s"] = "|".join(f"{v:.2f}" for v in self.class_p99)
+        if self.site_mean is not None:
+            out["site_means"] = "|".join(f"{v:.2f}" for v in self.site_mean)
         return out
 
 
@@ -162,6 +182,15 @@ def run_scenario(
     """
     if policy not in POLICIES:
         raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
+    if spec.is_geo:
+        return run_geo_scenario(
+            spec,
+            policy,
+            seed=seed,
+            fabric=None if cluster is None else geo_testbed(cluster),
+            requests_per_segment=requests_per_segment,
+            pi0=pi0,
+        )
     cluster = tahoe_testbed() if cluster is None else cluster
     m = cluster.m
     spec.validate(m)
@@ -354,6 +383,140 @@ def run_scenario(
     )
 
 
+def run_geo_scenario(
+    spec: ScenarioSpec,
+    policy: str = "adaptive",
+    *,
+    seed: int = 0,
+    fabric: GeoFabric | None = None,
+    requests_per_segment: int | None = None,
+    pi0: np.ndarray | None = None,
+) -> ScenarioOutcome:
+    """Run a geo scenario (``spec.sites`` set) under ``policy``.
+
+    The policies keep their control-spectrum roles, re-read for the
+    client fabric:
+
+    * ``static`` — the *geo-oblivious* plan: Algorithm JLCM from the base
+      cluster's single-implicit-client moments (exactly today's
+      ``initial_plan``), never re-planned. It knows nothing of client
+      sites, so its placement is anchored to the reference (NJ) view —
+      the operating model the ISSUE's motivation calls out.
+    * ``oblivious`` — rate-proportional dispatch, as before.
+    * ``adaptive`` — the geo closed loop: per-(site, node) moment EWMA +
+      per-(site, file) rate EWMA feeding ``GeoAdaptiveReplanner``, which
+      re-solves *geo* problems (estimated pair moments + estimated client
+      mix) so placement follows the active client population.
+
+    All policies simulate against the same fabric ground truth: per-pair
+    service sampling, the spec's mix schedule, and its egress-degradation
+    trace. Statistics additionally report per-client-site means
+    (``site_mean``).
+    """
+    if policy not in POLICIES:
+        raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
+    fabric = geo_testbed() if fabric is None else fabric
+    m, r, c = fabric.m, spec.r, fabric.n_sites
+    spec.validate(m)
+    spec.validate_geo_fabric(fabric)
+    n_req = requests_per_segment or spec.requests_per_segment
+    n_seg = spec.n_segments
+    lam_cs_seq = spec.lam_cs_schedule()  # (S, C, r)
+    avail_tr = spec.avail_trace(m)
+    ovh_tr, bw_tr = spec.egress_scales(fabric)  # (S, C, m) each
+    key = jax.random.key(seed)
+
+    if policy == "oblivious":
+        pi = oblivious_plan(spec, fabric.cluster)
+    elif pi0 is not None:
+        pi = np.asarray(pi0)
+    else:
+        pi, _, _ = initial_plan(spec, fabric.cluster)  # geo-oblivious
+
+    replans = 0
+    if policy in ("static", "oblivious"):
+        res = simulate_geo_segments(
+            key,
+            jnp.asarray(pi),
+            lam_cs_seq,
+            fabric,
+            spec.chunk_mb,
+            n_req,
+            avail_seq=avail_tr,
+            overhead_scale_seq=ovh_tr,
+            bandwidth_scale_seq=bw_tr,
+        )
+        lat = np.asarray(res.latency)  # (S, N)
+        degraded = np.asarray(res.degraded)
+        site = np.asarray(res.site_id)
+    else:
+        moment_est = EwmaMomentEstimator(prior=fabric.moments(spec.chunk_mb))
+        rate_est = EwmaRateEstimator(prior=lam_cs_seq[0].reshape(-1))
+        replanner = GeoAdaptiveReplanner(
+            k=np.asarray(spec.k),
+            cost=np.asarray(fabric.cluster.cost),
+            theta=spec.theta,
+            estimator=moment_est,
+        )
+        seg_keys = jax.random.split(key, n_seg)
+        rollout_keys = jax.random.split(jax.random.key(seed + 0x5EED), n_seg)
+        carry = None
+        lats, degs, sites = [], [], []
+        for s in range(n_seg):
+            if s > 0 and s % spec.replan_every == 0:
+                pi = replanner.replan(
+                    rate_est.rates.reshape(c, r),
+                    avail_tr[s],
+                    pi0=pi,
+                    carry=carry,
+                    key=rollout_keys[s],
+                )
+            t_start = 0.0 if carry is None else float(carry.t0)
+            res_s, carry = simulate_geo_segment(
+                seg_keys[s],
+                jnp.asarray(pi),
+                lam_cs_seq[s],
+                fabric,
+                spec.chunk_mb,
+                n_req,
+                avail=avail_tr[s],
+                overhead_scale=ovh_tr[s],
+                bandwidth_scale=bw_tr[s],
+                carry=carry,
+            )
+            moment_est.update(res_s.obs)
+            fid_s = np.asarray(res_s.file_id)
+            site_s = np.asarray(res_s.site_id)
+            rate_est.update(
+                site_s * r + fid_s, float(res_s.t_end) - t_start
+            )
+            lats.append(np.asarray(res_s.latency))
+            degs.append(np.asarray(res_s.degraded))
+            sites.append(site_s)
+        lat = np.stack(lats)
+        degraded = np.stack(degs)
+        site = np.stack(sites)
+        replans = replanner.replans
+
+    site_mean = np.asarray(
+        [
+            lat[site == ci].mean() if (site == ci).any() else np.nan
+            for ci in range(c)
+        ]
+    )
+    return ScenarioOutcome(
+        scenario=spec.name,
+        policy=policy,
+        seg_mean=lat.mean(-1),
+        seg_p99=np.percentile(lat, 99, axis=-1),
+        mean=float(lat.mean()),
+        p99=float(np.percentile(lat, 99)),
+        degraded_frac=float(degraded.mean()),
+        replans=replans,
+        site_mean=site_mean,
+    )
+
+
 def run_all_policies(
     spec: ScenarioSpec,
     *,
@@ -365,6 +528,20 @@ def run_all_policies(
     """All three policies on identical arrival/service randomness, sharing
     one initial JLCM solve between static and adaptive — and one physical
     placement (hence one repair schedule) across all three."""
+    if spec.is_geo:
+        fabric = geo_testbed(cluster) if cluster is not None else geo_testbed()
+        pi0, _, _ = initial_plan(spec, fabric.cluster)
+        return [
+            run_geo_scenario(
+                spec,
+                policy,
+                seed=seed,
+                fabric=fabric,
+                requests_per_segment=requests_per_segment,
+                pi0=None if policy == "oblivious" else pi0,
+            )
+            for policy in POLICIES
+        ]
     cluster = tahoe_testbed() if cluster is None else cluster
     pi0, _, sol0 = initial_plan(spec, cluster)
     placement0 = np.asarray(sol0.placement, bool)

@@ -59,6 +59,20 @@ class ScenarioSpec:
     the :class:`~repro.core.ObjectiveSpec` once (:meth:`objective`) and
     threads it through the initial solve, the adaptive replanner, and the
     per-class outcome statistics.
+
+    Geo client fabric (``storage/cluster.py::GeoFabric``): ``sites``
+    names the client sites (must match the fabric's, in order) and flips
+    the engine onto the geo path. ``mix_trace`` is the per-segment client
+    *population* share, (S, C) rows on the simplex — a migrating
+    population ("follow the sun") is a row schedule. ``egress_degrade``
+    entries ``(storage_site, first, last, rtt_scale, bw_scale)`` degrade
+    that DC's *egress* for the inclusive segment window: every
+    cross-site pair (client site != the DC) has its overhead multiplied
+    by ``rtt_scale`` and bandwidth by ``bw_scale``, while co-located
+    clients — inside the DC's LAN — are untouched; no node ever goes
+    down. A geo spec may not also declare repair traffic, tenant
+    classes, or per-node drift traces (one axis of non-stationarity per
+    scenario keeps outcomes attributable).
     """
 
     name: str
@@ -82,10 +96,21 @@ class ScenarioSpec:
     class_weight: tuple[float, ...] | None = None
     class_deadline: tuple[float, ...] | None = None
     class_tail_weight: tuple[float, ...] | None = None
+    sites: tuple[str, ...] | None = None
+    mix_trace: tuple[tuple[float, ...], ...] | None = None
+    egress_degrade: tuple[tuple[str, int, int, float, float], ...] = ()
 
     @property
     def r(self) -> int:
         return len(self.lam)
+
+    @property
+    def is_geo(self) -> bool:
+        return self.sites is not None
+
+    @property
+    def n_sites(self) -> int:
+        return 0 if self.sites is None else len(self.sites)
 
     @property
     def n_classes(self) -> int:
@@ -138,6 +163,43 @@ class ScenarioSpec:
     def bandwidth_scales(self, m: int) -> np.ndarray:
         return self._drift(self.bandwidth_drift, m)
 
+    def mix_schedule(self) -> np.ndarray:
+        """(S, C) client-population share per segment (uniform default)."""
+        if self.mix_trace is None:
+            return np.full(
+                (self.n_segments, self.n_sites), 1.0 / max(self.n_sites, 1)
+            )
+        return np.asarray(self.mix_trace, float)
+
+    def lam_cs_schedule(self) -> np.ndarray:
+        """(S, C, r) per-segment traffic matrices: catalog rates split by
+        the population share, then the scenario's global rate trace."""
+        mixes = self.mix_schedule()  # (S, C)
+        lam = np.asarray(self.lam, float)  # (r,)
+        seq = mixes[:, :, None] * lam[None, None, :]
+        return seq * self.rate_scales()[:, None, None]
+
+    def egress_scales(self, fabric) -> tuple[np.ndarray, np.ndarray]:
+        """(S, C, m) per-pair overhead/bandwidth scales from the egress
+        trace: cross-site pairs of a degraded DC pay ``rtt_scale`` /
+        ``bw_scale`` for the window; co-located clients are untouched."""
+        s, c, m = self.n_segments, fabric.n_sites, fabric.m
+        ovh = np.ones((s, c, m))
+        bw = np.ones((s, c, m))
+        node_site = [nd.site for nd in fabric.cluster.nodes]
+        for storage_site, first, last, rtt_scale, bw_scale in self.egress_degrade:
+            cols = [j for j, site in enumerate(node_site) if site == storage_site]
+            rows = [
+                ci for ci, cs in enumerate(fabric.sites)
+                if cs.name != storage_site
+            ]
+            window = slice(first, last + 1)
+            for ci in rows:
+                for j in cols:
+                    ovh[window, ci, j] *= rtt_scale
+                    bw[window, ci, j] *= bw_scale
+        return ovh, bw
+
     def validate(self, m: int) -> None:
         for trace, label in (
             (self.rate_trace, "rate_trace"),
@@ -180,6 +242,71 @@ class ScenarioSpec:
             self.objective()  # delegates per-class shape/value checks
         except ValueError as e:
             raise ValueError(f"{self.name}: {e}") from None
+        self._validate_geo()
+
+    def _validate_geo(self) -> None:
+        if not self.is_geo:
+            if self.mix_trace is not None or self.egress_degrade:
+                raise ValueError(
+                    f"{self.name}: mix_trace/egress_degrade need `sites`"
+                )
+            return
+        for field, label in (
+            (self.class_id, "tenant classes"),
+            (self.overhead_drift, "overhead_drift"),
+            (self.bandwidth_drift, "bandwidth_drift"),
+        ):
+            if field is not None:
+                raise ValueError(
+                    f"{self.name}: geo scenarios cannot also declare {label} "
+                    "(egress_degrade expresses per-pair drift; one axis of "
+                    "non-stationarity per scenario)"
+                )
+        if self.repair_rate > 0:
+            raise ValueError(
+                f"{self.name}: geo scenarios do not compose with repair "
+                "traffic yet"
+            )
+        if self.mix_trace is not None:
+            mixes = np.asarray(self.mix_trace, float)
+            if mixes.shape != (self.n_segments, self.n_sites):
+                raise ValueError(
+                    f"{self.name}: mix_trace must be (n_segments, n_sites) "
+                    f"= ({self.n_segments}, {self.n_sites}), got {mixes.shape}"
+                )
+            if (mixes < 0).any() or not np.allclose(mixes.sum(-1), 1.0, atol=1e-6):
+                raise ValueError(
+                    f"{self.name}: every mix_trace row must be a "
+                    "distribution over client sites"
+                )
+        for storage_site, first, last, rtt_scale, bw_scale in self.egress_degrade:
+            if not (0 <= first <= last < self.n_segments):
+                raise ValueError(
+                    f"{self.name}: egress window [{first}, {last}] outside "
+                    f"[0, {self.n_segments})"
+                )
+            if rtt_scale < 1.0 or not (0.0 < bw_scale <= 1.0):
+                raise ValueError(
+                    f"{self.name}: egress degradation must slow the path "
+                    "(rtt_scale >= 1, 0 < bw_scale <= 1)"
+                )
+
+    def validate_geo_fabric(self, fabric) -> None:
+        """Geo checks that need the fabric: site names must line up."""
+        if not self.is_geo:
+            raise ValueError(f"{self.name} is not a geo scenario")
+        if tuple(self.sites) != fabric.site_names:
+            raise ValueError(
+                f"{self.name}: sites {self.sites} do not match the "
+                f"fabric's {fabric.site_names}"
+            )
+        storage_sites = {nd.site for nd in fabric.cluster.nodes}
+        for storage_site, *_ in self.egress_degrade:
+            if storage_site not in storage_sites:
+                raise ValueError(
+                    f"{self.name}: egress_degrade names unknown storage "
+                    f"site {storage_site!r}"
+                )
 
     def scaled(self, factor: float, min_requests: int = 200) -> "ScenarioSpec":
         """Same scenario at a reduced request volume (CI smoke / tests)."""

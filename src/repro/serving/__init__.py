@@ -5,6 +5,7 @@ from .router import (
     AdaptiveReplanner,
     EwmaMomentEstimator,
     EwmaRateEstimator,
+    GeoAdaptiveReplanner,
     ReplicaPool,
     Router,
     simulate_serving,

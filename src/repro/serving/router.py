@@ -20,7 +20,11 @@ per-class arrival rates the same way, and :class:`AdaptiveReplanner`
 re-solves JLCM from those *estimated* inputs — batching all candidate
 (theta, availability-mask) re-plans into one ``solve_batch`` call — to
 produce the next segment's dispatch matrix. `src/repro/scenarios/` wires
-this loop against the segmented simulator.
+this loop against the segmented simulator. :class:`GeoAdaptiveReplanner`
+is the client-fabric variant: it estimates the full (C, m) per-(client-
+site, node) service family and the (C, r) traffic matrix, and re-solves
+*geo* problems so placement follows the active client population
+(`core/geo.py`).
 """
 from __future__ import annotations
 
@@ -287,14 +291,28 @@ class EwmaRateEstimator:
     prior: np.ndarray
     alpha: float = 0.5
     rates: np.ndarray = dataclasses.field(init=False)
+    dropped: int = dataclasses.field(init=False, default=0)
 
     def __post_init__(self) -> None:
         self.rates = np.asarray(self.prior, float).copy()
 
     def update(self, class_id: Any, duration: float) -> np.ndarray:
-        counts = np.bincount(
-            np.asarray(class_id).ravel(), minlength=self.rates.shape[0]
-        ).astype(float)
+        """Fold one segment's observed class ids into the EWMA rates.
+
+        Ids outside ``[0, r)`` are *not* client classes — the engine
+        appends repair pseudo-file rows at ids >= r, and a caller that
+        forgets the client mask would otherwise make ``np.bincount``
+        return an array longer than r, silently mis-shaping (or raising
+        on) the EWMA blend. Such ids are dropped here (counted in
+        :attr:`dropped` for callers that want to alarm on the leak):
+        clamping them onto the last class would inflate a real tenant's
+        estimated rate instead.
+        """
+        ids = np.asarray(class_id).ravel()
+        r = self.rates.shape[0]
+        valid = (ids >= 0) & (ids < r)
+        self.dropped += int(ids.size - valid.sum())
+        counts = np.bincount(ids[valid], minlength=r).astype(float)
         emp = counts / max(float(duration), 1e-9)
         self.rates = (1 - self.alpha) * self.rates + self.alpha * emp
         return self.rates.copy()
@@ -510,6 +528,130 @@ class AdaptiveReplanner:
         pi_best = np.asarray(sols.pi[best])
         self.repair_pi = pi_best[r:] if with_repair else None
         return pi_best[:r]
+
+
+@dataclasses.dataclass
+class GeoAdaptiveReplanner:
+    """Geo-aware closed loop: re-place chunks toward the active client site.
+
+    The geo twin of :class:`AdaptiveReplanner`. Its estimated state is one
+    dimension richer on both axes of the loop:
+
+    * **moments** — the :class:`EwmaMomentEstimator` is seeded with the
+      fabric's (C, m) per-(client-site, node) moments and fed the geo
+      simulator's per-pair observations (``GeoSegmentResult.obs``, every
+      field (C, m)); the estimator is elementwise, so it tracks the full
+      pair family unchanged. Cross-site egress degradation shows up as a
+      *row-pattern* drift no per-node estimate could represent.
+    * **rates** — an :class:`EwmaRateEstimator` over flattened
+      (site, file) ids tracks the (C, r) arrival matrix; its column sums
+      are the catalog rates and its normalized rows the per-file client
+      mix, which is how a migrating population ("follow the sun") enters
+      the solver.
+
+    Each :meth:`replan` builds geo problems (``core.geo.geo_problem``)
+    from those estimates — per-pair moments AND mix, so the solve trades
+    locality against storage cost — for the same warm/cold x theta x mask
+    candidate grid as :meth:`AdaptiveReplanner.replan` (the grid-build /
+    warm-start / score-and-argmin conventions deliberately mirror that
+    method; a change to either candidate loop should be applied to both),
+    in ONE ``solve_batch`` call
+    (the ``GeoSpec`` is a pytree: a candidate sweep over client mixes is
+    a single vmapped program). Candidates are arbitrated by geo rollouts
+    from the live queue state (``run_geo_segment_raw`` under the fitted
+    per-pair service family), falling back to the analytic composed bound
+    when no ``carry``/``key`` is given.
+    """
+
+    k: np.ndarray  # (r,) MDS k_i per file
+    cost: np.ndarray  # (m,) per-node cost V_j
+    theta: float
+    estimator: EwmaMomentEstimator  # prior/updates carry (C, m) arrays
+    thetas: tuple[float, ...] | None = None
+    max_iters: int = 400
+    rollout_requests: int = 600
+    replans: int = 0
+
+    def replan(
+        self,
+        lam_cs: np.ndarray,
+        avail: np.ndarray,
+        *,
+        candidate_masks: list[np.ndarray] | None = None,
+        pi0: np.ndarray | None = None,
+        carry: Any | None = None,
+        key: Any | None = None,
+    ) -> np.ndarray:
+        """New (r, m) dispatch matrix from the estimated (C, r) traffic
+        matrix plus the health mask. All inputs are measured/estimated —
+        ground truth never enters (availability is the health-checker
+        input, same detection model as the plain loop)."""
+        from repro.core import geo_problem
+
+        lam_cs = np.asarray(lam_cs, np.float64)
+        c, r = lam_cs.shape
+        avail = np.asarray(avail, bool)
+        lam = lam_cs.sum(axis=0)
+        # a file observed at (essentially) zero rate has no empirical mix;
+        # give it the population-average mix rather than 0/0
+        pop = lam_cs.sum(axis=1)
+        pop_mix = pop / max(pop.sum(), 1e-12)
+        safe = np.maximum(lam, 1e-12)
+        mix = np.where(
+            (lam > 1e-12)[:, None], (lam_cs / safe).T, pop_mix[None, :]
+        )
+        site_mom = self.estimator.moments()  # ServiceMoments, (C, m) arrays
+
+        masks = [avail] if candidate_masks is None else candidate_masks
+        thetas = (self.theta,) if self.thetas is None else tuple(self.thetas)
+        probs, starts = [], []
+        for t in thetas:
+            for mk in masks:
+                mask = jnp.asarray(
+                    np.broadcast_to(np.asarray(mk, bool), (r, avail.shape[-1]))
+                )
+                prob = geo_problem(
+                    jnp.asarray(lam, jnp.float32),
+                    jnp.asarray(self.k, jnp.float32),
+                    site_mom,
+                    mix,
+                    jnp.asarray(self.cost, jnp.float32),
+                    float(t),
+                    mask=mask,
+                )
+                probs.append(prob)
+                starts.append(feasible_uniform(mask, prob.k))
+                if pi0 is not None:
+                    probs.append(prob)
+                    starts.append(jnp.asarray(np.asarray(pi0), jnp.float32))
+        sols = solve_batch(probs, max_iters=self.max_iters, pi0=jnp.stack(starts))
+        self.replans += 1
+
+        cost_term = self.theta * np.asarray(sols.cost)
+        if carry is not None and key is not None:
+            from repro.storage.simulator import run_geo_segment_raw
+
+            d, srv_rates = self.estimator.fitted_shifted_exp()  # (C, m) each
+            lam_cs_j = jnp.asarray(lam_cs, jnp.float32)
+            scores = []
+            for i in range(len(probs)):
+                _, res = run_geo_segment_raw(
+                    carry,
+                    key,
+                    sols.pi[i],
+                    lam_cs_j,
+                    jnp.asarray(d, jnp.float32),
+                    jnp.asarray(srv_rates, jnp.float32),
+                    jnp.asarray(avail),
+                    self.rollout_requests,
+                )
+                scores.append(
+                    float(np.asarray(res.latency).mean()) + float(cost_term[i])
+                )
+        else:
+            scores = (np.asarray(sols.latency_tight) + cost_term).tolist()
+        best = int(np.argmin(scores))
+        return np.asarray(sols.pi[best])
 
 
 def simulate_serving(

@@ -2,8 +2,11 @@
 3-site cluster model, and the exact FCFS discrete-event simulator."""
 
 from .cluster import (
+    ClientSite,
     Cluster,
+    GeoFabric,
     StorageNode,
+    geo_testbed,
     homogeneous_cluster,
     measured_fig6_moments,
     tahoe_testbed,
@@ -45,16 +48,24 @@ from .rs import (
 )
 from .simulator import (
     ClassLatencyStats,
+    FleetResult,
+    GeoSegmentResult,
     NodeObservations,
     SegmentResult,
     SimCarry,
     SimResult,
     dispatch_masks,
+    fleet_one_raw,
+    generate_geo_workload,
     generate_workload,
     init_carry,
     per_class_latency_stats,
+    run_geo_segment_raw,
     run_segment_raw,
     simulate,
+    simulate_fleet,
+    simulate_geo_segment,
+    simulate_geo_segments,
     simulate_latency_cdf,
     simulate_segment,
     simulate_segments,

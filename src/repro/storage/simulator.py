@@ -29,6 +29,17 @@ stacks per-segment parameters and runs the whole schedule as one nested
 ``lax.scan`` (segments outer, requests inner) in a single compiled call —
 the open-loop fast path used for static/oblivious policies.
 
+Geo extension (client fabric, ``storage/cluster.py::GeoFabric``):
+:func:`generate_geo_workload` merges per-(client-site, file) Poisson
+streams, :func:`simulate_geo_segment` / :func:`simulate_geo_segments`
+sample each request's service from its origin site's (C, m) network
+profile while all sites contend for the same per-node FCFS queues, and
+observations come back per (site, node) pair so the control plane can
+estimate the full geo service family. :func:`simulate_fleet` vmaps (and,
+when multiple devices are present, ``shard_map``s) independent seeds into
+one program — the fleet-scale path measured by
+`benchmarks/fleet_scale.py`.
+
 Multi-tenant reporting: :func:`per_class_latency_stats` groups simulated
 latencies by tenant class (per-class mean and empirical p95/p99), the
 measurement counterpart of the pluggable objective layer
@@ -254,12 +265,24 @@ def dispatch_masks(
     Each request Madow-samples its k_i-subset from ``pi[file_id]`` (exact
     Theorem-1 marginals). Selected-but-down nodes are then replaced by
     uniformly-random *available* spares, preserving the read size k_i —
-    a degraded read: any k chunks of an (n, k) MDS code decode. If fewer
-    than k_i nodes are available in total, the request reads everything
-    that is up (a partially-degraded read; scenarios avoid this regime).
+    a degraded read: any k chunks of an (n, k) MDS code decode.
 
     Returns ``(masks, degraded)``: (N, m) bool service sets and (N,) bool
     flags marking requests whose original selection hit a down node.
+
+    Thin availability (fewer than ``k_i`` nodes up at all): the spare pool
+    cannot restore the read size, so the service set is *exactly* the
+    available node set — ``masks[n] == avail`` — and the request is
+    flagged degraded. This is a partially-degraded read: strictly fewer
+    than ``k_i`` chunks cannot decode an MDS stripe, so the data plane
+    must fall back to a partial/object-repair path. The behavior mirrors
+    ``storage/repair.py``'s convention (repair dispatch widens thin
+    placements to ``avail``) so client and reconstruction reads degrade
+    identically; it is asserted by
+    ``tests/test_scenarios.py::TestSegmentedSimulator::
+    test_thin_availability_widens_to_avail``, and scenario specs keep out
+    of the regime entirely (``ScenarioSpec.validate`` requires every
+    segment to leave >= max k_i nodes up).
     """
     pi = jnp.asarray(pi)
     avail = jnp.asarray(avail, bool)
@@ -276,6 +299,9 @@ def dispatch_masks(
         cand = jnp.logical_and(avail, jnp.logical_not(sel))
         score = jnp.where(cand, pr, -1.0)
         rank = jnp.argsort(jnp.argsort(-score))
+        # when need exceeds the candidate pool (thin availability) every
+        # available non-selected node is added: the union below is then
+        # exactly `avail` — never a silent wrap back onto down nodes
         add = jnp.logical_and(cand, rank < need)
         return jnp.logical_or(alive, add), jnp.any(sel & ~avail)
 
@@ -487,3 +513,376 @@ def simulate_segments(
         avail_seq,
         n_requests,
     )
+
+
+# ---------------------------------------------------------------------------
+# Geo-aware simulation: per-(client-site, node) service + fleet scale.
+# ---------------------------------------------------------------------------
+
+
+def generate_geo_workload(
+    key: Array, lam_cs: Array, n_requests: int
+) -> tuple[Array, Array, Array]:
+    """Merged Poisson stream over (client site, file) pairs.
+
+    ``lam_cs`` is (C, r): per-site per-file arrival rates. Superposition
+    of the C*r independent Poisson streams == Poisson(sum) with iid
+    categorical (site, file) marks. Returns ``(t, file_id, site_id)``,
+    each (N,).
+
+    The marks are drawn by inverse-CDF search (one uniform + a
+    ``searchsorted`` into the C*r-bin CDF per request) instead of
+    Gumbel-max ``jax.random.categorical``: identical distribution at
+    ~1/10th the elementwise work, which matters on the fleet path where
+    workload generation would otherwise dominate the whole simulation
+    (`benchmarks/fleet_scale.py`).
+    """
+    lam_cs = jnp.asarray(lam_cs)
+    c, r = lam_cs.shape
+    flat = lam_cs.reshape(-1)
+    k_gap, k_mark = jax.random.split(key)
+    gaps = jax.random.exponential(k_gap, (n_requests,)) / jnp.sum(flat)
+    t = jnp.cumsum(gaps)
+    cdf = jnp.cumsum(flat / jnp.sum(flat))
+    u = jax.random.uniform(k_mark, (n_requests,))
+    marks = jnp.clip(
+        jnp.searchsorted(cdf, u, side="right"), 0, flat.shape[0] - 1
+    )
+    return t, marks % r, marks // r
+
+
+class GeoSegmentResult(NamedTuple):
+    """One geo segment: like :class:`SegmentResult` plus the client axis.
+
+    ``site_id`` records each request's origin site; ``obs`` carries
+    per-(site, node) observation sums — arrays shaped (C, m) instead of
+    (m,), which the EWMA moment estimator consumes unchanged (it is
+    elementwise) to track the full per-pair service family.
+    """
+
+    latency: Array  # (N,)
+    file_id: Array  # (N,)
+    site_id: Array  # (N,) request origin client site
+    arrival: Array  # (N,) absolute arrival times
+    node_busy: Array  # (m,) busy seconds added this segment
+    degraded: Array  # (N,) bool
+    obs: NodeObservations  # per-(site, node): every field (C, m)
+    t_end: Array  # ()
+
+    def mean_latency(self) -> Array:
+        return jnp.mean(self.latency)
+
+
+def _run_geo_segment(
+    carry: SimCarry,
+    key: Array,
+    pi: Array,
+    lam_cs: Array,
+    overheads_cs: Array,
+    rates_cs: Array,
+    avail: Array,
+    n_requests: int,
+) -> tuple[SimCarry, GeoSegmentResult]:
+    """One geo segment: site-dependent service, shared per-node FCFS queues.
+
+    ``overheads_cs`` / ``rates_cs`` are (C, m) shifted-exponential
+    parameters (client site x node); each request samples service from its
+    *origin site's* row, but all sites contend for the same m queues —
+    locality buys a shorter service time, not a private server.
+    """
+    m = overheads_cs.shape[-1]
+    c = overheads_cs.shape[0]
+    k_wl, k_sel, k_srv = jax.random.split(key, 3)
+    rel, file_id, site_id = generate_geo_workload(k_wl, lam_cs, n_requests)
+    arrival = carry.t0 + rel
+    e = jax.random.exponential(k_srv, (n_requests, m))
+    service = overheads_cs[site_id] + e / rates_cs[site_id]
+    masks, degraded = dispatch_masks(k_sel, pi, file_id, avail)
+
+    def step(dep, inp):
+        t, mask, srv = inp
+        start = jnp.maximum(t, dep)
+        finish = start + srv
+        new_dep = jnp.where(mask, finish, dep)
+        latency = jnp.max(jnp.where(mask, finish, -jnp.inf)) - t
+        busy = jnp.where(mask, srv, 0.0)
+        return new_dep, (latency, busy)
+
+    dep, (latency, busy) = jax.lax.scan(
+        step, carry.dep, (arrival, masks, service)
+    )
+    served = jnp.where(masks, service, 0.0)
+    site_oh = jax.nn.one_hot(site_id, c, dtype=jnp.float32)  # (N, C)
+    mask_f = masks.astype(jnp.float32)
+    obs = NodeObservations(
+        count=jnp.einsum("nc,nm->cm", site_oh, mask_f).astype(jnp.int32),
+        s1=jnp.einsum("nc,nm->cm", site_oh, served),
+        s2=jnp.einsum("nc,nm->cm", site_oh, served**2),
+        s3=jnp.einsum("nc,nm->cm", site_oh, served**3),
+    )
+    new_carry = SimCarry(dep=dep, t0=arrival[-1])
+    return new_carry, GeoSegmentResult(
+        latency=latency,
+        file_id=file_id,
+        site_id=site_id,
+        arrival=arrival,
+        node_busy=busy.sum(0),
+        degraded=degraded,
+        obs=obs,
+        t_end=arrival[-1],
+    )
+
+
+# Raw-parameter jitted entry point (the geo twin of `run_segment_raw`):
+# rollout surface for the geo-aware replanner. Positional signature:
+# (carry, key, pi, lam_cs, overheads_cs, rates_cs, avail, n_requests).
+run_geo_segment_raw = jax.jit(_run_geo_segment, static_argnames=("n_requests",))
+
+
+def simulate_geo_segment(
+    key: Array,
+    pi: Array,
+    lam_cs: Array,
+    fabric,
+    chunk_mb: float,
+    n_requests: int,
+    *,
+    avail: Array | None = None,
+    rate_scale: float | Array = 1.0,
+    overhead_scale: float | Array = 1.0,
+    bandwidth_scale: float | Array = 1.0,
+    carry: SimCarry | None = None,
+) -> tuple[GeoSegmentResult, SimCarry]:
+    """Host-facing geo segment against a :class:`~.cluster.GeoFabric`.
+
+    ``lam_cs`` is the (C, r) per-site arrival matrix (a migrating client
+    population is just a per-segment reweighting of its rows);
+    ``rate_scale`` multiplies it (scalar, (C, 1)-broadcastable, or full
+    (C, r)). ``overhead_scale`` / ``bandwidth_scale`` are broadcastable
+    against the fabric's (C, m) network profile — per-*pair* drift, e.g. a
+    DC's egress degrading for cross-site clients only, which no per-node
+    scale can express.
+    """
+    m = fabric.m
+    avail = jnp.ones((m,), bool) if avail is None else jnp.asarray(avail, bool)
+    carry = init_carry(m) if carry is None else carry
+    d, rates = fabric.service_params(chunk_mb)
+    overheads = d * jnp.asarray(overhead_scale)
+    rates = rates * jnp.asarray(bandwidth_scale)
+    lam_s = jnp.asarray(lam_cs) * rate_scale
+    new_carry, res = run_geo_segment_raw(
+        carry, key, jnp.asarray(pi), lam_s, overheads, rates, avail, n_requests
+    )
+    return res, new_carry
+
+
+@functools.partial(jax.jit, static_argnames=("n_requests",))
+def _simulate_geo_segments_device(
+    key, pi_seq, lam_cs_seq, overheads_seq, rates_seq, avail_seq, n_requests
+):
+    n_seg = lam_cs_seq.shape[0]
+    keys = jax.random.split(key, n_seg)
+
+    def seg(carry, inp):
+        skey, pi, lam_cs, ovh, rt, av = inp
+        return _run_geo_segment(carry, skey, pi, lam_cs, ovh, rt, av, n_requests)
+
+    carry0 = init_carry(overheads_seq.shape[-1])
+    _, results = jax.lax.scan(
+        seg, carry0, (keys, pi_seq, lam_cs_seq, overheads_seq, rates_seq, avail_seq)
+    )
+    return results
+
+
+def simulate_geo_segments(
+    key: Array,
+    pi_seq: Array,
+    lam_cs_seq: Array,
+    fabric,
+    chunk_mb: float,
+    n_requests: int,
+    *,
+    avail_seq: Array | None = None,
+    overhead_scale_seq: Array | None = None,
+    bandwidth_scale_seq: Array | None = None,
+) -> GeoSegmentResult:
+    """Whole geo segment schedule as ONE nested ``lax.scan`` device call.
+
+    ``lam_cs_seq`` is (S, C, r) — the per-segment client-population mix is
+    already folded into the rates (follow-the-sun is a row reweighting).
+    ``pi_seq`` is (S, r, m) or (r, m) broadcast; the optional scale
+    sequences are (S, C, m)-broadcastable per-pair drift (egress
+    degradation). Open-loop fast path: static / oblivious geo policies run
+    their full schedule in a single compiled call, exactly like
+    :func:`simulate_segments` for the single-site model.
+    """
+    lam_cs_seq = jnp.asarray(lam_cs_seq, jnp.float32)
+    if lam_cs_seq.ndim != 3:
+        raise ValueError(
+            f"lam_cs_seq must be (S, C, r), got shape {lam_cs_seq.shape}"
+        )
+    n_seg = lam_cs_seq.shape[0]
+    m = fabric.m
+    c = fabric.n_sites
+    pi_seq = jnp.asarray(pi_seq)
+    if pi_seq.ndim == 2:
+        pi_seq = jnp.broadcast_to(pi_seq, (n_seg,) + pi_seq.shape)
+    avail_seq = (
+        jnp.ones((n_seg, m), bool)
+        if avail_seq is None
+        else jnp.asarray(avail_seq, bool)
+    )
+
+    def scales(seq):
+        if seq is None:
+            return jnp.ones((n_seg, c, m))
+        return jnp.broadcast_to(jnp.asarray(seq, jnp.float32), (n_seg, c, m))
+
+    d, rates = fabric.service_params(chunk_mb)
+    overheads_seq = d * scales(overhead_scale_seq)
+    rates_seq = rates * scales(bandwidth_scale_seq)
+    return _simulate_geo_segments_device(
+        key, pi_seq, lam_cs_seq, overheads_seq, rates_seq, avail_seq, n_requests
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fleet-scale simulation: many independent systems in one program.
+# ---------------------------------------------------------------------------
+
+
+class FleetResult(NamedTuple):
+    """A fleet of independent geo simulations, leading axis = seed.
+
+    Every field carries a leading (S,) seed axis; within a seed the run is
+    an independent replica of the full system (own workload randomness,
+    own FCFS queues) — the estimator-variance / what-if-ensemble shape,
+    and the throughput unit for `benchmarks/fleet_scale.py`.
+    """
+
+    latency: Array  # (S, N)
+    file_id: Array  # (S, N)
+    site_id: Array  # (S, N)
+    node_busy: Array  # (S, m)
+
+    def mean_latency(self) -> Array:
+        return jnp.mean(self.latency)
+
+    def per_site_mean(self, n_sites: int) -> Array:
+        """(C,) empirical mean latency by request origin site.
+
+        A site that originated zero requests gets NaN, never a 0-count
+        mean — the same contract as :meth:`SimResult.per_file_mean` and
+        ``ScenarioOutcome.site_mean``.
+        """
+        one_hot = jax.nn.one_hot(self.site_id, n_sites, dtype=jnp.float32)
+        tot = jnp.einsum("snc,sn->c", one_hot, self.latency)
+        cnt = one_hot.sum((0, 1))
+        return jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1.0), jnp.nan)
+
+
+def _fleet_one(key, pi, lam_cs, overheads_cs, rates_cs, n_requests, warm):
+    m = overheads_cs.shape[-1]
+    k_wl, k_sel, k_srv = jax.random.split(key, 3)
+    t, file_id, site_id = generate_geo_workload(k_wl, lam_cs, n_requests)
+    sel_keys = jax.random.split(k_sel, n_requests)
+    e = jax.random.exponential(k_srv, (n_requests, m))
+    service = overheads_cs[site_id] + e / rates_cs[site_id]
+    masks = jax.vmap(lambda sk, fid: madow_sample(sk, pi[fid]))(
+        sel_keys, file_id
+    )
+
+    # busy accrues in the carry (an (m,) add per step) instead of being
+    # emitted per step: an (N, m) stacked output would dominate the whole
+    # kernel in memory traffic at fleet widths
+    def step(carry, inp):
+        dep, busy = carry
+        tt, mask, srv = inp
+        start = jnp.maximum(tt, dep)
+        finish = start + srv
+        new_dep = jnp.where(mask, finish, dep)
+        latency = jnp.max(jnp.where(mask, finish, -jnp.inf)) - tt
+        new_busy = busy + jnp.where(mask, srv, 0.0)
+        return (new_dep, new_busy), latency
+
+    (_, busy), latency = jax.lax.scan(
+        step, (jnp.zeros((m,)), jnp.zeros((m,))), (t, masks, service)
+    )
+    return (
+        latency[warm:],
+        file_id[warm:],
+        site_id[warm:],
+        busy,
+    )
+
+
+# Jitted single-seed entry point — the sequential baseline that
+# `benchmarks/fleet_scale.py` loops over to measure the vmap win.
+fleet_one_raw = jax.jit(_fleet_one, static_argnames=("n_requests", "warm"))
+
+
+@functools.partial(jax.jit, static_argnames=("n_requests", "warm"))
+def _fleet_vmapped(keys, pi, lam_cs, overheads_cs, rates_cs, n_requests, warm):
+    return jax.vmap(
+        lambda k: _fleet_one(
+            k, pi, lam_cs, overheads_cs, rates_cs, n_requests, warm
+        )
+    )(keys)
+
+
+def _shard_map_compat():
+    """`jax.shard_map` across the JAX versions this repo supports."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm
+
+
+def simulate_fleet(
+    key: Array,
+    pi: Array,
+    lam_cs: Array,
+    fabric,
+    chunk_mb: float,
+    n_requests: int,
+    n_seeds: int,
+    *,
+    drop_warmup: float = 0.1,
+    devices: str = "auto",
+) -> FleetResult:
+    """Simulate ``n_seeds`` independent geo systems in ONE device program.
+
+    The fleet axis is pure data parallelism — seeds never interact — so it
+    vmaps: one ``lax.scan`` whose per-step body is (S, m)-wide instead of
+    S separate (m,)-wide scans, amortizing the per-step dispatch that
+    dominates a Python loop over seeds (``fleet_one_raw``; the >= 10x win
+    is asserted by `benchmarks/fleet_scale.py`). With multiple local
+    devices and ``n_seeds`` divisible by the device count, the vmapped
+    program is additionally ``shard_map``-ped over a seed mesh axis
+    (``devices="auto"``; ``"never"`` forces plain vmap — the single-CPU CI
+    path), giving fleet scale-out with no change in semantics: each seed's
+    trajectory is identical to the sequential run of the same key.
+    """
+    keys = jax.random.split(key, n_seeds)
+    d, rates = fabric.service_params(chunk_mb)
+    lam_cs = jnp.asarray(lam_cs, jnp.float32)
+    warm = int(n_requests * drop_warmup)
+    n_dev = len(jax.devices())
+    if devices == "auto" and n_dev > 1 and n_seeds % n_dev == 0:
+        mesh = jax.sharding.Mesh(np.asarray(jax.devices()), ("seed",))
+        spec = jax.sharding.PartitionSpec
+        sharded = _shard_map_compat()(
+            functools.partial(
+                _fleet_vmapped, n_requests=n_requests, warm=warm
+            ),
+            mesh=mesh,
+            in_specs=(spec("seed"), spec(), spec(), spec(), spec()),
+            out_specs=spec("seed"),
+        )
+        out = sharded(keys, jnp.asarray(pi), lam_cs, d, rates)
+    else:
+        out = _fleet_vmapped(
+            keys, jnp.asarray(pi), lam_cs, d, rates, n_requests, warm
+        )
+    return FleetResult(*out)

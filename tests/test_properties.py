@@ -163,6 +163,43 @@ def test_rs_roundtrip_bit_exact_across_backends(k, extra, nbytes, seed):
 
 @settings(max_examples=20, deadline=None)
 @given(
+    rtt=st.lists(st.floats(0.0, 6.0), min_size=3, max_size=3),
+    bw_scale=st.lists(st.floats(0.3, 3.0), min_size=3, max_size=3),
+    chunk_mb=st.floats(5.0, 40.0),
+)
+def test_geo_pair_moments_roundtrip_shifted_exp_fit(rtt, bw_scale, chunk_mb):
+    """Property (ISSUE satellite): every (client site x node) pair of a
+    geo fabric is a shifted exponential whose first two moments invert
+    exactly through ``fit_shifted_exponential`` back to the pair's
+    (overhead, rate) network parameters — the contract that lets the
+    closed loop *sample* from estimated pair moments."""
+    from repro.core import fit_shifted_exponential
+    from repro.storage import ClientSite, GeoFabric, tahoe_testbed
+
+    cluster = tahoe_testbed()
+    sites = (
+        ClientSite.reference("ref", ("NJ", "TX", "CA")),
+        ClientSite(
+            name="x",
+            rtt_s=dict(zip(("NJ", "TX", "CA"), rtt)),
+            bandwidth_scale=dict(zip(("NJ", "TX", "CA"), bw_scale)),
+        ),
+    )
+    fabric = GeoFabric(cluster=cluster, sites=sites)
+    mom = fabric.moments(chunk_mb)
+    d_fit, rate_fit = fit_shifted_exponential(mom.mean, mom.m2)
+    np.testing.assert_allclose(
+        np.asarray(d_fit), np.asarray(fabric.overheads()), rtol=2e-3, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(rate_fit),
+        np.asarray(fabric.bandwidths()) / chunk_mb,
+        rtol=2e-3,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
     n=st.integers(2, 10),
     seed=st.integers(0, 2**31 - 1),
 )

@@ -73,6 +73,36 @@ class TestSegmentedSimulator:
         assert not masks[:, 0].any() and not masks[:, 5].any()
         assert np.asarray(degraded).any()
 
+    def test_thin_availability_widens_to_avail(self, cluster, pi):
+        """ISSUE satellite (site-outage shape): when a segment leaves
+        fewer than k_i nodes up, the documented degraded-read contract is
+        that the service set is EXACTLY the available node set — the same
+        widening the repair path applies — never a silent wrap back onto
+        down nodes, and the request is flagged degraded."""
+        avail = np.zeros((cluster.m,), bool)
+        avail[[2, 7, 9]] = True  # 3 survivors < k in {4, 6}
+        _, fid = generate_workload(jax.random.key(11), LAM, 300)
+        masks, degraded = dispatch_masks(jax.random.key(12), pi, fid, avail)
+        masks = np.asarray(masks)
+        np.testing.assert_array_equal(
+            masks, np.broadcast_to(avail, masks.shape)
+        )
+        assert np.asarray(degraded).all()
+
+    def test_thin_availability_partial_site_mix(self, cluster, pi):
+        """Mixed regime: 5 survivors serve the k=4 file at full read size
+        (spare fallback) while the k=6 file degrades to all 5 — per-file,
+        not per-segment, semantics."""
+        avail = np.ones((cluster.m,), bool)
+        avail[[0, 1, 2, 3, 4, 5, 6]] = False  # NJ + most of TX down
+        _, fid = generate_workload(jax.random.key(13), LAM, 400)
+        masks, _ = dispatch_masks(jax.random.key(14), pi, fid, avail)
+        sizes = np.asarray(masks).sum(-1)
+        fid = np.asarray(fid)
+        np.testing.assert_array_equal(sizes[fid == 0], 4)  # k=4: restored
+        np.testing.assert_array_equal(sizes[fid == 1], 5)  # k=6: all up
+        assert not np.asarray(masks)[:, :7].any()
+
     def test_all_up_matches_plain_madow_sum(self, cluster, pi):
         """Healthy cluster: the fallback path is inert — sets are exactly
         the Madow k-subsets and nothing is flagged degraded."""

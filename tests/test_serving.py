@@ -5,7 +5,12 @@ import numpy as np
 import pytest
 
 from repro.core import exponential_moments
-from repro.serving import ReplicaPool, Router, simulate_serving
+from repro.serving import (
+    EwmaRateEstimator,
+    ReplicaPool,
+    Router,
+    simulate_serving,
+)
 
 
 @pytest.fixture(scope="module")
@@ -109,3 +114,30 @@ class TestRouter:
         assert (replanned.pi[:, 3] <= 1e-6).all()
         # must have re-solved for the new rates, not served the stale entry
         assert not np.allclose(replanned.pi, stale, atol=1e-6)
+
+
+class TestEwmaRateEstimator:
+    def test_repair_augmented_ids_do_not_break_the_blend(self):
+        """Regression (ISSUE satellite): a caller that forgets the client
+        mask leaks repair pseudo-file ids (>= r) into the update;
+        np.bincount then returns an array longer than r and the EWMA
+        blend mis-shapes. Out-of-range ids must be dropped, shape
+        preserved, and the valid ids still counted."""
+        est = EwmaRateEstimator(prior=np.asarray([0.1, 0.1, 0.1]), alpha=1.0)
+        # repair rows ride at ids r..2r-1 (see scenarios/engine.py)
+        ids = np.asarray([0, 1, 2, 3, 4, 5, 0, 1, -1])
+        rates = est.update(ids, duration=10.0)
+        assert rates.shape == (3,)
+        np.testing.assert_allclose(rates, [0.2, 0.2, 0.1])
+        assert est.dropped == 4  # the three repair ids + the negative one
+
+    def test_clean_ids_unaffected_by_validation(self):
+        a, b = (
+            EwmaRateEstimator(prior=np.zeros(4), alpha=0.5),
+            EwmaRateEstimator(prior=np.zeros(4), alpha=0.5),
+        )
+        ids = np.asarray([0, 1, 1, 2, 3, 3, 3])
+        r1 = a.update(ids, 5.0)
+        r2 = b.update(np.concatenate([ids, [7, 9]]), 5.0)
+        np.testing.assert_allclose(r1, r2)
+        assert a.dropped == 0 and b.dropped == 2
