@@ -1,0 +1,180 @@
+"""Hot/warm cache tier: capacity-cost frontier + closed-loop win asserts.
+
+Two sections, two CSVs (``benchmarks/results/cache_tier_frontier.csv``
+and ``benchmarks/results/cache_tier_scenarios.csv``):
+
+1. **frontier** — hot-tier capacity swept over the scenario catalog
+   (0 -> catalog size), every capacity point solved cache-aware by
+   Algorithm JLCM in ONE ``solve_batch`` call (the points share the
+   (r, m) shape and differ only in the Che hit-rate vector and hot-tier
+   cost constant, so they vmap onto a single compiled program — same
+   shape as the Fig. 13 theta sweep). Shows the f4 tradeoff: replicated
+   hot capacity (3.6x overhead) buys down both the warm tier's latency
+   bound and its erasure-coded (2.1x-ish) support cost, with
+   diminishing returns once the working set fits.
+
+2. **scenario** — the ISSUE acceptance measurement: on ``cache-warmup``
+   and ``cache-outage`` the cache-AWARE adaptive policy must beat the
+   cache-OBLIVIOUS baseline (planned for raw design rates as if the hot
+   tier did not exist; the data-plane cache runs identically under
+   both) on mean latency AND windowed p99 at equal-or-lower total
+   storage cost (time-averaged warm support cost + provisioned hot
+   tier). p99 is compared per reporting window
+   (``ScenarioOutcome.p99_windowed``): the pooled p99 of an
+   outage run is a quantile of the storm window alone for every policy,
+   so it measures storm physics rather than plan quality.
+
+CLI:
+    PYTHONPATH=src:. python benchmarks/cache_tier.py          # full
+    PYTHONPATH=src:. python benchmarks/cache_tier.py --smoke  # CI
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import JLCMProblem, solve_batch
+from repro.scenarios import get_scenario
+from repro.scenarios.engine import initial_plan, run_scenario
+from repro.storage import tahoe_testbed
+from repro.storage.cache import MB, CacheModel
+
+from benchmarks.common import emit
+
+CAPACITIES_MB = (0.0, 25.0, 50.0, 100.0, 150.0, 200.0, 250.0)
+
+
+def frontier(smoke: bool = False) -> list[dict]:
+    """Capacity sweep, one batched cache-aware solve for all points."""
+    spec = get_scenario("cache-warmup")
+    cl = tahoe_testbed()
+    lam = np.asarray(spec.lam, float)
+    mom = cl.moments(spec.chunk_mb)
+    caps = CAPACITIES_MB[:4] if smoke else CAPACITIES_MB
+    models = [
+        CacheModel(
+            file_bytes=spec.file_bytes(),
+            capacity_bytes=cap * MB,
+            hit_latency=spec.cache_hit_latency,
+            hot_price_per_mb=spec.cache_hot_price,
+        )
+        for cap in caps
+    ]
+    probs = [
+        JLCMProblem(
+            lam=jnp.asarray(lam, jnp.float32),
+            k=jnp.asarray(spec.k, jnp.float32),
+            moments=mom,
+            cost=cl.cost,
+            theta=spec.theta,
+            cache=cm.spec(lam),
+        )
+        for cm in models
+    ]
+    sols = solve_batch(probs, max_iters=300)
+
+    cost_v = np.asarray(cl.cost, float)
+    rows = []
+    for i, (cap, cm) in enumerate(zip(caps, models)):
+        pi = np.asarray(sols.pi[i])
+        warm_cost = float(((pi > 1e-3) * cost_v).sum())
+        rows.append(dict(
+            section="frontier",
+            scenario="design-point",
+            capacity_mb=cap,
+            hit_frac=round(float(np.average(cm.hit_rates(lam), weights=lam)), 4),
+            latency_bound=round(float(sols.latency_tight[i]), 3),
+            warm_cost=round(warm_cost, 1),
+            hot_cost=round(cm.hot_cost(), 2),
+            total_cost=round(warm_cost + cm.hot_cost(), 2),
+        ))
+
+    # monotone sanity along the frontier: more hot capacity never raises
+    # the blended latency bound, and the warm support never widens. The
+    # warm-cost check stops below full-catalog capacity: once everything
+    # fits (hit -> 1) the miss load is ~zero, the warm objective is flat
+    # in the support, and the solver's residual support is noise.
+    catalog_mb = float(spec.file_bytes().sum() / MB)
+    bounds = [r["latency_bound"] for r in rows]
+    warms = [
+        r["warm_cost"] for r in rows if r["capacity_mb"] < catalog_mb
+    ]
+    assert all(b2 <= b1 + 1e-6 for b1, b2 in zip(bounds, bounds[1:])), (
+        f"latency bound must fall as hot capacity grows: {bounds}"
+    )
+    assert all(w2 <= w1 + 1e-6 for w1, w2 in zip(warms, warms[1:])), (
+        f"warm support cost must not widen with hot capacity: {warms}"
+    )
+    return rows
+
+
+def scenario_wins(smoke: bool = False) -> list[dict]:
+    """Cache-aware adaptive vs cache-oblivious baseline, asserted."""
+    cl = tahoe_testbed()
+    n_req = 400 if smoke else 800
+    seeds = (0,) if smoke else (0, 1)
+    rows = []
+    for name in ("cache-warmup", "cache-outage"):
+        spec = get_scenario(name)
+        pi0, _, _ = initial_plan(spec, cl)
+        for seed in seeds:
+            aware = run_scenario(
+                spec, "adaptive", seed=seed, cluster=cl,
+                requests_per_segment=n_req, pi0=pi0,
+            )
+            blind = run_scenario(
+                spec, "static", seed=seed, cluster=cl,
+                requests_per_segment=n_req, cache_aware=False,
+            )
+            for o in (aware, blind):
+                rows.append(dict(
+                    section="scenario",
+                    scenario=name,
+                    policy=o.policy,
+                    seed=seed,
+                    mean=round(o.mean, 3),
+                    p99_windowed=round(o.p99_windowed, 3),
+                    p99_pooled=round(o.p99, 3),
+                    hit_frac=round(o.hit_frac, 4),
+                    storage_cost=round(o.storage_cost, 2),
+                ))
+            assert aware.mean < blind.mean, (
+                f"{name} seed={seed}: cache-aware adaptive mean "
+                f"{aware.mean:.2f} must beat cache-oblivious "
+                f"{blind.mean:.2f}"
+            )
+            assert aware.p99_windowed < blind.p99_windowed, (
+                f"{name} seed={seed}: cache-aware adaptive windowed p99 "
+                f"{aware.p99_windowed:.2f} must beat cache-oblivious "
+                f"{blind.p99_windowed:.2f}"
+            )
+            assert aware.storage_cost <= blind.storage_cost, (
+                f"{name} seed={seed}: cache-aware adaptive storage cost "
+                f"{aware.storage_cost:.2f} must not exceed cache-oblivious "
+                f"{blind.storage_cost:.2f}"
+            )
+    return rows
+
+
+def run(smoke: bool = False) -> list[dict]:
+    front = frontier(smoke)
+    wins = scenario_wins(smoke)
+    emit(front, "cache_tier_frontier")
+    emit(wins, "cache_tier_scenarios")
+    return front + wins
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="reduced capacities/requests/seeds for CI (keeps all asserts)",
+    )
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -27,7 +27,6 @@ CLI:
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +40,7 @@ from repro.storage import (
     simulate_geo_segment,
 )
 
-from benchmarks.common import emit
+from benchmarks.common import emit, time_interleaved
 
 LAM = np.asarray([0.036, 0.028, 0.016, 0.012])
 K = np.asarray([4.0, 4.0, 6.0, 6.0])
@@ -60,22 +59,6 @@ def _plan(fabric) -> jnp.ndarray:
         theta=2.0,
     )
     return solve(prob, max_iters=200).pi
-
-
-def _time_interleaved(fns, repeats: int = 5) -> list[float]:
-    """Best-of-repeats wall time for each fn, with the repeats
-    *interleaved* so a noisy window on a shared/small machine hits every
-    candidate instead of biasing whichever happened to run through it
-    (min is the standard noise-robust microbenchmark estimator)."""
-    for fn in fns:
-        fn()  # warmup / compile
-    best = [float("inf")] * len(fns)
-    for _ in range(repeats):
-        for i, fn in enumerate(fns):
-            t0 = time.perf_counter()
-            fn()
-            best[i] = min(best[i], time.perf_counter() - t0)
-    return best
 
 
 def run(
@@ -108,7 +91,7 @@ def run(
             )
             jax.block_until_ready(res.latency)
 
-    t_fleet, t_loop = _time_interleaved([run_fleet, run_loop])
+    t_fleet, t_loop = time_interleaved([run_fleet, run_loop])
     total = n_seeds * n_requests
     speedup = t_loop / t_fleet
 

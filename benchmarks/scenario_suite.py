@@ -15,7 +15,10 @@ traffic flows and the repair-aware closed loop beats the repair-oblivious
 static plan on client mean AND p99; on ``geo-client-shift``, the
 geo-aware closed loop (client fabric, `src/repro/core/geo.py`) beats the
 static geo-oblivious plan on mean latency while the client population
-migrates.
+migrates; on ``cache-warmup`` and ``cache-outage``, the cache-aware
+closed loop beats the cache-OBLIVIOUS baseline (``static-cacheblind``,
+planned for raw design rates as if the hot tier did not exist) on mean
+AND windowed p99 at equal-or-lower total storage cost.
 
 CLI:
     PYTHONPATH=src:. python benchmarks/scenario_suite.py                  # all
@@ -46,7 +49,9 @@ def run(
         specs = [s.scaled(0.25, min_requests=300) for s in specs]
     results: dict[str, list] = {}
     for spec in specs:
-        outs = run_all_policies(spec, seed=seed)
+        outs = run_all_policies(
+            spec, seed=seed, include_cacheblind=spec.has_cache
+        )
         by_policy = {o.policy: o for o in outs}
         static_mean = by_policy["static"].mean
         rows = [
@@ -73,6 +78,26 @@ def run(
                 "geo-aware adaptive re-placement must beat the static "
                 f"geo-oblivious plan on mean latency: adaptive "
                 f"{ada.mean:.2f} vs static {sta.mean:.2f}"
+            )
+        if spec.name in ("cache-warmup", "cache-outage"):
+            ada = by_policy["adaptive"]
+            blind = by_policy["static-cacheblind"]
+            # windowed p99 (mean of per-segment p99s): the pooled p99 of
+            # an outage run is a quantile of the storm window alone for
+            # every policy — see ScenarioOutcome.p99_windowed
+            assert (
+                ada.mean < blind.mean
+                and ada.p99_windowed < blind.p99_windowed
+            ), (
+                "cache-aware adaptive must beat the cache-oblivious "
+                f"baseline: adaptive {ada.mean:.2f}/{ada.p99_windowed:.2f}"
+                f" vs cacheblind {blind.mean:.2f}/"
+                f"{blind.p99_windowed:.2f} (mean/windowed p99)"
+            )
+            assert ada.storage_cost <= blind.storage_cost, (
+                "the cache-aware win may not be bought with extra "
+                f"storage: adaptive {ada.storage_cost:.2f} vs cacheblind "
+                f"{blind.storage_cost:.2f}"
             )
         if spec.name == "node-failure":
             ada, sta, obl = (

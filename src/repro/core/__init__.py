@@ -34,12 +34,15 @@ from .latency_bound import (
     tail_probability_bounds,
 )
 from .objectives import (
+    CacheSpec,
     ObjectiveSpec,
+    apply_cache_thinning,
     class_mean_bounds,
     class_tail_bounds,
     compose_file_bounds,
     composed_latency,
     empirical_objective,
+    make_cache_spec,
     make_objective,
     refresh_shared_z,
 )

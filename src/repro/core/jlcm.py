@@ -56,7 +56,9 @@ from jax import Array
 from .geo import GeoSpec, geo_eq_varq
 from .latency_bound import file_latency_bounds
 from .objectives import (
+    CacheSpec,
     ObjectiveSpec,
+    apply_cache_thinning,
     class_mean_bounds,
     class_tail_bounds,
     compose_file_bounds,
@@ -91,6 +93,13 @@ class JLCMProblem(NamedTuple):
     # geo_problem` (which also keeps `moments` consistent as the node
     # mixture and collapses C == 1 to the plain path exactly)
     geo: GeoSpec | None = None
+    # hot/warm cache tier (core/objectives.py::CacheSpec, built by
+    # storage/cache.py): per-file hot-cache hit rates thin the arrivals
+    # the warm-tier solve plans against to lam_i (1 - h_i), hits blend
+    # back in at hit_latency, and the replicated hot tier's cost joins
+    # the reported objective. None = every read hits the warm tier,
+    # op-for-op identical to the pre-cache solver
+    cache: CacheSpec | None = None
 
     @property
     def r(self) -> int:
@@ -135,15 +144,17 @@ def _linearized_cost(pi: Array, pi_ref: Array, cost: Array, beta: float) -> Arra
 
 def _latency_term(pi: Array, z: Array, prob: JLCMProblem) -> Array:
     lat = composed_latency(
-        pi, z, prob.lam, prob.moments, prob.objective, prob.geo
+        pi, z, prob.lam, prob.moments, prob.objective, prob.geo, prob.cache
     )
-    rates = node_arrival_rates(pi, prob.lam)
+    # stability is a property of the queues the warm tier actually serves:
+    # node arrival rates are evaluated at the cache-thinned miss traffic
+    rates = node_arrival_rates(pi, apply_cache_thinning(prob.lam, prob.cache))
     return lat + stability_penalty(rates, prob.moments)
 
 
 def _refresh_z(pi: Array, prob: JLCMProblem) -> Array:
     return refresh_shared_z(
-        pi, prob.lam, prob.moments, prob.objective, prob.geo
+        pi, prob.lam, prob.moments, prob.objective, prob.geo, prob.cache
     )
 
 
@@ -276,18 +287,23 @@ def _finalize(pi: Array, z: Array, prob: JLCMProblem, trace: Array) -> JLCMSolut
     spec = prob.objective
     placement = pi > SUPPORT_TOL
     n = jnp.sum(placement, axis=-1)
+    lam_eff = apply_cache_thinning(prob.lam, prob.cache)
     if prob.geo is not None:
         # per-(file, node) sojourn moments: the Lemma-2 machinery is
         # batch-safe in (r, m) shapes, so the geo fabric drops straight in
-        eq_b, varq_b = geo_eq_varq(pi, prob.lam, prob.geo)
+        eq_b, varq_b = geo_eq_varq(pi, lam_eff, prob.geo)
     else:
-        rates = node_arrival_rates(pi, prob.lam)
+        rates = node_arrival_rates(pi, lam_eff)
         eq, varq = pk_sojourn_moments(rates, prob.moments)
         eq_b, varq_b = eq[..., None, :], varq[..., None, :]
     t = file_latency_bounds(pi, eq_b, varq_b)
-    tight = compose_file_bounds(t, pi, eq_b, varq_b, prob.lam, spec)
-    latency = composed_latency(pi, z, prob.lam, prob.moments, spec, prob.geo)
+    tight = compose_file_bounds(t, pi, eq_b, varq_b, prob.lam, spec, prob.cache)
+    latency = composed_latency(
+        pi, z, prob.lam, prob.moments, spec, prob.geo, prob.cache
+    )
     cost = _true_cost(pi, prob.cost)
+    if prob.cache is not None:
+        cost = cost + prob.cache.hot_cost
     class_latency = class_tail = None
     # per-class reporting needs a statically-sized class axis: any of the
     # per-class arrays provides it (a spec with none of them set is a pure
@@ -295,8 +311,16 @@ def _finalize(pi: Array, z: Array, prob: JLCMProblem, trace: Array) -> JLCMSolut
     if spec is not None and (
         spec.weight is not None or spec.deadline is not None
     ):
-        class_latency = class_mean_bounds(t, prob.lam, spec)
-        class_tail = class_tail_bounds(pi, eq_b, varq_b, prob.lam, spec)
+        t_report = t
+        if prob.cache is not None:
+            t_report = (
+                1.0 - prob.cache.hit
+            ) * t + prob.cache.hit * prob.cache.hit_latency
+        class_latency = class_mean_bounds(t_report, prob.lam, spec)
+        class_tail = class_tail_bounds(
+            pi, eq_b, varq_b, lam_eff, spec,
+            lam_total=None if prob.cache is None else prob.lam,
+        )
     return JLCMSolution(
         pi=pi,
         z=z,
@@ -557,6 +581,21 @@ def stack_problems(probs: Sequence[JLCMProblem]) -> JLCMProblem:
                 raise ValueError(
                     "all problems must share the geo structure "
                     "(site count and (C, m)/(r, C) shapes)"
+                )
+    caches = [p.cache for p in probs]
+    if any(c is None for c in caches) and not all(c is None for c in caches):
+        raise ValueError(
+            "cannot stack problems mixing cache=None with CacheSpec; give "
+            "every problem a spec (degenerate: all-zero hit rates) or none"
+        )
+    if caches[0] is not None:
+        shape0 = tuple(jnp.shape(f) for f in caches[0])
+        for c in caches[1:]:
+            if tuple(jnp.shape(f) for f in c) != shape0:
+                raise ValueError(
+                    "all problems must share the cache structure (per-file "
+                    "hit vector length; values may vary, e.g. a capacity "
+                    "sweep)"
                 )
     normalized = [
         p._replace(

@@ -27,6 +27,21 @@ deadlines) every function below reproduces the single-objective code paths
 bit-for-bit — ``weights=None`` short-circuits to the original fold, and
 absent deadlines (``deadline=None`` statically) skip the tail computation
 entirely, so uniform problems pay zero overhead.
+
+Cache tier (hot/warm, ``storage/cache.py``): a :class:`CacheSpec` carries
+per-file hot-cache hit rates ``h_i`` into the solver. Misses are what the
+erasure-coded warm tier actually serves, so every queueing quantity is
+evaluated at the *thinned* arrivals ``lam_i (1 - h_i)`` and the mean
+objective becomes the hit/miss blend
+
+    F_cache = (W_miss / W) * F_warm(lam_eff)  +  (sum_i w_i lam_i h_i / W) * t_hit
+
+with ``W_miss = sum_i w_i lam_i (1 - h_i)``; the replicated hot tier's
+storage cost joins as the constant ``hot_cost`` (f4's 3.6x replicated hot
+vs ~2.1x erasure-coded warm overhead — the joint placement knob).
+``cache=None`` statically skips all of it; an all-zero hit vector
+reproduces the cache-free values through exact IEEE identities
+(``x * 1.0``, ``x / x == 1.0``, ``+ 0.0``).
 """
 from __future__ import annotations
 
@@ -164,6 +179,72 @@ def make_objective(
     return spec
 
 
+class CacheSpec(NamedTuple):
+    """Hot-tier cache view of the solver: per-file hit rates + hot costs.
+
+    ``hit``         (r,) per-file hot-cache hit probability h_i in [0, 1).
+    ``hit_latency`` ()  latency of a cache hit (hot tier service time).
+    ``hot_cost``    ()  storage cost of the replicated hot tier (constant
+                    w.r.t. pi: it rides into ``JLCMSolution.cost`` /
+                    ``objective`` so capacity sweeps trade hot spend
+                    against warm latency, but it never moves the argmin).
+
+    A pytree of arrays: it stacks under ``stack_problems`` and vmaps under
+    ``solve_batch`` (a cache-capacity sweep is one XLA program). All
+    problems in a batch must share the structure (same r). Build from a
+    capacity model with ``storage.cache.CacheModel.spec``.
+    """
+
+    hit: Array
+    hit_latency: Array
+    hot_cost: Array
+
+
+def make_cache_spec(
+    hit: Sequence[float] | Array,
+    hit_latency: float | Array = 0.0,
+    hot_cost: float | Array = 0.0,
+) -> CacheSpec:
+    """Validated :class:`CacheSpec`. Hit rates are clamped to [0, 1 - 1e-6]
+    so a fully-cached file cannot zero out the warm-tier arrival fold."""
+    h = np.asarray(hit, np.float32)
+    if h.ndim != 1:
+        raise ValueError(f"hit must be (r,), got shape {h.shape}")
+    if (h < 0).any() or (h > 1).any():
+        raise ValueError("hit rates must lie in [0, 1]")
+    if float(hit_latency) < 0:
+        raise ValueError("hit_latency must be >= 0")
+    if float(hot_cost) < 0:
+        raise ValueError("hot_cost must be >= 0")
+    return CacheSpec(
+        hit=jnp.asarray(np.minimum(h, 1.0 - 1e-6)),
+        hit_latency=jnp.asarray(float(hit_latency), jnp.float32),
+        hot_cost=jnp.asarray(float(hot_cost), jnp.float32),
+    )
+
+
+def apply_cache_thinning(lam: Array, cache: CacheSpec | None) -> Array:
+    """Warm-tier (miss) arrival rates ``lam_i (1 - h_i)``.
+
+    ``cache=None`` returns ``lam`` unchanged (the same object — zero ops);
+    an all-zero hit vector multiplies by exactly 1.0 elementwise.
+    """
+    if cache is None:
+        return lam
+    return lam * (1.0 - cache.hit)
+
+
+def _cache_blend(
+    lam: Array, wf: Array | None, cache: CacheSpec, mean_term: Array
+) -> Array:
+    """Hit/miss blend of the warm-tier mean objective (see module doc)."""
+    wlam = lam if wf is None else lam * wf
+    w_tot = jnp.sum(wlam, axis=-1)
+    w_miss = jnp.sum(wlam * (1.0 - cache.hit), axis=-1)
+    hit_term = jnp.sum(wlam * cache.hit, axis=-1) * cache.hit_latency
+    return (w_miss / w_tot) * mean_term + hit_term / w_tot
+
+
 def _class_sums(class_id: Array, values: Array, n_classes: int) -> Array:
     """Segment-sum of per-file ``values`` into (C,) per-class totals."""
     onehot = (class_id[..., None] == jnp.arange(n_classes)).astype(values.dtype)
@@ -171,7 +252,12 @@ def _class_sums(class_id: Array, values: Array, n_classes: int) -> Array:
 
 
 def class_tail_bounds(
-    pi: Array, eq: Array, varq: Array, lam: Array, spec: ObjectiveSpec
+    pi: Array,
+    eq: Array,
+    varq: Array,
+    lam: Array,
+    spec: ObjectiveSpec,
+    lam_total: Array | None = None,
 ) -> Array | None:
     """Per-class tail bounds, (C,): request-rate-weighted over the class.
 
@@ -180,6 +266,12 @@ def class_tail_bounds(
     class deadline. Infinite deadlines are computed against a safe finite
     stand-in and masked to exactly 0 afterwards (keeps gradients NaN-free).
     Returns None when the spec has no tail terms.
+
+    ``lam_total`` switches the denominator to a different rate vector: the
+    cache tier passes numerator ``lam`` = thinned miss rates but
+    denominator = raw request rates, making the bound per *request* —
+    ``P[T > d] = (1 - h_i) P[T_warm > d]`` since hits never miss a
+    deadline that warm reads can meet.
     """
     if spec.deadline is None:
         return None
@@ -189,15 +281,22 @@ def class_tail_bounds(
     tails = tail_probability_bounds(pi, eq, varq, d_safe)
     tails = jnp.where(finite, tails, 0.0)
     num = _class_sums(spec.class_id, lam * tails, spec.n_classes)
-    den = _class_sums(spec.class_id, lam, spec.n_classes)
+    den = _class_sums(
+        spec.class_id, lam if lam_total is None else lam_total, spec.n_classes
+    )
     return num / jnp.maximum(den, 1e-12)
 
 
 def tail_penalty(
-    pi: Array, eq: Array, varq: Array, lam: Array, spec: ObjectiveSpec
+    pi: Array,
+    eq: Array,
+    varq: Array,
+    lam: Array,
+    spec: ObjectiveSpec,
+    lam_total: Array | None = None,
 ) -> Array:
     """``sum_c tw_c * P-bound[T_c > d_c]``; 0.0 when the spec has no tails."""
-    per_class = class_tail_bounds(pi, eq, varq, lam, spec)
+    per_class = class_tail_bounds(pi, eq, varq, lam, spec, lam_total)
     if per_class is None:
         return jnp.asarray(0.0, jnp.float32)
     active = jnp.logical_and(jnp.isfinite(spec.deadline), spec.tail_weight > 0)
@@ -211,6 +310,7 @@ def composed_latency(
     moments: ServiceMoments,
     spec: ObjectiveSpec | None,
     geo: GeoSpec | None = None,
+    cache: CacheSpec | None = None,
 ) -> Array:
     """The solver-facing latency objective at shared auxiliary z.
 
@@ -224,23 +324,37 @@ def composed_latency(
     terms to per-(file, node) *pair* sojourn moments — the geo-aware
     client fabric. ``geo=None`` is the single-implicit-client path,
     untouched op-for-op.
+
+    ``cache`` (a :class:`CacheSpec`) evaluates the warm-tier fold at the
+    thinned miss arrivals ``lam (1 - h)`` and blends hits back in at
+    ``hit_latency`` (the Eq. 9 fold is over *requests*; only misses pay
+    the warm-tier bound). ``cache=None`` adds zero ops.
     """
     wf = None if spec is None else spec.file_weights()
+    lam_eff = apply_cache_thinning(lam, cache)
     if geo is not None:
-        mean_term = geo_shared_z_latency(pi, z, lam, geo, weights=wf)
+        mean_term = geo_shared_z_latency(pi, z, lam_eff, geo, weights=wf)
+        if cache is not None:
+            mean_term = _cache_blend(lam, wf, cache, mean_term)
         if spec is None or spec.deadline is None:
             return mean_term
-        eq, varq = geo_eq_varq(pi, lam, geo)
-        return mean_term + tail_penalty(pi, eq, varq, lam, spec)
-    if spec is None:
+        eq, varq = geo_eq_varq(pi, lam_eff, geo)
+        return mean_term + tail_penalty(
+            pi, eq, varq, lam_eff, spec,
+            lam_total=None if cache is None else lam,
+        )
+    if spec is None and cache is None:
         return shared_z_latency(pi, z, lam, moments)
-    mean_term = shared_z_latency(pi, z, lam, moments, weights=wf)
-    if spec.deadline is None:
+    mean_term = shared_z_latency(pi, z, lam_eff, moments, weights=wf)
+    if cache is not None:
+        mean_term = _cache_blend(lam, wf, cache, mean_term)
+    if spec is None or spec.deadline is None:
         return mean_term
-    rates = node_arrival_rates(pi, lam)
+    rates = node_arrival_rates(pi, lam_eff)
     eq, varq = pk_sojourn_moments(rates, moments)
     return mean_term + tail_penalty(
-        pi, eq[..., None, :], varq[..., None, :], lam, spec
+        pi, eq[..., None, :], varq[..., None, :], lam_eff, spec,
+        lam_total=None if cache is None else lam,
     )
 
 
@@ -250,18 +364,23 @@ def refresh_shared_z(
     moments: ServiceMoments,
     spec: ObjectiveSpec | None,
     geo: GeoSpec | None = None,
+    cache: CacheSpec | None = None,
 ) -> Array:
     """argmin_z of :func:`composed_latency` — the solver's z-refresh step.
 
     The tail penalty does not depend on the shared z, so minimizing the
-    (weighted) mean term alone is exact, not an approximation.
+    (weighted) mean term alone is exact, not an approximation. With a
+    cache the mean term is a positive multiple of the warm fold at the
+    thinned rates plus a z-free hit term, so refreshing at ``lam_eff``
+    is exact too.
     """
     wf = None if spec is None else spec.file_weights()
+    lam_eff = apply_cache_thinning(lam, cache)
     if geo is not None:
-        return geo_optimal_shared_z(pi, lam, geo, weights=wf)
+        return geo_optimal_shared_z(pi, lam_eff, geo, weights=wf)
     if spec is None:
-        return optimal_shared_z(pi, lam, moments)
-    return optimal_shared_z(pi, lam, moments, weights=wf)
+        return optimal_shared_z(pi, lam_eff, moments)
+    return optimal_shared_z(pi, lam_eff, moments, weights=wf)
 
 
 def compose_file_bounds(
@@ -271,15 +390,20 @@ def compose_file_bounds(
     varq: Array,
     lam: Array,
     spec: ObjectiveSpec | None,
+    cache: CacheSpec | None = None,
 ) -> Array:
     """Composed objective value from per-file *tight* bounds (reporting).
 
     Mirrors :func:`composed_latency` but with the per-file-z Lemma-2 bounds
     ``t_files`` in place of the shared-z relaxation — the tightest value of
     the composed objective, used for ``JLCMSolution.latency_tight`` and for
-    analytic plan scoring in the replanner.
+    analytic plan scoring in the replanner. With a cache, ``eq``/``varq``
+    must already be the thinned-rate sojourn moments; per-file bounds are
+    blended as ``(1 - h_i) t_i + h_i t_hit`` before the weighted fold.
     """
     lam = jnp.asarray(lam)
+    if cache is not None:
+        t_files = (1.0 - cache.hit) * t_files + cache.hit * cache.hit_latency
     if spec is None:
         return jnp.sum(lam * t_files, axis=-1) / jnp.sum(lam, axis=-1)
     wf = spec.file_weights()
@@ -287,7 +411,11 @@ def compose_file_bounds(
     mean_term = jnp.sum(wlam * t_files, axis=-1) / jnp.sum(wlam, axis=-1)
     if spec.deadline is None:
         return mean_term
-    return mean_term + tail_penalty(pi, eq, varq, lam, spec)
+    lam_eff = apply_cache_thinning(lam, cache)
+    return mean_term + tail_penalty(
+        pi, eq, varq, lam_eff, spec,
+        lam_total=None if cache is None else lam,
+    )
 
 
 def class_mean_bounds(

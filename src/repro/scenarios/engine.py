@@ -50,6 +50,21 @@ re-plans around the failure but never sees the repair load. All reported
 statistics cover client requests only (``file_id < r``); repair traffic
 is load, not workload.
 
+Cache-tier scenarios (``spec.cache_capacity_mb > 0``): the simulator runs
+the hot tier in the data plane (TTL cache in front of the FCFS queues,
+``storage/cache.py``), so hits never load a storage node and return at
+the hot tier's latency. Policies differ only in the control plane: static
+and oblivious deploy the Che deploy-time TTLs (design rates) and never
+move; the adaptive loop feeds its rate estimator MISS traffic only
+(``EwmaRateEstimator.update_misses``), inverts misses back to raw rates
+through the deployed TTLs, re-derives TTLs (promotion/demotion) and
+re-plans the warm tier cache-aware at every boundary. Hot-tier up/down is
+a binary health signal like node availability — a transition *forces* a
+replan so the warm tier is ready before the miss storm arrives. All
+client statistics include hits (that is the latency clients experience);
+``hit_frac`` and ``storage_cost`` (time-averaged warm plan cost + the
+provisioned hot tier) join the outcome.
+
 Geo scenarios (``spec.sites`` set) run through :func:`run_geo_scenario`
 against the 4-client-site fabric: per-(client-site, node) service
 sampling, a per-segment client-population mix schedule, optional egress
@@ -109,6 +124,25 @@ class ScenarioOutcome:
     class_p99: np.ndarray | None = None  # (C,)
     # per-client-site empirical mean latency (geo scenarios only)
     site_mean: np.ndarray | None = None  # (C_sites,)
+    # cache-tier scenarios only: fraction of client requests served by the
+    # hot tier, and total storage cost = time-averaged warm-tier plan cost
+    # + the provisioned (constant) hot-tier cost
+    hit_frac: float = 0.0
+    storage_cost: float = float("nan")
+
+    @property
+    def p99_windowed(self) -> float:
+        """Mean of the per-segment p99s — the SLO-dashboard view.
+
+        The pooled :attr:`p99` of a run with a storm window is a quantile
+        of the storm alone (the worst 1% of all requests land inside the
+        window for every policy, so pooled tails compare storm physics,
+        not plans). Averaging the p99 of each reporting window instead —
+        exactly how production SLO dashboards aggregate — weighs every
+        segment's tail, so a policy that drags slow nodes into its
+        dispatch sets during *healthy* windows pays for it here.
+        """
+        return float(np.nanmean(self.seg_p99))
 
     def row(self) -> dict:
         out = dict(
@@ -116,6 +150,7 @@ class ScenarioOutcome:
             policy=self.policy,
             mean=round(self.mean, 3),
             p99=round(self.p99, 3),
+            p99_windowed=round(self.p99_windowed, 3),
             degraded_frac=round(self.degraded_frac, 4),
             replans=self.replans,
             repair_frac=round(self.repair_frac, 4),
@@ -126,10 +161,19 @@ class ScenarioOutcome:
             out["class_p99s"] = "|".join(f"{v:.2f}" for v in self.class_p99)
         if self.site_mean is not None:
             out["site_means"] = "|".join(f"{v:.2f}" for v in self.site_mean)
+        if np.isfinite(self.storage_cost):
+            out["hit_frac"] = round(self.hit_frac, 4)
+            out["storage_cost"] = round(self.storage_cost, 3)
         return out
 
 
-def initial_plan(spec: ScenarioSpec, cluster: Cluster, *, max_iters: int = 300):
+def initial_plan(
+    spec: ScenarioSpec,
+    cluster: Cluster,
+    *,
+    max_iters: int = 300,
+    cache_aware: bool = True,
+):
     """The pre-run JLCM plan from ground-truth healthy-cluster moments.
 
     Solves the scenario's *composed* objective (tenant weights / deadlines
@@ -139,8 +183,28 @@ def initial_plan(spec: ScenarioSpec, cluster: Cluster, *, max_iters: int = 300):
     placement that fixes where chunks physically live (the repair
     inventory and the batched codec both read it,
     ``storage.codec.CodecPlan.from_solution``).
+
+    Cache-tier scenarios solve cache-aware even for the static policy:
+    deploy-time planning legitimately knows the catalog's design rates, so
+    the static plan sizes the warm tier for the *steady-state miss*
+    traffic (Che hit rates at ``spec.lam``) — the production artifact a
+    team that read the f4 papers would ship. What static cannot do is
+    react: to cold-cache warmup storms, to hot-tier outages, or to rate
+    drift (its hit rates and TTLs are frozen at design time).
+
+    ``cache_aware=False`` is the CACHE-OBLIVIOUS baseline: the plan is
+    solved for the raw design rates as if the hot tier did not exist (the
+    cache still runs in the data plane — the planner just never hears
+    about it). It over-provisions the warm tier for traffic the cache
+    will absorb: wider support (higher storage cost) that drags slow
+    nodes into the dispatch sets.
     """
     mom = cluster.moments(spec.chunk_mb)
+    cache = (
+        spec.cache_model().spec(np.asarray(spec.lam))
+        if spec.has_cache and cache_aware
+        else None
+    )
     prob = JLCMProblem(
         lam=jnp.asarray(spec.lam, jnp.float32),
         k=jnp.asarray(spec.k, jnp.float32),
@@ -148,6 +212,7 @@ def initial_plan(spec: ScenarioSpec, cluster: Cluster, *, max_iters: int = 300):
         cost=cluster.cost,
         theta=spec.theta,
         objective=spec.objective(),
+        cache=cache,
     )
     sol = solve(prob, max_iters=max_iters)
     return np.asarray(sol.pi), mom, sol
@@ -170,6 +235,7 @@ def run_scenario(
     pi0: np.ndarray | None = None,
     placement0: np.ndarray | None = None,
     repair_aware: bool = True,
+    cache_aware: bool = True,
 ) -> ScenarioOutcome:
     """Simulate ``spec`` under ``policy``; see module docstring.
 
@@ -179,6 +245,14 @@ def run_scenario(
     the initial JLCM plan's Lemma-4 placement). ``repair_aware=False``
     runs the adaptive policy WITHOUT folding repair flows into its
     re-solves — the repair-oblivious closed-loop ablation.
+
+    ``cache_aware=False`` (cache scenarios only) runs the CACHE-OBLIVIOUS
+    control-plane ablation: the data-plane hot tier still serves hits
+    (physics are policy-independent), but plans are solved for raw design
+    rates, the closed loop treats observed warm-tier misses as if they
+    were the whole workload (no Che inversion, no TTL management, no
+    forced replan at hot-tier transitions). Outcome policy names get a
+    ``-cacheblind`` suffix so suite CSVs keep the variants apart.
     """
     if policy not in POLICIES:
         raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
@@ -204,11 +278,23 @@ def run_scenario(
     bw_tr = spec.bandwidth_scales(m)
     key = jax.random.key(seed)
 
+    # Hot/warm cache tier: the deploy-time TTL vector comes from the Che
+    # characteristic time at the catalog's DESIGN rates — the artifact a
+    # production rollout ships. Static/oblivious run it unchanged (masked
+    # by outage windows); the adaptive control plane re-derives TTLs from
+    # estimated raw rates at each replan (promotion/demotion).
+    has_cache = spec.has_cache
+    cache_model = spec.cache_model() if has_cache else None
+    cache_up = spec.cache_up_trace()
+    ttl0 = (
+        cache_model.ttl(np.asarray(spec.lam, float)) if has_cache else None
+    )
+
     with_repair = spec.repair_rate > 0
     if (pi0 is None and policy != "oblivious") or (
         with_repair and placement0 is None
     ):
-        pi_init, _, sol0 = initial_plan(spec, cluster)
+        pi_init, _, sol0 = initial_plan(spec, cluster, cache_aware=cache_aware)
         if placement0 is None:
             placement0 = np.asarray(sol0.placement, bool)
     else:
@@ -247,6 +333,8 @@ def run_scenario(
         return np.concatenate([np.asarray(client_pi), rep], axis=0)
 
     replans = 0
+    hit = None
+    pi_deployed = None  # (S, r, m) what actually dispatched, for cost
     if policy in ("static", "oblivious"):
         pi_seq = (
             jnp.asarray(np.stack([seg_pi(pi, s) for s in range(n_seg)]))
@@ -257,6 +345,11 @@ def run_scenario(
             np.stack([seg_scale(s) for s in range(n_seg)])
             if with_repair
             else rate_tr
+        )
+        ttl_seq = (
+            np.where(cache_up[:, None], ttl0[None, :], 0.0)
+            if has_cache
+            else None
         )
         res = simulate_segments(
             key,
@@ -269,30 +362,68 @@ def run_scenario(
             rate_scale_seq=scale_seq,
             overhead_scale_seq=ovh_tr,
             bandwidth_scale_seq=bw_tr,
+            cache_ttl_seq=ttl_seq,
+            cache_hit_latency=spec.cache_hit_latency,
         )
         lat = np.asarray(res.latency)  # (S, N)
         degraded = np.asarray(res.degraded)
         fid = np.asarray(res.file_id)
+        if has_cache:
+            hit = np.asarray(res.hit)
+        pi_deployed = np.broadcast_to(
+            np.asarray(pi)[None], (n_seg,) + np.asarray(pi).shape
+        )
     else:
         mom0 = cluster.moments(spec.chunk_mb)
         moment_est = EwmaMomentEstimator(prior=mom0)
-        rate_est = EwmaRateEstimator(prior=np.asarray(spec.lam))
+        # with a cache tier the estimator tracks MISS rates (the only
+        # traffic the warm tier observes); prior = design-rate misses.
+        # The cache-blind loop ALSO only ever sees misses — it just
+        # mistakes them for the whole workload (prior = raw design rates,
+        # no inversion downstream).
+        rate_est = EwmaRateEstimator(
+            prior=cache_model.thin(np.asarray(spec.lam, float))
+            if has_cache and cache_aware
+            else np.asarray(spec.lam)
+        )
         replanner = AdaptiveReplanner(
             k=np.asarray(spec.k),
             cost=np.asarray(cluster.cost),
             theta=spec.theta,
             estimator=moment_est,
             objective=spec.objective(),
+            cache=cache_model if cache_aware else None,
         )
+        if has_cache and cache_aware:
+            # seed the inversion state with what is actually deployed
+            replanner.last_ttl = ttl0.copy()
+            replanner.last_raw = np.asarray(spec.lam, float)
+        ttl_cur = ttl0  # TTLs currently deployed to the data plane
         # same per-segment keys as the device path splits internally
         seg_keys = jax.random.split(key, n_seg)
         rollout_keys = jax.random.split(jax.random.key(seed + 0x5EED), n_seg)
         carry = None
         repair_pi = None  # replanner-optimized reconstruction dispatch
         repair_avail = None  # the health mask repair_pi was solved under
-        lats, degs, fids = [], [], []
+        lats, degs, fids, hits, pis = [], [], [], [], []
         for s in range(n_seg):
-            if s > 0 and s % spec.replan_every == 0:
+            # the hot tier's up/down state is a binary health signal known
+            # at segment boundaries (same detection model as node
+            # availability): a transition forces a replan so the warm tier
+            # is re-planned for full raw load BEFORE the miss storm lands,
+            # not a segment after it
+            cache_flip = has_cache and cache_aware and s > 0 and bool(
+                cache_up[s] != cache_up[s - 1]
+            )
+            cadence = s % spec.replan_every == 0
+            if has_cache and cache_aware and not cache_up[s]:
+                # hold the flip-time storm plan for the whole outage
+                # window: it was solved from the CONVERGED pre-outage raw
+                # estimate, while mid-storm the miss EWMA still blends
+                # pre-outage observations and would re-tighten the plan
+                # exactly when head-room matters most
+                cadence = False
+            if s > 0 and (cadence or cache_flip):
                 flow = (
                     build_repair_flow(
                         placement0,
@@ -310,9 +441,12 @@ def run_scenario(
                     carry=carry,
                     key=rollout_keys[s],
                     repair=flow,
+                    cache_up=bool(cache_up[s]),
                 )
                 repair_pi = replanner.repair_pi
                 repair_avail = avail_tr[s].copy()
+                if has_cache and cache_aware:
+                    ttl_cur = replanner.last_ttl
             # the optimized reconstruction dispatch is only valid for the
             # health mask it was solved under; if availability moved
             # between replans (replan_every > 1, staggered failures) fall
@@ -336,17 +470,35 @@ def run_scenario(
                 overhead_scale=ovh_tr[s],
                 bandwidth_scale=bw_tr[s],
                 carry=carry,
+                cache_ttl=(
+                    np.where(cache_up[s], ttl_cur, 0.0)
+                    if has_cache
+                    else None
+                ),
+                cache_hit_latency=spec.cache_hit_latency,
             )
             moment_est.update(res_s.obs)
             fid_s = np.asarray(res_s.file_id)
             client_s = fid_s < r
-            rate_est.update(fid_s[client_s], float(res_s.t_end) - t_start)
+            dur = float(res_s.t_end) - t_start
+            if has_cache:
+                hit_s = np.asarray(res_s.hit)
+                rate_est.update_misses(
+                    fid_s[client_s], hit_s[client_s], dur
+                )
+                hits.append(hit_s)
+            else:
+                rate_est.update(fid_s[client_s], dur)
             lats.append(np.asarray(res_s.latency))
             degs.append(np.asarray(res_s.degraded))
             fids.append(fid_s)
+            pis.append(np.asarray(pi))
         lat = np.stack(lats)
         degraded = np.stack(degs)
         fid = np.stack(fids)
+        if has_cache:
+            hit = np.stack(hits)
+        pi_deployed = np.stack(pis)
         replans = replanner.replans
 
     # All reported statistics cover CLIENT requests only; repair rows
@@ -368,9 +520,25 @@ def run_scenario(
         )
         class_mean, class_p99 = stats.mean, stats.p99
 
+    hit_frac = 0.0
+    storage_cost = float("nan")
+    if has_cache:
+        hit_frac = float(hit[client].mean())
+        # warm-tier cost of what actually dispatched (support x V_j, the
+        # solver's own true-cost convention), time-averaged over segments,
+        # plus the provisioned hot tier — one comparable total per policy
+        cost_v = np.asarray(cluster.cost, float)
+        warm = float(
+            np.mean(
+                [((pi_deployed[s] > 1e-3) * cost_v).sum() for s in range(n_seg)]
+            )
+        )
+        storage_cost = warm + cache_model.hot_cost()
+
     return ScenarioOutcome(
         scenario=spec.name,
-        policy=policy,
+        policy=policy if cache_aware or not has_cache
+        else f"{policy}-cacheblind",
         seg_mean=seg_mean,
         seg_p99=seg_p99,
         mean=float(lat[client].mean()),
@@ -380,6 +548,8 @@ def run_scenario(
         repair_frac=float(1.0 - client.mean()),
         class_mean=class_mean,
         class_p99=class_p99,
+        hit_frac=hit_frac,
+        storage_cost=storage_cost,
     )
 
 
@@ -524,10 +694,16 @@ def run_all_policies(
     cluster: Cluster | None = None,
     requests_per_segment: int | None = None,
     repair_aware: bool = True,
+    include_cacheblind: bool = False,
 ) -> list[ScenarioOutcome]:
     """All three policies on identical arrival/service randomness, sharing
     one initial JLCM solve between static and adaptive — and one physical
-    placement (hence one repair schedule) across all three."""
+    placement (hence one repair schedule) across all three.
+
+    ``include_cacheblind=True`` (cache scenarios only) appends the
+    cache-oblivious static baseline — planned for raw design rates with
+    the hot tier invisible to the control plane — as a fourth outcome
+    (policy ``static-cacheblind``)."""
     if spec.is_geo:
         fabric = geo_testbed(cluster) if cluster is not None else geo_testbed()
         pi0, _, _ = initial_plan(spec, fabric.cluster)
@@ -545,7 +721,7 @@ def run_all_policies(
     cluster = tahoe_testbed() if cluster is None else cluster
     pi0, _, sol0 = initial_plan(spec, cluster)
     placement0 = np.asarray(sol0.placement, bool)
-    return [
+    out = [
         run_scenario(
             spec,
             policy,
@@ -558,3 +734,16 @@ def run_all_policies(
         )
         for policy in POLICIES
     ]
+    if include_cacheblind and spec.has_cache:
+        out.append(
+            run_scenario(
+                spec,
+                "static",
+                seed=seed,
+                cluster=cluster,
+                requests_per_segment=requests_per_segment,
+                placement0=placement0,
+                cache_aware=False,
+            )
+        )
+    return out

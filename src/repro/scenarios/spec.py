@@ -99,6 +99,16 @@ class ScenarioSpec:
     sites: tuple[str, ...] | None = None
     mix_trace: tuple[tuple[float, ...], ...] | None = None
     egress_degrade: tuple[tuple[str, int, int, float, float], ...] = ()
+    # Hot/warm cache tier (storage/cache.py): capacity > 0 puts a
+    # replicated hot cache in front of the erasure-coded warm tier.
+    # cache_outage windows (first, last), inclusive, take the hot tier
+    # down — every request goes to the warm tier at full raw load.
+    # file_mb are logical object sizes (default: k_i * chunk_mb).
+    cache_capacity_mb: float = 0.0
+    cache_hit_latency: float = 0.5
+    cache_hot_price: float = 0.0  # $/MB of *provisioned* hot capacity
+    cache_outage: tuple[tuple[int, int], ...] = ()
+    file_mb: tuple[float, ...] | None = None
 
     @property
     def r(self) -> int:
@@ -111,6 +121,39 @@ class ScenarioSpec:
     @property
     def n_sites(self) -> int:
         return 0 if self.sites is None else len(self.sites)
+
+    @property
+    def has_cache(self) -> bool:
+        return self.cache_capacity_mb > 0.0
+
+    def file_bytes(self) -> np.ndarray:
+        """(r,) logical object sizes in bytes (default k_i * chunk_mb)."""
+        mb = (
+            np.asarray(self.k, float) * self.chunk_mb
+            if self.file_mb is None
+            else np.asarray(self.file_mb, float)
+        )
+        return mb * float(2**20)
+
+    def cache_model(self):
+        """The scenario's hot-tier :class:`~repro.storage.cache.CacheModel`."""
+        from repro.storage.cache import CacheModel
+
+        if not self.has_cache:
+            raise ValueError(f"{self.name}: no cache tier declared")
+        return CacheModel(
+            file_bytes=self.file_bytes(),
+            capacity_bytes=self.cache_capacity_mb * float(2**20),
+            hit_latency=self.cache_hit_latency,
+            hot_price_per_mb=self.cache_hot_price,
+        )
+
+    def cache_up_trace(self) -> np.ndarray:
+        """(S,) bool: hot tier up per segment (False in outage windows)."""
+        up = np.ones((self.n_segments,), bool)
+        for first, last in self.cache_outage:
+            up[first : last + 1] = False
+        return up
 
     @property
     def n_classes(self) -> int:
@@ -242,7 +285,48 @@ class ScenarioSpec:
             self.objective()  # delegates per-class shape/value checks
         except ValueError as e:
             raise ValueError(f"{self.name}: {e}") from None
+        self._validate_cache()
         self._validate_geo()
+
+    def _validate_cache(self) -> None:
+        if self.cache_capacity_mb < 0 or self.cache_hit_latency < 0 or (
+            self.cache_hot_price < 0
+        ):
+            raise ValueError(
+                f"{self.name}: cache capacity/hit latency/price must be >= 0"
+            )
+        if self.file_mb is not None:
+            if len(self.file_mb) != self.r:
+                raise ValueError(
+                    f"{self.name}: file_mb has {len(self.file_mb)} entries, "
+                    f"need one per file (r={self.r})"
+                )
+            if any(v <= 0 for v in self.file_mb):
+                raise ValueError(f"{self.name}: file_mb sizes must be > 0")
+        if not self.has_cache:
+            if self.cache_outage:
+                raise ValueError(
+                    f"{self.name}: cache_outage without a cache tier "
+                    "(set cache_capacity_mb > 0)"
+                )
+            return
+        if self.is_geo:
+            raise ValueError(
+                f"{self.name}: cache scenarios do not compose with a geo "
+                "fabric yet (one axis of non-stationarity per scenario)"
+            )
+        if self.repair_rate > 0:
+            raise ValueError(
+                f"{self.name}: cache scenarios do not compose with repair "
+                "traffic (keep hot/warm attribution clean); the replanner-"
+                "level interaction is covered by unit tests"
+            )
+        for first, last in self.cache_outage:
+            if not (0 <= first <= last < self.n_segments):
+                raise ValueError(
+                    f"{self.name}: cache outage window [{first}, {last}] "
+                    f"outside [0, {self.n_segments})"
+                )
 
     def _validate_geo(self) -> None:
         if not self.is_geo:

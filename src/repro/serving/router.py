@@ -317,6 +317,24 @@ class EwmaRateEstimator:
         self.rates = (1 - self.alpha) * self.rates + self.alpha * emp
         return self.rates.copy()
 
+    def update_misses(
+        self, class_id: Any, hit: Any, duration: float
+    ) -> np.ndarray:
+        """Cache-tier variant of :meth:`update`: fold in *miss* traffic only.
+
+        With a hot tier in front of the warm tier, requests that hit the
+        cache never reach a storage queue — the only arrivals the warm
+        tier's control plane actually observes are the misses. Feeding the
+        full id stream would make the estimator track raw rates the warm
+        tier never sees; feeding ``ids[~hit]`` makes :attr:`rates` a
+        *miss-rate* estimate, which the cache-aware replanner inverts back
+        to raw rates through the deployed TTLs
+        (``storage.cache.CacheModel.reconstruct_raw_rates``).
+        """
+        ids = np.asarray(class_id).ravel()
+        miss = np.logical_not(np.asarray(hit, bool).ravel())
+        return self.update(ids[miss], duration)
+
 
 @dataclasses.dataclass
 class AdaptiveReplanner:
@@ -372,6 +390,25 @@ class AdaptiveReplanner:
     bound. Rollout candidates simulate the augmented plan and are scored
     on client requests only. The chosen repair dispatch lands in
     :attr:`repair_pi` for the caller to inject into the next segment.
+
+    Cache awareness (``storage/cache.py``): with a ``cache`` model the
+    estimated ``class_rates`` entering :meth:`replan` are *miss* rates
+    (:meth:`EwmaRateEstimator.update_misses`), and the replanner closes
+    the hot-tier loop: it inverts the misses back to raw rates through the
+    TTLs it last deployed (:attr:`last_ttl`, with :attr:`last_raw` as the
+    branch prior), re-derives the hot set and per-file TTLs at the new raw
+    estimate — promotion/demotion — and hands every candidate solve the
+    raw rates plus a ``CacheSpec`` so the optimizer plans the warm tier
+    against miss traffic while the objective blends hit latency and the
+    replicated hot tier's cost. Repair pseudo-file rows join with hit 0
+    and TTL 0: a reconstruction read fetches *lost* chunks, which no hot
+    tier holds. Rollouts replay candidates with the planned TTL vector so
+    the scorer sees the same thinned queue load the solver planned for.
+    ``cache_up=False`` (health-checked hot-tier outage) plans the next
+    segment at the full raw load with zero hit everywhere — replanning
+    *before* the miss storm arrives instead of reacting to it a segment
+    late. The caller deploys :attr:`last_ttl` to the data plane after each
+    replan.
     """
 
     k: np.ndarray  # (r,) MDS k_i per class/file
@@ -386,6 +423,23 @@ class AdaptiveReplanner:
     # optimized reconstruction-read dispatch from the last repair-aware
     # replan (None when the last replan saw no active repair flow)
     repair_pi: np.ndarray | None = None
+    # hot-tier cache model (storage.cache.CacheModel) — None = no cache
+    cache: Any | None = None
+    # TTLs deployed by the last replan (the inversion key for the next
+    # one) and the tracked raw-rate estimate (branch prior); both seeded
+    # by the caller at deploy time
+    last_ttl: np.ndarray | None = None
+    last_raw: np.ndarray | None = None
+    # rate head-room multiplier for hot-tier-outage replans
+    # (``cache_up=False``). The raw-rate estimate entering an outage plan
+    # is an EWMA that lags the storm by construction (pre-outage miss
+    # observations still carry weight), so planning for the point
+    # estimate runs the warm tier near saturation exactly when there is
+    # no hot tier to absorb variance. The margin buys back that head-room
+    # — the storage-cost price is bounded (it applies only to outage
+    # windows) and far below the cache-blind plan's permanent
+    # over-provisioning.
+    surge_margin: float = 1.25
 
     def _repair_objective(self) -> ObjectiveSpec | None:
         """The client objective extended with a zero-weight repair class.
@@ -433,6 +487,7 @@ class AdaptiveReplanner:
         carry: Any | None = None,
         key: Any | None = None,
         repair: Any | None = None,
+        cache_up: bool = True,
     ) -> np.ndarray:
         """New (r, m) dispatch matrix from estimated moments + health mask.
 
@@ -442,9 +497,13 @@ class AdaptiveReplanner:
         state. ``repair`` (a ``storage.repair.RepairFlow``) folds known
         reconstruction traffic into every candidate solve and rollout; the
         jointly-optimized repair dispatch is left in :attr:`repair_pi`.
+        With a ``cache`` model, ``class_rates`` are *miss* rates and
+        ``cache_up`` is the hot tier's health-check verdict for the
+        upcoming segment (False plans for full raw load, zero hits).
         All other inputs are measured/estimated quantities — ground truth
         never enters.
         """
+        from repro.storage.cache import che_hit_rates
         from repro.storage.repair import augment_plan
 
         r = int(np.asarray(self.k).shape[0])
@@ -455,9 +514,44 @@ class AdaptiveReplanner:
         with_repair = repair is not None and repair.active
         k_vec = np.asarray(self.k, np.float32)
         lam_np = np.asarray(class_rates, np.float64)
+        cache_spec = None
+        ttl_plan = None
+        if self.cache is not None:
+            # invert miss -> raw through the TTLs those misses were
+            # observed under (zeros when the tier was down: identity)
+            ttl_prev = (
+                np.zeros((r,))
+                if self.last_ttl is None
+                else np.asarray(self.last_ttl, np.float64)
+            )
+            raw = self.cache.reconstruct_raw_rates(
+                lam_np, ttl_prev, prior=self.last_raw
+            )
+            self.last_raw = raw
+            if cache_up:
+                ttl_plan = self.cache.ttl(raw)  # promotion/demotion
+                hit = che_hit_rates(raw, ttl_plan)
+                lam_np = raw
+            else:
+                ttl_plan = np.zeros((r,))
+                hit = np.zeros((r,))
+                # outage plan: full raw load plus surge head-room (the
+                # EWMA raw estimate lags the storm; see surge_margin)
+                lam_np = raw * float(self.surge_margin)
+            self.last_ttl = ttl_plan
         if with_repair:
             lam_np = np.concatenate([lam_np, np.asarray(repair.lam)])
             k_vec = np.concatenate([k_vec, np.asarray(repair.k, np.float32)])
+        if self.cache is not None:
+            # repair rows join with hit 0 — reconstruction reads fetch
+            # lost chunks, which no hot tier holds
+            from repro.core import make_cache_spec
+
+            cache_spec = make_cache_spec(
+                np.concatenate([hit, np.zeros((lam_np.shape[0] - r,))]),
+                hit_latency=self.cache.hit_latency,
+                hot_cost=self.cache.hot_cost(),
+            )
         lam = jnp.asarray(lam_np, jnp.float32)
         objective = self._repair_objective() if with_repair else self.objective
         probs, starts = [], []
@@ -479,12 +573,13 @@ class AdaptiveReplanner:
                     theta=float(t),
                     mask=mask,
                     objective=objective,
+                    cache=cache_spec,
                 )
                 probs.append(prob)
                 starts.append(feasible_uniform(mask, prob.k))
                 if pi0 is not None:
                     if with_repair:
-                        start, _ = augment_plan(pi0, class_rates, repair)
+                        start, _ = augment_plan(pi0, lam_np[:r], repair)
                     else:
                         start = np.asarray(pi0)
                     probs.append(prob)
@@ -497,6 +592,23 @@ class AdaptiveReplanner:
             from repro.storage.simulator import run_segment_raw
 
             d, srv_rates = self.estimator.fitted_shifted_exp()
+            ttl_roll = hit_lat = None
+            if self.cache is not None:
+                # roll out with the planned TTLs so the scorer sees the
+                # same thinned queue load the solver planned for (repair
+                # rows TTL 0: never cached)
+                ttl_roll = jnp.asarray(
+                    np.concatenate(
+                        [ttl_plan, np.zeros((lam_np.shape[0] - r,))]
+                    ),
+                    jnp.float32,
+                )
+                hit_lat = jnp.asarray(self.cache.hit_latency, jnp.float32)
+                cache_st = getattr(carry, "cache", None)
+                if cache_st is None or cache_st.shape != ttl_roll.shape:
+                    carry = carry._replace(
+                        cache=jnp.full(ttl_roll.shape, -jnp.inf)
+                    )
             scores = []
             for i in range(len(probs)):
                 _, res = run_segment_raw(
@@ -508,6 +620,8 @@ class AdaptiveReplanner:
                     jnp.asarray(srv_rates, jnp.float32),
                     jnp.asarray(avail),
                     self.rollout_requests,
+                    ttl_roll,
+                    0.0 if hit_lat is None else hit_lat,
                 )
                 lat_np = np.asarray(res.latency)
                 fid_np = np.asarray(res.file_id)

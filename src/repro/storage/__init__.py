@@ -11,6 +11,17 @@ from .cluster import (
     measured_fig6_moments,
     tahoe_testbed,
 )
+from .cache import (
+    HOT_REPLICATION,
+    WARM_OVERHEAD,
+    CacheModel,
+    CacheState,
+    che_characteristic_time,
+    che_hit_rates,
+    cold_cache,
+    simulate_ttl_cache,
+    ttl_cache_scan,
+)
 from .codec import (
     CodecGroup,
     CodecPlan,

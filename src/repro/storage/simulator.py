@@ -40,6 +40,14 @@ when multiple devices are present, ``shard_map``s) independent seeds into
 one program — the fleet-scale path measured by
 `benchmarks/fleet_scale.py`.
 
+Hot/warm cache tier (`storage/cache.py`): every segment entry point takes
+an optional per-file TTL vector; when set, the merged arrival stream first
+runs through a device-resident TTL-with-reset cache (the exact surrogate
+of the Che LRU approximation) and only the *misses* proceed to dispatch
+and the FCFS queues — hits return at the hot tier's service latency.
+Cache warmth threads across segments in :class:`SimCarry` alongside the
+queue state; a TTL of all zeros is bitwise identical to no cache.
+
 Multi-tenant reporting: :func:`per_class_latency_stats` groups simulated
 latencies by tenant class (per-class mean and empirical p95/p99), the
 measurement counterpart of the pluggable objective layer
@@ -57,6 +65,7 @@ import numpy as np
 from jax import Array
 
 from repro.core.scheduling import madow_sample
+from .cache import ttl_cache_scan
 from .cluster import Cluster
 
 
@@ -234,10 +243,18 @@ class NodeObservations(NamedTuple):
 
 
 class SimCarry(NamedTuple):
-    """FCFS queue state threaded across segment boundaries."""
+    """FCFS queue state threaded across segment boundaries.
+
+    ``cache`` is the hot-tier cache state — per-file absolute expiry
+    times (`storage/cache.py`) — or None when no cache tier is simulated.
+    It rides in the carry for the same reason ``dep`` does: cache warmth,
+    like queue depth, is continuous history that must survive segment
+    boundaries (a cache-warmup scenario is *about* that transient).
+    """
 
     dep: Array  # (m,) last scheduled departure per node
     t0: Array  # () absolute clock at the segment boundary
+    cache: Array | None = None  # (r,) per-file expiry times, or None
 
 
 class SegmentResult(NamedTuple):
@@ -248,13 +265,17 @@ class SegmentResult(NamedTuple):
     degraded: Array  # (N,) bool: >= 1 selected node was down (read fell back)
     obs: NodeObservations
     t_end: Array  # () absolute time of the last arrival
+    hit: Array | None = None  # (N,) bool cache hits, or None (no cache tier)
 
     def mean_latency(self) -> Array:
         return jnp.mean(self.latency)
 
 
-def init_carry(m: int) -> SimCarry:
-    return SimCarry(dep=jnp.zeros((m,)), t0=jnp.asarray(0.0))
+def init_carry(m: int, *, cache_files: int | None = None) -> SimCarry:
+    """Fresh carry: idle queues and — when ``cache_files`` is given — a
+    cold hot-tier cache over that many files (all expiries at -inf)."""
+    cache = None if cache_files is None else jnp.full((cache_files,), -jnp.inf)
+    return SimCarry(dep=jnp.zeros((m,)), t0=jnp.asarray(0.0), cache=cache)
 
 
 def dispatch_masks(
@@ -317,6 +338,8 @@ def _run_segment(
     rates: Array,
     avail: Array,
     n_requests: int,
+    ttl: Array | None = None,
+    hit_latency: Array | float = 0.0,
 ) -> tuple[SimCarry, SegmentResult]:
     """One segment of the non-stationary simulation (jit-/scan-friendly).
 
@@ -325,6 +348,16 @@ def _run_segment(
     exponential service parameters; ``avail`` the (m,) availability mask.
     Queue state flows in and out through ``carry`` so consecutive segments
     form one continuous FCFS history (no warmup transient at boundaries).
+
+    ``ttl`` switches on the hot-tier cache (`storage/cache.py`): the merged
+    arrival stream first runs through the TTL-with-reset cache; hits return
+    at ``hit_latency`` and never reach the warm-tier queues (no dispatch,
+    no busy time, no service observations — the control plane's estimators
+    see miss traffic only). The cache pre-scan consumes no randomness and a
+    ``ttl`` of all zeros hits nothing, so that run is bitwise identical to
+    ``ttl=None``; per-file zeros express demoted files, repair pseudo-file
+    rows (reconstruction reads of *lost* chunks cannot hit a cache), and
+    hot-tier outage windows.
     """
     m = overheads.shape[-1]
     k_wl, k_sel, k_srv = jax.random.split(key, 3)
@@ -333,6 +366,20 @@ def _run_segment(
     e = jax.random.exponential(k_srv, (n_requests, m))
     service = overheads + e / rates
     masks, degraded = dispatch_masks(k_sel, pi, file_id, avail)
+
+    if ttl is None:
+        hit = None
+        serve = masks
+        new_cache = carry.cache
+    else:
+        expiry = (
+            jnp.full(jnp.shape(ttl), -jnp.inf)
+            if carry.cache is None
+            else carry.cache
+        )
+        new_cache, hit = ttl_cache_scan(expiry, arrival, file_id, ttl)
+        serve = jnp.logical_and(masks, jnp.logical_not(hit)[:, None])
+        degraded = jnp.logical_and(degraded, jnp.logical_not(hit))
 
     def step(dep, inp):
         t, mask, srv = inp
@@ -344,16 +391,18 @@ def _run_segment(
         return new_dep, (latency, busy)
 
     dep, (latency, busy) = jax.lax.scan(
-        step, carry.dep, (arrival, masks, service)
+        step, carry.dep, (arrival, serve, service)
     )
-    served = jnp.where(masks, service, 0.0)
+    if hit is not None:
+        latency = jnp.where(hit, jnp.asarray(hit_latency), latency)
+    served = jnp.where(serve, service, 0.0)
     obs = NodeObservations(
-        count=jnp.sum(masks, axis=0),
+        count=jnp.sum(serve, axis=0),
         s1=jnp.sum(served, axis=0),
         s2=jnp.sum(served**2, axis=0),
         s3=jnp.sum(served**3, axis=0),
     )
-    new_carry = SimCarry(dep=dep, t0=arrival[-1])
+    new_carry = SimCarry(dep=dep, t0=arrival[-1], cache=new_cache)
     return new_carry, SegmentResult(
         latency=latency,
         file_id=file_id,
@@ -362,6 +411,7 @@ def _run_segment(
         degraded=degraded,
         obs=obs,
         t_end=arrival[-1],
+        hit=hit,
     )
 
 
@@ -386,6 +436,8 @@ def simulate_segment(
     overhead_scale: float | Array = 1.0,
     bandwidth_scale: float | Array = 1.0,
     carry: SimCarry | None = None,
+    cache_ttl: Array | None = None,
+    cache_hit_latency: float = 0.0,
 ) -> tuple[SegmentResult, SimCarry]:
     """Simulate one segment against a possibly-perturbed cluster state.
 
@@ -396,36 +448,81 @@ def simulate_segment(
     vector scales per file (e.g. switching repair-traffic rows on and off
     per segment, `storage/repair.py`). ``overhead_scale`` /
     ``bandwidth_scale`` (scalar or per-node) drift the service moments the
-    same way :meth:`Cluster.perturbed` does.
+    same way :meth:`Cluster.perturbed` does. ``cache_ttl`` (r,) switches
+    on the hot-tier cache in front of the queues (see :func:`_run_segment`
+    — zeros mark uncached files, and cache warmth persists in ``carry``).
     """
     m = cluster.m
     avail = jnp.ones((m,), bool) if avail is None else jnp.asarray(avail, bool)
-    carry = init_carry(m) if carry is None else carry
+    if carry is None:
+        r_cache = None if cache_ttl is None else int(np.shape(cache_ttl)[0])
+        carry = init_carry(m, cache_files=r_cache)
+    elif cache_ttl is not None and carry.cache is None:
+        carry = carry._replace(
+            cache=jnp.full((int(np.shape(cache_ttl)[0]),), -jnp.inf)
+        )
     overheads = cluster.overheads() * jnp.asarray(overhead_scale)
     rates = cluster.bandwidths() * jnp.asarray(bandwidth_scale) / chunk_mb
     lam_s = jnp.asarray(lam) * rate_scale
     new_carry, res = run_segment_raw(
-        carry, key, jnp.asarray(pi), lam_s, overheads, rates, avail, n_requests
+        carry,
+        key,
+        jnp.asarray(pi),
+        lam_s,
+        overheads,
+        rates,
+        avail,
+        n_requests,
+        None if cache_ttl is None else jnp.asarray(cache_ttl, jnp.float32),
+        jnp.asarray(cache_hit_latency, jnp.float32),
     )
     return res, new_carry
 
 
 @functools.partial(jax.jit, static_argnames=("n_requests",))
 def _simulate_segments_device(
-    key, pi_seq, lam, rate_scale, overheads_seq, rates_seq, avail_seq, n_requests
+    key,
+    pi_seq,
+    lam,
+    rate_scale,
+    overheads_seq,
+    rates_seq,
+    avail_seq,
+    n_requests,
+    ttl_seq=None,
+    hit_latency=0.0,
 ):
     n_seg = rate_scale.shape[0]
     keys = jax.random.split(key, n_seg)
+    cached = ttl_seq is not None
+    # scan xs must be a fixed pytree: feed zero TTLs when uncached and a
+    # None carry.cache keeps that branch out of the program entirely
+    if not cached:
+        ttl_seq = jnp.zeros((n_seg, 1))
 
     def seg(carry, inp):
-        skey, pi, scale, ovh, rt, av = inp
-        return _run_segment(carry, skey, pi, lam * scale, ovh, rt, av, n_requests)
+        skey, pi, scale, ovh, rt, av, ttl = inp
+        return _run_segment(
+            carry,
+            skey,
+            pi,
+            lam * scale,
+            ovh,
+            rt,
+            av,
+            n_requests,
+            ttl if cached else None,
+            hit_latency,
+        )
 
-    carry0 = init_carry(overheads_seq.shape[-1])
+    carry0 = init_carry(
+        overheads_seq.shape[-1],
+        cache_files=int(ttl_seq.shape[-1]) if cached else None,
+    )
     _, results = jax.lax.scan(
         seg,
         carry0,
-        (keys, pi_seq, rate_scale, overheads_seq, rates_seq, avail_seq),
+        (keys, pi_seq, rate_scale, overheads_seq, rates_seq, avail_seq, ttl_seq),
     )
     return results
 
@@ -442,6 +539,8 @@ def simulate_segments(
     rate_scale_seq: Array | None = None,
     overhead_scale_seq: Array | None = None,
     bandwidth_scale_seq: Array | None = None,
+    cache_ttl_seq: Array | None = None,
+    cache_hit_latency: float = 0.0,
 ) -> SegmentResult:
     """Run a whole segment schedule as ONE nested ``lax.scan`` device call.
 
@@ -458,6 +557,12 @@ def simulate_segments(
     This is the open-loop fast path (static / oblivious policies, or any
     precomputed plan schedule). The closed-loop engine instead alternates
     :func:`simulate_segment` with host-side re-planning.
+
+    ``cache_ttl_seq`` (S, r) — or (r,), broadcast — runs the hot-tier
+    cache in front of the queues with per-segment TTLs; an all-zero row
+    expresses a hot-tier outage window (nothing hits, and because expiry
+    times keep being refreshed to the *past*, the cache drains naturally —
+    re-warming happens on-stream when the outage lifts).
     """
     m = cluster.m
     pi_seq = jnp.asarray(pi_seq)
@@ -503,6 +608,12 @@ def simulate_segments(
 
     overheads_seq = cluster.overheads() * scales(overhead_scale_seq)
     rates_seq = cluster.bandwidths() * scales(bandwidth_scale_seq) / chunk_mb
+    if cache_ttl_seq is not None:
+        cache_ttl_seq = jnp.asarray(cache_ttl_seq, jnp.float32)
+        if cache_ttl_seq.ndim == 1:
+            cache_ttl_seq = jnp.broadcast_to(
+                cache_ttl_seq, (n_seg,) + cache_ttl_seq.shape
+            )
     return _simulate_segments_device(
         key,
         pi_seq,
@@ -512,6 +623,8 @@ def simulate_segments(
         rates_seq,
         avail_seq,
         n_requests,
+        cache_ttl_seq,
+        jnp.asarray(cache_hit_latency, jnp.float32),
     )
 
 
@@ -764,6 +877,7 @@ class FleetResult(NamedTuple):
     file_id: Array  # (S, N)
     site_id: Array  # (S, N)
     node_busy: Array  # (S, m)
+    hit: Array | None = None  # (S, N) bool cache hits, or None (no cache)
 
     def mean_latency(self) -> Array:
         return jnp.mean(self.latency)
@@ -781,7 +895,10 @@ class FleetResult(NamedTuple):
         return jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1.0), jnp.nan)
 
 
-def _fleet_one(key, pi, lam_cs, overheads_cs, rates_cs, n_requests, warm):
+def _fleet_one(
+    key, pi, lam_cs, overheads_cs, rates_cs, n_requests, warm,
+    ttl=None, hit_latency=0.0,
+):
     m = overheads_cs.shape[-1]
     k_wl, k_sel, k_srv = jax.random.split(key, 3)
     t, file_id, site_id = generate_geo_workload(k_wl, lam_cs, n_requests)
@@ -791,6 +908,15 @@ def _fleet_one(key, pi, lam_cs, overheads_cs, rates_cs, n_requests, warm):
     masks = jax.vmap(lambda sk, fid: madow_sample(sk, pi[fid]))(
         sel_keys, file_id
     )
+    if ttl is None:
+        hit = None
+    else:
+        # every site shares one hot tier: the cache is keyed by file only,
+        # so cross-site reads of the same object warm each other
+        _, hit = ttl_cache_scan(
+            jnp.full(jnp.shape(ttl), -jnp.inf), t, file_id, ttl
+        )
+        masks = jnp.logical_and(masks, jnp.logical_not(hit)[:, None])
 
     # busy accrues in the carry (an (m,) add per step) instead of being
     # emitted per step: an (N, m) stacked output would dominate the whole
@@ -808,11 +934,14 @@ def _fleet_one(key, pi, lam_cs, overheads_cs, rates_cs, n_requests, warm):
     (_, busy), latency = jax.lax.scan(
         step, (jnp.zeros((m,)), jnp.zeros((m,))), (t, masks, service)
     )
+    if hit is not None:
+        latency = jnp.where(hit, jnp.asarray(hit_latency), latency)
     return (
         latency[warm:],
         file_id[warm:],
         site_id[warm:],
         busy,
+        None if hit is None else hit[warm:],
     )
 
 
@@ -822,10 +951,14 @@ fleet_one_raw = jax.jit(_fleet_one, static_argnames=("n_requests", "warm"))
 
 
 @functools.partial(jax.jit, static_argnames=("n_requests", "warm"))
-def _fleet_vmapped(keys, pi, lam_cs, overheads_cs, rates_cs, n_requests, warm):
+def _fleet_vmapped(
+    keys, pi, lam_cs, overheads_cs, rates_cs, n_requests, warm,
+    ttl=None, hit_latency=0.0,
+):
     return jax.vmap(
         lambda k: _fleet_one(
-            k, pi, lam_cs, overheads_cs, rates_cs, n_requests, warm
+            k, pi, lam_cs, overheads_cs, rates_cs, n_requests, warm,
+            ttl, hit_latency,
         )
     )(keys)
 
@@ -850,6 +983,8 @@ def simulate_fleet(
     *,
     drop_warmup: float = 0.1,
     devices: str = "auto",
+    cache_ttl: Array | None = None,
+    cache_hit_latency: float = 0.0,
 ) -> FleetResult:
     """Simulate ``n_seeds`` independent geo systems in ONE device program.
 
@@ -863,13 +998,26 @@ def simulate_fleet(
     (``devices="auto"``; ``"never"`` forces plain vmap — the single-CPU CI
     path), giving fleet scale-out with no change in semantics: each seed's
     trajectory is identical to the sequential run of the same key.
+
+    ``cache_ttl`` (r,) puts one shared hot-tier cache (cold at t=0) in
+    front of every seed's queues; each seed replays its own cache history
+    (independent workloads → independent warmth trajectories). Cache runs
+    take the plain-vmap path — the hit stream is an extra per-seed output
+    the fixed shard_map spec set does not cover, and the cached fleet is a
+    measurement surface, not the throughput benchmark.
     """
     keys = jax.random.split(key, n_seeds)
     d, rates = fabric.service_params(chunk_mb)
     lam_cs = jnp.asarray(lam_cs, jnp.float32)
     warm = int(n_requests * drop_warmup)
     n_dev = len(jax.devices())
-    if devices == "auto" and n_dev > 1 and n_seeds % n_dev == 0:
+    if cache_ttl is not None:
+        out = _fleet_vmapped(
+            keys, jnp.asarray(pi), lam_cs, d, rates, n_requests, warm,
+            jnp.asarray(cache_ttl, jnp.float32),
+            jnp.asarray(cache_hit_latency, jnp.float32),
+        )
+    elif devices == "auto" and n_dev > 1 and n_seeds % n_dev == 0:
         mesh = jax.sharding.Mesh(np.asarray(jax.devices()), ("seed",))
         spec = jax.sharding.PartitionSpec
         sharded = _shard_map_compat()(

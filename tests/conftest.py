@@ -1,6 +1,9 @@
 import os
 import sys
 
+import jax
+import pytest
+
 # Make sibling helper modules (e.g. _hypothesis_compat) importable when
 # pytest runs from the repo root without tests/ being a package.
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
@@ -10,3 +13,17 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running end-to-end test (compile + run SPMD)"
     )
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    """Drop compiled XLA executables after each test module.
+
+    A full-suite run compiles hundreds of programs in one process; on a
+    single-core CPU container the accumulated LLVM JIT state eventually
+    makes a later compile segfault (reproducibly, deep into the run, while
+    every module passes in isolation). Clearing per module keeps
+    intra-module compile reuse but bounds resident compiler state.
+    """
+    yield
+    jax.clear_caches()

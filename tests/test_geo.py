@@ -307,9 +307,10 @@ class TestFleet:
         d, rates = fabric.service_params(12.5)
         keys = jax.random.split(key, s)
         for i in (0, 3, 5):
-            lat_i, fid_i, site_i, busy_i = fleet_one_raw(
+            lat_i, fid_i, site_i, busy_i, hit_i = fleet_one_raw(
                 keys[i], pi, lam_cs, d, rates, n, n // 10
             )
+            assert hit_i is None  # no cache tier in this run
             np.testing.assert_allclose(
                 np.asarray(fleet.latency[i]), np.asarray(lat_i), rtol=1e-6
             )

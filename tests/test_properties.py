@@ -219,3 +219,41 @@ def test_bound_decreasing_in_redundancy(n, seed):
     t_narrow = float(mean_latency_bound(pi_narrow, lam, mom))
     t_wide = float(mean_latency_bound(pi_wide, lam, mom))
     assert t_wide <= t_narrow + 1e-4
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    lam=st.lists(st.floats(0.01, 0.3), min_size=2, max_size=6),
+    cap_frac=st.floats(0.1, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_che_hit_rates_match_simulated_cache(lam, cap_frac, seed):
+    """The Che/TTL approximation predicts the simulated TTL cache's
+    per-file hit rates across random catalogs: analytic
+    ``1 - exp(-lam_i T_C)`` vs the empirical hit fraction of
+    ``ttl_cache_scan`` replaying a Poisson stream from cold, within a
+    few percent for every file with enough arrivals to measure."""
+    from repro.storage import (
+        che_characteristic_time,
+        che_hit_rates,
+        simulate_ttl_cache,
+    )
+
+    lam = np.asarray(lam)
+    size = np.full(lam.shape, 50.0 * 2**20)
+    cap = cap_frac * float(size.sum())
+    tc = che_characteristic_time(lam, size, cap)
+    ttl = np.full(lam.shape, tc)
+    hits, reqs = simulate_ttl_cache(jax.random.key(seed), lam, ttl, 12000)
+    hits, reqs = np.asarray(hits, float), np.asarray(reqs, float)
+    analytic = che_hit_rates(lam, ttl)
+    measured = (lam >= 0.05) & (reqs >= 500)  # enough arrivals to estimate
+    assert measured.any()
+    np.testing.assert_allclose(
+        hits[measured] / reqs[measured], analytic[measured], atol=0.05
+    )
+    # and the fixed point the capacity was solved for: expected occupancy
+    # at the analytic hit rates fills the cache (unless everything fits)
+    if np.isfinite(tc):
+        occ = float((size * analytic).sum())
+        assert abs(occ - cap) / cap < 1e-6
