@@ -1,5 +1,7 @@
-"""TPU kernels for the GF(256) erasure-coding hot path."""
+"""TPU kernels: the GF(256) erasure-coding hot path and the fused FCFS
+fleet-queue scan."""
 
+from .fcfs_queue import fcfs_scan, fcfs_scan_pallas
 from .gf256_matmul import (
     gf256_matmul_pallas,
     gf256_matmul_pallas_batched,

@@ -1,0 +1,211 @@
+"""Pallas TPU kernel: fused FCFS queue scan for the fleet simulator.
+
+The exact discrete-event simulation of probabilistic scheduling
+(`storage/simulator.py`) reduces every path — single run, segment,
+geo segment, fleet — to ONE sequential recurrence over the merged
+arrival stream:
+
+    start_j  = max(t_req, dep_j)          (FCFS, work-conserving)
+    finish_j = start_j + service_j
+    dep_j   <- finish_j   where node j served this request
+    latency  = max_{j in service set} finish_j - t_req
+    busy_j  += service_j  where node j served this request
+
+The recurrence is inherently sequential in the request axis but embar-
+rassingly parallel in the *fleet* axis (independent seeds), so the hot
+loop's natural unit is an (S, m)-wide step: S seeds x m nodes per
+request index. As a ``lax.scan`` this is memory-bound — every step
+round-trips the (S, m) carry plus an (S, m) slice of the mask/service
+streams through HBM with no fusion across steps. The Pallas backend
+keeps the whole working set (carry, one request slice, accumulators)
+VMEM-resident for a block of seeds and walks the request axis in a
+``fori_loop`` inside ONE kernel launch, writing only the (S, N) latency
+block and the final (S, m) carries back out.
+
+Two interchangeable backends (same contract as `kernels/ops.py`):
+
+  * ``ref``    — ``lax.scan`` over requests (vmapped over seeds). The
+                 semantics anchor: bit-identical to the scans the
+                 simulator has always run.
+  * ``pallas`` — the fused kernel above (interpret-mode on CPU).
+
+``backend="auto"`` picks ``pallas`` on TPU and ``ref`` elsewhere.
+Parity over randomized (t, mask, service) workloads — including
+all-false masks (cache hits) and carried-in queue state — is asserted
+by ``tests/test_fleet_parity.py``.
+
+Conventions shared with the simulator:
+
+  * A request whose service set is empty (all-false mask row, e.g. a
+    cache hit thinned before dispatch) gets latency ``-inf`` — callers
+    patch it (``jnp.where(hit, hit_latency, latency)``) downstream.
+  * ``busy`` accrues in the carry (an (S, m) add per step) instead of
+    being emitted per step: an (N, m) stacked output would dominate the
+    whole scan in memory traffic at fleet widths.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+from jax.experimental import pallas as pl
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _step(dep, busy, t, mask, srv):
+    """One FCFS update; shapes (..., m) with t (...,). The op sequence is
+    shared verbatim by both backends so they agree bit-for-bit."""
+    start = jnp.maximum(t[..., None], dep)
+    finish = start + srv
+    new_dep = jnp.where(mask, finish, dep)
+    latency = jnp.max(jnp.where(mask, finish, -jnp.inf), axis=-1) - t
+    new_busy = busy + jnp.where(mask, srv, 0.0)
+    return new_dep, new_busy, latency
+
+
+def _fcfs_scan_ref_one(
+    t: Array, masks: Array, service: Array, dep0: Array, busy0: Array
+) -> tuple[Array, Array, Array]:
+    """Single-system ref backend: the simulator's historical ``lax.scan``."""
+
+    def step(carry, inp):
+        dep, busy = carry
+        tt, mask, srv = inp
+        new_dep, new_busy, latency = _step(dep, busy, tt, mask, srv)
+        return (new_dep, new_busy), latency
+
+    (dep, busy), latency = jax.lax.scan(
+        step, (dep0, busy0), (t, masks, service)
+    )
+    return latency, dep, busy
+
+
+def _fcfs_kernel(t_ref, m_ref, s_ref, d0_ref, b0_ref, lat_ref, dep_ref, busy_ref):
+    """Fused fleet-step block: grid walks seed blocks, the fori_loop walks
+    requests; carry + one (Sb, m) request slice stay VMEM-resident."""
+    n = t_ref.shape[1]
+
+    def body(i, carry):
+        dep, busy = carry
+        tt = pl.load(t_ref, (slice(None), pl.ds(i, 1)))[:, 0]
+        mask = pl.load(m_ref, (slice(None), pl.ds(i, 1), slice(None)))[:, 0, :] != 0
+        srv = pl.load(s_ref, (slice(None), pl.ds(i, 1), slice(None)))[:, 0, :]
+        new_dep, new_busy, lat = _step(dep, busy, tt, mask, srv)
+        pl.store(lat_ref, (slice(None), pl.ds(i, 1)), lat[:, None])
+        return new_dep, new_busy
+
+    dep, busy = jax.lax.fori_loop(0, n, body, (d0_ref[...], b0_ref[...]))
+    dep_ref[...] = dep
+    busy_ref[...] = busy
+
+
+@functools.partial(jax.jit, static_argnames=("block_seeds", "interpret"))
+def fcfs_scan_pallas(
+    t: Array,
+    masks: Array,
+    service: Array,
+    dep0: Array,
+    busy0: Array,
+    *,
+    block_seeds: int = 8,
+    interpret: bool = False,
+) -> tuple[Array, Array, Array]:
+    """Fused FCFS scan over a seed batch: one kernel launch per seed block.
+
+    Shapes: ``t`` (S, N), ``masks`` (S, N, m) bool/int, ``service``
+    (S, N, m), ``dep0``/``busy0`` (S, m). Returns ``(latency (S, N),
+    dep (S, m), busy (S, m))``. The seed axis is padded up to a block
+    multiple (padded rows scan zeros and are sliced away); VMEM per grid
+    step is ``Sb*N*(1 + 2m)`` values — the request streams of one seed
+    block — so callers bound N per call (the chunked-horizon driver in
+    `storage/simulator.py` feeds fixed-size blocks).
+    """
+    t = jnp.asarray(t, jnp.float32)
+    service = jnp.asarray(service, jnp.float32)
+    masks = jnp.asarray(masks, jnp.uint8)
+    s, n = t.shape
+    m = service.shape[-1]
+    sb = min(block_seeds, s)
+    pad = (-s) % sb
+    if pad:
+        t = jnp.pad(t, ((0, pad), (0, 0)))
+        masks = jnp.pad(masks, ((0, pad), (0, 0), (0, 0)))
+        service = jnp.pad(service, ((0, pad), (0, 0), (0, 0)))
+        dep0 = jnp.pad(jnp.asarray(dep0, jnp.float32), ((0, pad), (0, 0)))
+        busy0 = jnp.pad(jnp.asarray(busy0, jnp.float32), ((0, pad), (0, 0)))
+    sp = s + pad
+    latency, dep, busy = pl.pallas_call(
+        _fcfs_kernel,
+        grid=(sp // sb,),
+        in_specs=[
+            pl.BlockSpec((sb, n), lambda i: (i, 0)),
+            pl.BlockSpec((sb, n, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((sb, n, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((sb, m), lambda i: (i, 0)),
+            pl.BlockSpec((sb, m), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((sb, n), lambda i: (i, 0)),
+            pl.BlockSpec((sb, m), lambda i: (i, 0)),
+            pl.BlockSpec((sb, m), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((sp, n), jnp.float32),
+            jax.ShapeDtypeStruct((sp, m), jnp.float32),
+            jax.ShapeDtypeStruct((sp, m), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        t, masks, service,
+        jnp.asarray(dep0, jnp.float32), jnp.asarray(busy0, jnp.float32),
+    )
+    return latency[:s], dep[:s], busy[:s]
+
+
+def fcfs_scan(
+    t: Array,
+    masks: Array,
+    service: Array,
+    dep0: Array | None = None,
+    busy0: Array | None = None,
+    *,
+    backend: str = "auto",
+) -> tuple[Array, Array, Array]:
+    """Dispatching FCFS queue scan; ref/pallas agree bit-for-bit.
+
+    Accepts a single system (``t`` (N,), ``masks``/``service`` (N, m),
+    carries (m,)) or a seed batch (leading (S,) axis on everything).
+    ``dep0``/``busy0`` default to idle queues / zero accrued busy time.
+    Returns ``(latency, dep, busy)`` with the same leading axes.
+    """
+    t = jnp.asarray(t)
+    masks_b = jnp.asarray(masks, bool)
+    service = jnp.asarray(service)
+    m = service.shape[-1]
+    batched = t.ndim == 2
+    cshape = t.shape[:-1] + (m,)
+    dep0 = jnp.zeros(cshape) if dep0 is None else jnp.asarray(dep0)
+    busy0 = jnp.zeros(cshape) if busy0 is None else jnp.asarray(busy0)
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    if backend == "ref":
+        fn = _fcfs_scan_ref_one
+        if batched:
+            fn = jax.vmap(fn)
+        return fn(t, masks_b, service, dep0, busy0)
+    if backend == "pallas":
+        if not batched:
+            lat, dep, busy = fcfs_scan_pallas(
+                t[None], masks_b[None], service[None], dep0[None], busy0[None],
+                interpret=not _on_tpu(),
+            )
+            return lat[0], dep[0], busy[0]
+        return fcfs_scan_pallas(
+            t, masks_b, service, dep0, busy0, interpret=not _on_tpu()
+        )
+    raise ValueError(f"unknown backend {backend!r}")

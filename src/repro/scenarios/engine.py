@@ -167,6 +167,39 @@ class ScenarioOutcome:
         return out
 
 
+def _segment_stats(
+    lat: np.ndarray, include: np.ndarray | None = None
+) -> tuple[np.ndarray, np.ndarray, float, float]:
+    """Per-window (segment) and pooled latency statistics.
+
+    ``lat`` is (S, N); ``include`` an optional (S, N) boolean mask of the
+    requests that count (client rows — repair traffic is background
+    load). Returns ``(seg_mean, seg_p99, mean, p99)``. A window with no
+    included requests reports NaN, never a 0-count statistic — the same
+    contract as ``SimResult.per_file_mean``. This is the materialized
+    counterpart of the fleet path's per-window quantile sketches
+    (`storage.streaming.windowed_quantile_mean`).
+    """
+    if include is None:
+        seg_mean = lat.mean(-1)
+        seg_p99 = np.percentile(lat, 99, axis=-1)
+        pool = lat.reshape(-1)
+    else:
+        seg_mean = np.asarray(
+            [lat[s][include[s]].mean() if include[s].any() else np.nan
+             for s in range(lat.shape[0])]
+        )
+        seg_p99 = np.asarray(
+            [np.percentile(lat[s][include[s]], 99)
+             if include[s].any() else np.nan
+             for s in range(lat.shape[0])]
+        )
+        pool = lat[include]
+    return seg_mean, seg_p99, float(pool.mean()), float(
+        np.percentile(pool, 99)
+    )
+
+
 def initial_plan(
     spec: ScenarioSpec,
     cluster: Cluster,
@@ -504,14 +537,7 @@ def run_scenario(
     # All reported statistics cover CLIENT requests only; repair rows
     # (file_id >= r) are background load.
     client = fid < r
-    seg_mean = np.asarray(
-        [lat[s][client[s]].mean() if client[s].any() else np.nan
-         for s in range(n_seg)]
-    )
-    seg_p99 = np.asarray(
-        [np.percentile(lat[s][client[s]], 99) if client[s].any() else np.nan
-         for s in range(n_seg)]
-    )
+    seg_mean, seg_p99, pooled_mean, pooled_p99 = _segment_stats(lat, client)
 
     class_mean = class_p99 = None
     if spec.class_id is not None:
@@ -541,8 +567,8 @@ def run_scenario(
         else f"{policy}-cacheblind",
         seg_mean=seg_mean,
         seg_p99=seg_p99,
-        mean=float(lat[client].mean()),
-        p99=float(np.percentile(lat[client], 99)),
+        mean=pooled_mean,
+        p99=pooled_p99,
         degraded_frac=float(degraded[client].mean()),
         replans=replans,
         repair_frac=float(1.0 - client.mean()),
@@ -674,13 +700,14 @@ def run_geo_scenario(
             for ci in range(c)
         ]
     )
+    seg_mean, seg_p99, pooled_mean, pooled_p99 = _segment_stats(lat)
     return ScenarioOutcome(
         scenario=spec.name,
         policy=policy,
-        seg_mean=lat.mean(-1),
-        seg_p99=np.percentile(lat, 99, axis=-1),
-        mean=float(lat.mean()),
-        p99=float(np.percentile(lat, 99)),
+        seg_mean=seg_mean,
+        seg_p99=seg_p99,
+        mean=pooled_mean,
+        p99=pooled_p99,
         degraded_frac=float(degraded.mean()),
         replans=replans,
         site_mean=site_mean,

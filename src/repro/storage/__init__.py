@@ -57,6 +57,19 @@ from .rs import (
     gf_invert_matrix,
     pad_and_split,
 )
+from .streaming import (
+    DEFAULT_SKETCH,
+    SketchSpec,
+    StreamingStats,
+    stream_from_values,
+    stream_init,
+    stream_mean,
+    stream_merge,
+    stream_quantile,
+    stream_reduce,
+    stream_var,
+    windowed_quantile_mean,
+)
 from .simulator import (
     ClassLatencyStats,
     FleetResult,

@@ -65,8 +65,21 @@ import numpy as np
 from jax import Array
 
 from repro.core.scheduling import madow_sample
+from repro.kernels.fcfs_queue import fcfs_scan
 from .cache import ttl_cache_scan
 from .cluster import Cluster
+from .streaming import (
+    DEFAULT_SKETCH,
+    SketchSpec,
+    StreamingStats,
+    stream_from_values,
+    stream_init,
+    stream_mean,
+    stream_merge,
+    stream_quantile,
+    stream_reduce,
+    windowed_quantile_mean,
+)
 
 
 class ClassLatencyStats(NamedTuple):
@@ -118,6 +131,11 @@ class SimResult(NamedTuple):
     file_id: Array  # (N,) which file each request was for
     arrival: Array  # (N,) arrival times
     node_busy: Array  # (m,) total busy seconds per node (utilisation check)
+    # optional streaming view of the same run (moments + quantile sketch,
+    # `storage/streaming.py`) — populated when `simulate` is given a
+    # SketchSpec; the validation bridge between sketch percentiles and
+    # the exact Fig. 10-12 CDFs
+    stream: StreamingStats | None = None
 
     def mean_latency(self) -> Array:
         return jnp.mean(self.latency)
@@ -173,11 +191,16 @@ def simulate(
     *,
     drop_warmup: float = 0.1,
     per_file_chunk_mb: Array | None = None,
+    sketch: SketchSpec | None = None,
 ) -> SimResult:
     """Simulate probabilistic scheduling for dispatch matrix ``pi`` (r, m).
 
     ``per_file_chunk_mb`` (r,) enables heterogeneous per-file chunk sizes
     (the §V.B catalog where quarters use k = 6,7,6,4 on equal file sizes).
+    ``sketch`` additionally folds the (post-warmup) latencies into
+    streaming moments + a quantile sketch (``SimResult.stream``) — the
+    surface Fig. 10-12 CDF validation uses to check sketch percentiles
+    against the exact empirical distribution.
     """
     pi = jnp.asarray(pi)
     r, m = pi.shape
@@ -191,26 +214,19 @@ def simulate(
     else:
         service = cluster.sample_service(k_srv, chunk_mb, (n_requests,))  # (N, m)
 
-    def step(dep, inputs):
-        t, fid, skey, srv = inputs
-        mask = madow_sample(skey, pi[fid])  # (m,) exact-marginal k-subset
-        start = jnp.maximum(t, dep)
-        finish = start + srv
-        new_dep = jnp.where(mask, finish, dep)
-        latency = jnp.max(jnp.where(mask, finish, -jnp.inf)) - t
-        busy = jnp.where(mask, srv, 0.0)
-        return new_dep, (latency, busy)
-
-    dep0 = jnp.zeros((m,))
-    _, (latency, busy) = jax.lax.scan(
-        step, dep0, (arrival, file_id, sel_keys, service)
+    masks = jax.vmap(lambda skey, fid: madow_sample(skey, pi[fid]))(
+        sel_keys, file_id
     )
+    latency, _, busy = fcfs_scan(arrival, masks, service)
     warm = int(n_requests * drop_warmup)
     return SimResult(
         latency=latency[warm:],
         file_id=file_id[warm:],
         arrival=arrival[warm:],
-        node_busy=busy.sum(0),
+        node_busy=busy,
+        stream=None if sketch is None else stream_from_values(
+            latency[warm:], sketch
+        ),
     )
 
 
@@ -381,18 +397,7 @@ def _run_segment(
         serve = jnp.logical_and(masks, jnp.logical_not(hit)[:, None])
         degraded = jnp.logical_and(degraded, jnp.logical_not(hit))
 
-    def step(dep, inp):
-        t, mask, srv = inp
-        start = jnp.maximum(t, dep)
-        finish = start + srv
-        new_dep = jnp.where(mask, finish, dep)
-        latency = jnp.max(jnp.where(mask, finish, -jnp.inf)) - t
-        busy = jnp.where(mask, srv, 0.0)
-        return new_dep, (latency, busy)
-
-    dep, (latency, busy) = jax.lax.scan(
-        step, carry.dep, (arrival, serve, service)
-    )
+    latency, dep, busy = fcfs_scan(arrival, serve, service, carry.dep)
     if hit is not None:
         latency = jnp.where(hit, jnp.asarray(hit_latency), latency)
     served = jnp.where(serve, service, 0.0)
@@ -407,7 +412,7 @@ def _run_segment(
         latency=latency,
         file_id=file_id,
         arrival=arrival,
-        node_busy=busy.sum(0),
+        node_busy=busy,
         degraded=degraded,
         obs=obs,
         t_end=arrival[-1],
@@ -712,18 +717,7 @@ def _run_geo_segment(
     service = overheads_cs[site_id] + e / rates_cs[site_id]
     masks, degraded = dispatch_masks(k_sel, pi, file_id, avail)
 
-    def step(dep, inp):
-        t, mask, srv = inp
-        start = jnp.maximum(t, dep)
-        finish = start + srv
-        new_dep = jnp.where(mask, finish, dep)
-        latency = jnp.max(jnp.where(mask, finish, -jnp.inf)) - t
-        busy = jnp.where(mask, srv, 0.0)
-        return new_dep, (latency, busy)
-
-    dep, (latency, busy) = jax.lax.scan(
-        step, carry.dep, (arrival, masks, service)
-    )
+    latency, dep, busy = fcfs_scan(arrival, masks, service, carry.dep)
     served = jnp.where(masks, service, 0.0)
     site_oh = jax.nn.one_hot(site_id, c, dtype=jnp.float32)  # (N, C)
     mask_f = masks.astype(jnp.float32)
@@ -739,7 +733,7 @@ def _run_geo_segment(
         file_id=file_id,
         site_id=site_id,
         arrival=arrival,
-        node_busy=busy.sum(0),
+        node_busy=busy,
         degraded=degraded,
         obs=obs,
         t_end=arrival[-1],
@@ -871,37 +865,82 @@ class FleetResult(NamedTuple):
     an independent replica of the full system (own workload randomness,
     own FCFS queues) — the estimator-variance / what-if-ensemble shape,
     and the throughput unit for `benchmarks/fleet_scale.py`.
+
+    Two mutually exclusive reporting modes:
+
+    * **materialized** (``stream=None``): per-request ``latency`` /
+      ``file_id`` / ``site_id`` (S, N) arrays — memory scales with the
+      simulated horizon.
+    * **streaming** (``latency=None``): constant-size per-seed
+      :class:`~.streaming.StreamingStats` in ``stream`` plus per-window
+      (chunk) stats in ``windows`` (S, W); the horizon no longer scales
+      memory. ``sketch`` records the bin geometry the sketches used.
     """
 
-    latency: Array  # (S, N)
-    file_id: Array  # (S, N)
-    site_id: Array  # (S, N)
+    latency: Array | None  # (S, N), or None in streaming mode
+    file_id: Array | None  # (S, N), or None in streaming mode
+    site_id: Array | None  # (S, N), or None in streaming mode
     node_busy: Array  # (S, m)
     hit: Array | None = None  # (S, N) bool cache hits, or None (no cache)
+    stream: StreamingStats | None = None  # (S,)-batched, streaming mode
+    windows: StreamingStats | None = None  # (S, W)-batched per-chunk stats
+    hit_count: Array | None = None  # (S,) post-warmup hits (streaming+cache)
+    sketch: SketchSpec | None = None  # bin geometry of stream/windows
 
     def mean_latency(self) -> Array:
+        # stream wins when both exist: keep_latency re-materializes the
+        # warmup region too, so the raw array is a superset of the
+        # post-warm population the accumulators track
+        if self.stream is not None:
+            return stream_mean(stream_reduce(self.stream))
         return jnp.mean(self.latency)
+
+    def quantile(self, q: float) -> Array:
+        """Fleet-pooled latency quantile from the streaming sketch (merged
+        across seeds — exact: integer bucket counts add)."""
+        if self.stream is None:
+            raise ValueError(
+                "quantile() needs a streaming run (simulate_fleet(stream="
+                "True)); materialized runs expose raw .latency instead"
+            )
+        return stream_quantile(stream_reduce(self.stream), q, self.sketch)
+
+    def p99_windowed(self, q: float = 0.99) -> Array:
+        """Mean of per-window (chunk) fleet-pooled sketch p99s — the
+        streaming counterpart of ``ScenarioOutcome.p99_windowed`` (the
+        SLO-dashboard aggregation; see `scenarios/engine.py`)."""
+        if self.windows is None:
+            raise ValueError("p99_windowed() needs a streaming run")
+        merged = stream_reduce(self.windows, axis=0)  # (W,) pooled per window
+        return windowed_quantile_mean(merged, q, self.sketch)
 
     def per_site_mean(self, n_sites: int) -> Array:
         """(C,) empirical mean latency by request origin site.
 
         A site that originated zero requests gets NaN, never a 0-count
         mean — the same contract as :meth:`SimResult.per_file_mean` and
-        ``ScenarioOutcome.site_mean``.
+        ``ScenarioOutcome.site_mean``. Materialized runs only (streaming
+        accumulators are site-pooled).
         """
+        if self.site_id is None:
+            raise ValueError("per_site_mean() needs a materialized run")
         one_hot = jax.nn.one_hot(self.site_id, n_sites, dtype=jnp.float32)
         tot = jnp.einsum("snc,sn->c", one_hot, self.latency)
         cnt = one_hot.sum((0, 1))
         return jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1.0), jnp.nan)
 
 
-def _fleet_one(
-    key, pi, lam_cs, overheads_cs, rates_cs, n_requests, warm,
-    ttl=None, hit_latency=0.0,
-):
+def _fleet_inputs(key, pi, lam_cs, overheads_cs, rates_cs, n_requests, ttl,
+                  t0=0.0, cache=None):
+    """One seed's merged request stream: arrivals, marks, service draws,
+    Madow service sets, and (when a hot tier is simulated) cache hits
+    thinned out of the dispatch masks. Vmapped over the seed axis by every
+    fleet driver; the FCFS recurrence itself runs in the shared
+    `kernels/fcfs_queue.py` scan afterwards."""
     m = overheads_cs.shape[-1]
     k_wl, k_sel, k_srv = jax.random.split(key, 3)
-    t, file_id, site_id = generate_geo_workload(k_wl, lam_cs, n_requests)
+    rel, file_id, site_id = generate_geo_workload(k_wl, lam_cs, n_requests)
+    t = t0 + rel
     sel_keys = jax.random.split(k_sel, n_requests)
     e = jax.random.exponential(k_srv, (n_requests, m))
     service = overheads_cs[site_id] + e / rates_cs[site_id]
@@ -910,30 +949,27 @@ def _fleet_one(
     )
     if ttl is None:
         hit = None
+        new_cache = cache
     else:
         # every site shares one hot tier: the cache is keyed by file only,
         # so cross-site reads of the same object warm each other
-        _, hit = ttl_cache_scan(
-            jnp.full(jnp.shape(ttl), -jnp.inf), t, file_id, ttl
-        )
+        expiry = jnp.full(jnp.shape(ttl), -jnp.inf) if cache is None else cache
+        new_cache, hit = ttl_cache_scan(expiry, t, file_id, ttl)
         masks = jnp.logical_and(masks, jnp.logical_not(hit)[:, None])
+    return t, file_id, site_id, masks, service, hit, new_cache
 
-    # busy accrues in the carry (an (m,) add per step) instead of being
-    # emitted per step: an (N, m) stacked output would dominate the whole
-    # kernel in memory traffic at fleet widths
-    def step(carry, inp):
-        dep, busy = carry
-        tt, mask, srv = inp
-        start = jnp.maximum(tt, dep)
-        finish = start + srv
-        new_dep = jnp.where(mask, finish, dep)
-        latency = jnp.max(jnp.where(mask, finish, -jnp.inf)) - tt
-        new_busy = busy + jnp.where(mask, srv, 0.0)
-        return (new_dep, new_busy), latency
 
-    (_, busy), latency = jax.lax.scan(
-        step, (jnp.zeros((m,)), jnp.zeros((m,))), (t, masks, service)
+def _fleet_one(
+    key, pi, lam_cs, overheads_cs, rates_cs, n_requests, warm,
+    ttl=None, hit_latency=0.0, backend="ref",
+):
+    t, file_id, site_id, masks, service, hit, _ = _fleet_inputs(
+        key, pi, lam_cs, overheads_cs, rates_cs, n_requests, ttl
     )
+    # busy accrues in the fcfs carry (an (m,) add per step) instead of
+    # being emitted per step: an (N, m) stacked output would dominate the
+    # whole kernel in memory traffic at fleet widths
+    latency, _, busy = fcfs_scan(t, masks, service, backend=backend)
     if hit is not None:
         latency = jnp.where(hit, jnp.asarray(hit_latency), latency)
     return (
@@ -947,20 +983,130 @@ def _fleet_one(
 
 # Jitted single-seed entry point — the sequential baseline that
 # `benchmarks/fleet_scale.py` loops over to measure the vmap win.
-fleet_one_raw = jax.jit(_fleet_one, static_argnames=("n_requests", "warm"))
+fleet_one_raw = jax.jit(
+    _fleet_one, static_argnames=("n_requests", "warm", "backend")
+)
 
 
-@functools.partial(jax.jit, static_argnames=("n_requests", "warm"))
+@functools.partial(
+    jax.jit, static_argnames=("n_requests", "warm", "backend", "cached")
+)
 def _fleet_vmapped(
-    keys, pi, lam_cs, overheads_cs, rates_cs, n_requests, warm,
-    ttl=None, hit_latency=0.0,
+    keys, pi, lam_cs, overheads_cs, rates_cs, ttl, hit_latency,
+    n_requests, warm, backend="ref", cached=False,
 ):
-    return jax.vmap(
-        lambda k: _fleet_one(
-            k, pi, lam_cs, overheads_cs, rates_cs, n_requests, warm,
-            ttl, hit_latency,
+    """Materialized fleet: per-seed streams vmapped, then ONE batched
+    (S, m)-wide FCFS scan (`kernels/fcfs_queue.py`) over the whole fleet.
+
+    ``ttl``/``hit_latency`` are always present positionally so the
+    shard_map in/out specs cover cached and uncached fleets alike; the
+    static ``cached`` flag constant-folds the cache pre-scan out of
+    uncached programs (a dummy ttl rides along, never read).
+    """
+    prep = lambda k: _fleet_inputs(
+        k, pi, lam_cs, overheads_cs, rates_cs, n_requests,
+        ttl if cached else None,
+    )
+    t, file_id, site_id, masks, service, hit, _ = jax.vmap(prep)(keys)
+    latency, _, busy = fcfs_scan(t, masks, service, backend=backend)
+    if cached:
+        latency = jnp.where(hit, jnp.asarray(hit_latency), latency)
+    return (
+        latency[:, warm:],
+        file_id[:, warm:],
+        site_id[:, warm:],
+        busy,
+        hit[:, warm:] if cached else None,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_chunks", "block", "warm", "sketch", "backend", "cached",
+        "materialize",
+    ),
+)
+def _fleet_stream_batched(
+    keys, pi, lam_cs, overheads_cs, rates_cs, ttl, hit_latency,
+    n_chunks, block, warm, sketch, backend="ref", cached=False,
+    materialize=False,
+):
+    """Streaming fleet: scan over ``n_chunks`` fixed-size request blocks.
+
+    Carry = FCFS queue state + accrued busy + absolute clock + cache
+    warmth + the :class:`~.streaming.StreamingStats` accumulators, all
+    (S,)-batched — so memory is O(S * block), constant in the total
+    horizon ``n_chunks * block``. Each chunk draws its own workload block
+    (arrivals continue from the carried clock — one continuous system
+    history per seed, the same contract as ``SimCarry``), runs the
+    (S, m)-wide FCFS kernel, and folds the block's latencies into both
+    the global accumulators and that chunk's *window* stats (the
+    streaming `p99_windowed` surface). With ``n_chunks == 1`` the random
+    stream is identical to the materialized path's (`_fleet_vmapped`):
+    the per-seed key is used directly instead of being split once more.
+
+    ``materialize=True`` additionally stacks every block's latencies —
+    O(total horizon) memory again — as the validation twin the parity
+    tests and `benchmarks/fleet_scale.py` compare the streaming
+    accumulators against.
+    """
+    s = keys.shape[0]
+    m = overheads_cs.shape[-1]
+    r = lam_cs.shape[-1]
+    if n_chunks == 1:
+        chunk_keys = keys[:, None]
+    else:
+        chunk_keys = jax.vmap(lambda k: jax.random.split(k, n_chunks))(keys)
+    chunk_keys = jnp.swapaxes(chunk_keys, 0, 1)  # (W, S): scan xs
+    ttl_arr = ttl if cached else None
+
+    def chunk_step(carry, ckeys):
+        dep, busy, t0, cache, stats, hitcnt, idx0 = carry
+        prep = lambda k, tt0, ca: _fleet_inputs(
+            k, pi, lam_cs, overheads_cs, rates_cs, block, ttl_arr,
+            t0=tt0, cache=ca,
         )
-    )(keys)
+        t, _, _, masks, service, hit, new_cache = jax.vmap(prep)(
+            ckeys, t0, cache
+        )
+        latency, dep, busy = fcfs_scan(
+            t, masks, service, dep, busy, backend=backend
+        )
+        if cached:
+            latency = jnp.where(hit, jnp.asarray(hit_latency), latency)
+        inc = jnp.broadcast_to(
+            idx0 + jnp.arange(block) >= warm, latency.shape
+        )
+        wstats = stream_from_values(latency, sketch, include=inc)
+        stats = stream_merge(stats, wstats)
+        if cached:
+            hitcnt = hitcnt + jnp.sum(
+                jnp.logical_and(hit, inc), axis=1, dtype=jnp.int32
+            )
+        new_carry = (
+            dep, busy, t[:, -1], new_cache, stats, hitcnt, idx0 + block
+        )
+        return new_carry, (wstats, latency if materialize else None)
+
+    carry0 = (
+        jnp.zeros((s, m)),  # dep
+        jnp.zeros((s, m)),  # busy
+        jnp.zeros((s,)),  # absolute clock
+        jnp.full((s, r), -jnp.inf) if cached else None,  # cache warmth
+        stream_init(sketch, (s,)),
+        jnp.zeros((s,), jnp.int32) if cached else None,
+        jnp.asarray(0, jnp.int32),
+    )
+    (_, busy, _, _, stats, hitcnt, _), (windows, lats) = jax.lax.scan(
+        chunk_step, carry0, chunk_keys
+    )
+    # scan stacks the chunk axis in front; every output must lead with the
+    # seed axis so shard_map's out_specs shard seeds, not chunks
+    windows = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), windows)
+    if materialize:
+        lats = jnp.swapaxes(lats, 0, 1).reshape(s, n_chunks * block)
+    return stats, windows, busy, hitcnt, lats
 
 
 def _shard_map_compat():
@@ -985,52 +1131,115 @@ def simulate_fleet(
     devices: str = "auto",
     cache_ttl: Array | None = None,
     cache_hit_latency: float = 0.0,
+    stream: bool = False,
+    n_chunks: int = 1,
+    sketch: SketchSpec | None = None,
+    backend: str = "auto",
+    keep_latency: bool = False,
 ) -> FleetResult:
     """Simulate ``n_seeds`` independent geo systems in ONE device program.
 
-    The fleet axis is pure data parallelism — seeds never interact — so it
-    vmaps: one ``lax.scan`` whose per-step body is (S, m)-wide instead of
-    S separate (m,)-wide scans, amortizing the per-step dispatch that
-    dominates a Python loop over seeds (``fleet_one_raw``; the >= 10x win
-    is asserted by `benchmarks/fleet_scale.py`). With multiple local
-    devices and ``n_seeds`` divisible by the device count, the vmapped
-    program is additionally ``shard_map``-ped over a seed mesh axis
-    (``devices="auto"``; ``"never"`` forces plain vmap — the single-CPU CI
-    path), giving fleet scale-out with no change in semantics: each seed's
-    trajectory is identical to the sequential run of the same key.
+    The fleet axis is pure data parallelism — seeds never interact — so
+    per-seed workload/dispatch prep vmaps and the FCFS recurrence runs as
+    ONE (S, m)-wide scan in the shared `kernels/fcfs_queue.py` kernel
+    (``backend="auto"``: fused Pallas on TPU, ``lax.scan`` ref elsewhere),
+    amortizing the per-step dispatch that dominates a Python loop over
+    seeds (``fleet_one_raw``; the >= 10x win is asserted by
+    `benchmarks/fleet_scale.py`). With multiple local devices the program
+    is additionally ``shard_map``-ped over a seed mesh axis
+    (``devices="auto"``; ``"never"`` forces plain vmap) with no change in
+    semantics: each seed's trajectory is identical to the sequential run
+    of the same key (asserted by ``tests/test_fleet_parity.py``). Cached
+    fleets shard like uncached ones — the ttl/hit streams are covered by
+    the spec set — and when ``n_seeds`` is not a device multiple the seed
+    axis is padded up to one (padded seeds recompute early keys and are
+    sliced away) instead of silently falling back to a single device.
+
+    ``stream=True`` switches to the streaming path: per-request latency
+    arrays are never materialized; instead constant-size streaming
+    moments + quantile sketches (``FleetResult.stream``, per-window
+    ``windows``; `storage/streaming.py`) accumulate in the scan carry, so
+    the simulated horizon is memory-unbounded. ``n_chunks`` runs the
+    horizon as ``n_chunks`` x ``n_requests``-sized blocks at O(block)
+    memory (requires ``stream=True``); ``sketch`` sets the quantile bin
+    geometry (default :data:`~.streaming.DEFAULT_SKETCH`).
+    ``keep_latency=True`` (validation only) re-materializes the full
+    latency matrix alongside the accumulators.
 
     ``cache_ttl`` (r,) puts one shared hot-tier cache (cold at t=0) in
     front of every seed's queues; each seed replays its own cache history
-    (independent workloads → independent warmth trajectories). Cache runs
-    take the plain-vmap path — the hit stream is an extra per-seed output
-    the fixed shard_map spec set does not cover, and the cached fleet is a
-    measurement surface, not the throughput benchmark.
+    (independent workloads → independent warmth trajectories). Streaming
+    cache runs report post-warmup ``hit_count`` per seed instead of the
+    per-request hit stream.
     """
+    if n_chunks < 1:
+        raise ValueError(f"n_chunks must be >= 1, got {n_chunks}")
+    if n_chunks > 1 and not stream:
+        raise ValueError(
+            "chunked horizons (n_chunks > 1) require stream=True — the "
+            "materialized path would allocate the full horizon anyway"
+        )
+    if keep_latency and not stream:
+        raise ValueError("keep_latency only applies to stream=True runs")
     keys = jax.random.split(key, n_seeds)
     d, rates = fabric.service_params(chunk_mb)
     lam_cs = jnp.asarray(lam_cs, jnp.float32)
-    warm = int(n_requests * drop_warmup)
-    n_dev = len(jax.devices())
-    if cache_ttl is not None:
-        out = _fleet_vmapped(
-            keys, jnp.asarray(pi), lam_cs, d, rates, n_requests, warm,
-            jnp.asarray(cache_ttl, jnp.float32),
-            jnp.asarray(cache_hit_latency, jnp.float32),
+    total = n_requests * n_chunks
+    warm = int(total * drop_warmup)
+    cached = cache_ttl is not None
+    sketch = DEFAULT_SKETCH if sketch is None else sketch
+    ttl = (
+        jnp.asarray(cache_ttl, jnp.float32)
+        if cached
+        else jnp.zeros((1,), jnp.float32)  # dummy; constant-folded away
+    )
+    hit_lat = jnp.asarray(cache_hit_latency, jnp.float32)
+
+    if stream:
+        fn = functools.partial(
+            _fleet_stream_batched,
+            n_chunks=n_chunks, block=n_requests, warm=warm, sketch=sketch,
+            backend=backend, cached=cached, materialize=keep_latency,
         )
-    elif devices == "auto" and n_dev > 1 and n_seeds % n_dev == 0:
+    else:
+        fn = functools.partial(
+            _fleet_vmapped,
+            n_requests=n_requests, warm=warm, backend=backend, cached=cached,
+        )
+
+    n_dev = len(jax.devices())
+    if devices == "auto" and n_dev > 1:
+        # pad the seed axis up to a device multiple (padded seeds rerun
+        # early keys and are masked out below) — never a silent
+        # single-device fallback for odd seed counts
+        s_run = n_seeds + (-n_seeds) % n_dev
+        if s_run != n_seeds:
+            keys = keys[jnp.arange(s_run) % n_seeds]
         mesh = jax.sharding.Mesh(np.asarray(jax.devices()), ("seed",))
         spec = jax.sharding.PartitionSpec
         sharded = _shard_map_compat()(
-            functools.partial(
-                _fleet_vmapped, n_requests=n_requests, warm=warm
-            ),
+            fn,
             mesh=mesh,
-            in_specs=(spec("seed"), spec(), spec(), spec(), spec()),
+            in_specs=(spec("seed"),) + (spec(),) * 6,
             out_specs=spec("seed"),
         )
-        out = sharded(keys, jnp.asarray(pi), lam_cs, d, rates)
+        out = sharded(keys, jnp.asarray(pi), lam_cs, d, rates, ttl, hit_lat)
+        if s_run != n_seeds:
+            out = jax.tree.map(lambda x: x[:n_seeds], out)
     else:
-        out = _fleet_vmapped(
-            keys, jnp.asarray(pi), lam_cs, d, rates, n_requests, warm
+        out = fn(keys, jnp.asarray(pi), lam_cs, d, rates, ttl, hit_lat)
+
+    if stream:
+        stats, windows, busy, hitcnt, lats = out
+        return FleetResult(
+            latency=lats,
+            file_id=None,
+            site_id=None,
+            node_busy=busy,
+            hit=None,
+            stream=stats,
+            windows=windows,
+            hit_count=hitcnt,
+            sketch=sketch,
         )
     return FleetResult(*out)
