@@ -43,6 +43,21 @@ def paper_catalog(r: int = 1000, file_mb: float = 150.0):
     return jnp.asarray(lam), jnp.asarray(ks, jnp.float32), np.asarray(chunk_mb)
 
 
+def million_file_catalog(r: int = 1_000_000, **kw):
+    """A vectorized r-file synthetic catalog (NO Python per-file loops —
+    every field is drawn and normalized with whole-array numpy ops, so
+    generating 10^6 files costs tens of milliseconds, not minutes).
+
+    Benchmark-facing alias of ``repro.core.synthetic_catalog``; keyword
+    arguments (``total_rate``, ``k_classes``, ``file_mb``, ``rate_sigma``,
+    ``seed``) pass through. The default keeps total traffic constant as r
+    grows ("same traffic, more objects"), so catalog sizes are comparable
+    against one fixed testbed."""
+    from repro.core import synthetic_catalog
+
+    return synthetic_catalog(r, **kw)
+
+
 def time_interleaved(fns, repeats: int = 5) -> list[float]:
     """Best-of-repeats wall time for each fn, with the repeats
     *interleaved* so a noisy window on a shared/small machine hits every

@@ -1,77 +1,351 @@
 """JLCM solver scaling: wall time and iterations vs catalog size r
-(the paper demonstrates r=1000; we sweep to 4000).
+(the paper demonstrates r=1000; we sweep to 4000 dense and to 10^6
+through the hierarchical aggregation path).
 
-Two comparisons on top of the raw scaling sweep:
-  * ``speedup_vs_debug`` — the device-resident `lax.while_loop` path vs the
-    seed's Python-loop implementation (kept as ``mode="debug"``), which
-    pays per-iteration host syncs on every backtracking probe;
-  * a final ``batch`` section — an 8-point theta sweep solved by
-    `solve_batch` in ONE vmapped device call vs 8 sequential `solve` calls.
+Four sections:
+  * ``jlcm_scaling`` — the dense sweep, with ``speedup_vs_debug``: the
+    device-resident `lax.while_loop` path vs the seed's Python-loop
+    implementation (kept as ``mode="debug"``), which pays per-iteration
+    host syncs on every backtracking probe. Timed via
+    ``common.time_interleaved`` (best-of, interleaved repeats).
+  * ``jlcm_batch_sweep`` — an 8-point theta sweep solved by `solve_batch`
+    in ONE vmapped device call vs 8 sequential `solve` calls.
+  * ``jlcm_hierarchical`` — million-file planning (`core/aggregate.py`):
+    cluster the catalog by (class, log2-rate bin), solve ONE
+    cluster-granularity problem, disaggregate by exact gather. Asserts
+    (i) bitwise volume/file agreement on homogeneous volumes (V=1 volume
+    problems ARE the file problems, bit for bit; multi-file volumes
+    disaggregate by gather, arithmetic-free), (ii) the clustered
+    objective lands within 5% of the dense solve at r=1000, and (iii)
+    the full 10^6-file plan (aggregation + solve) finishes inside the
+    dense r=1000 wall measured on the same run.
+  * ``jlcm_hier_scenario`` (full runs only) — the closed-loop proof: the
+    hotspot-drift scenario over a 10^5-file catalog planned through
+    ``serving.HierarchicalReplanner`` (full re-solves on moment drift,
+    incremental otherwise), adaptive vs static.
+
+CLI:
+    PYTHONPATH=src:. python benchmarks/jlcm_scaling.py            # full
+    PYTHONPATH=src:. python benchmarks/jlcm_scaling.py --smoke    # CI
 """
+from __future__ import annotations
+
+import argparse
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import JLCMProblem, solve, solve_batch
-from benchmarks.common import emit, paper_catalog, testbed
+from repro.core import (
+    JLCMProblem,
+    build_problem,
+    cluster_catalog,
+    duality_gap,
+    effective_chunk_mb,
+    evaluate_pi,
+    materialize,
+    solve,
+    solve_batch,
+    solve_hierarchical,
+    volume_catalog,
+)
+from benchmarks.common import (
+    emit,
+    million_file_catalog,
+    paper_catalog,
+    testbed,
+    time_interleaved,
+)
 
 DEBUG_TIMING_MAX_R = 1000  # Python-loop baseline gets slow past this
+SOLVE_KW = dict(max_iters=300, eps=0.01)  # one protocol for every solve
 
 
 def _timed(fn):
+    """Wall-time one call, blocking on the FULL output pytree — timing
+    only `.pi` under-reports whatever async work feeds the other leaves
+    (objective trace, bounds, placement)."""
     t0 = time.perf_counter()
     out = fn()
-    jax.block_until_ready(out.pi)
+    jax.block_until_ready(out)
     return out, time.perf_counter() - t0
 
 
-def run():
-    cl = testbed()
+def _dense_rows(cl, smoke: bool) -> list[dict]:
     rows = []
-    for r in (50, 200, 1000, 4000):
+    sizes = (50, 200, 1000) if smoke else (50, 200, 1000, 4000)
+    debug_max_r = 200 if smoke else DEBUG_TIMING_MAX_R
+    for r in sizes:
         lam, ks, chunk_mb = paper_catalog(r=r)
         eff = float(np.average(chunk_mb, weights=np.asarray(lam)))
         prob = JLCMProblem(lam=lam, k=ks, moments=cl.moments(eff),
                            cost=cl.cost, theta=2.0)
-        solve(prob, max_iters=300, eps=0.01)  # warmup: compile once
-        sol, wall = _timed(lambda: solve(prob, max_iters=300, eps=0.01))
-        iters = len(sol.objective_trace) - 1
-        if r <= DEBUG_TIMING_MAX_R:
-            _, wall_dbg = _timed(
-                lambda: solve(prob, max_iters=300, eps=0.01, mode="debug"))
-            speedup = round(wall_dbg / max(wall, 1e-9), 1)
+        solve(prob, **SOLVE_KW)  # warmup: compile once
+        sol, wall = _timed(lambda: solve(prob, **SOLVE_KW))
+        iters = int(sol.iterations)
+        if r <= debug_max_r:
+            merged_t, debug_t = time_interleaved(
+                [
+                    lambda: jax.block_until_ready(solve(prob, **SOLVE_KW)),
+                    lambda: jax.block_until_ready(
+                        solve(prob, **SOLVE_KW, mode="debug")
+                    ),
+                ],
+                repeats=3,
+            )
+            wall_dbg = round(debug_t, 2)
+            speedup = round(debug_t / max(merged_t, 1e-9), 1)
         else:
             wall_dbg, speedup = "", ""
         rows.append(dict(r=r, iterations=iters,
                          wall_s=round(wall, 3),
-                         wall_debug_s=round(wall_dbg, 2) if wall_dbg != "" else "",
+                         wall_debug_s=wall_dbg,
                          speedup_vs_debug=speedup,
-                         us_per_file_iter=round(wall / r / max(iters, 1) * 1e6, 2),
+                         us_per_file_iter=round(
+                             wall / r / max(iters, 1) * 1e6, 2),
                          objective=round(float(sol.objective), 2)))
+    return rows
 
-    # theta-sweep batching: 8 instances as one vmapped XLA program
+
+def _batch_rows(cl) -> list[dict]:
     lam, ks, chunk_mb = paper_catalog(r=200)
     eff = float(np.average(chunk_mb, weights=np.asarray(lam)))
     mom = cl.moments(eff)
     thetas = (0.5, 1.0, 2.0, 10.0, 50.0, 100.0, 150.0, 200.0)
     probs = [JLCMProblem(lam=lam, k=ks, moments=mom, cost=cl.cost, theta=t)
              for t in thetas]
-    solve_batch(probs, max_iters=300, eps=0.01)  # warmup
-    bat, wall_batch = _timed(lambda: solve_batch(probs, max_iters=300, eps=0.01))
+    solve_batch(probs, **SOLVE_KW)  # warmup
+    bat, wall_batch = _timed(lambda: solve_batch(probs, **SOLVE_KW))
     t0 = time.perf_counter()
-    seq = [solve(p, max_iters=300, eps=0.01) for p in probs]
+    seq = [solve(p, **SOLVE_KW) for p in probs]
+    jax.block_until_ready([s.pi for s in seq])
     wall_seq = time.perf_counter() - t0
     err = max(abs(float(bat.objective[i]) - float(s.objective))
               / max(1.0, abs(float(s.objective)))
               for i, s in enumerate(seq))
-    emit(rows, "jlcm_scaling")
-    batch_rows = [dict(r=200, batch=len(thetas),
-                       wall_batch_s=round(wall_batch, 3),
-                       wall_sequential_s=round(wall_seq, 3),
-                       speedup=round(wall_seq / max(wall_batch, 1e-9), 1),
-                       max_rel_obj_err=round(err, 6))]
-    emit(batch_rows, "jlcm_batch_sweep")
     assert err < 1e-4, f"batch vs sequential objective mismatch: {err}"
-    return rows + batch_rows
+    return [dict(r=200, batch=len(thetas),
+                 wall_batch_s=round(wall_batch, 3),
+                 wall_sequential_s=round(wall_seq, 3),
+                 speedup=round(wall_seq / max(wall_batch, 1e-9), 1),
+                 max_rel_obj_err=round(err, 6))]
+
+
+def _assert_volume_bitwise(cl) -> None:
+    """Bitwise volume/file agreement on homogeneous volumes.
+
+    Two exact properties (see the `core/aggregate.py` docstring for why
+    "solve r duplicated rows" is NOT bitwise-reproducible and these are
+    the right invariants):
+
+    * V=1: a volume sized below the file size puts every file in its own
+      volume — that volume problem IS the file problem, and the solves
+      agree bit for bit.
+    * multi-file homogeneous volumes: member files share their volume's
+      dispatch row via a gather (`materialize`), which introduces no
+      arithmetic — the disaggregated per-file rows equal the volume rows
+      bitwise, and the volume objective matches the file-level
+      evaluation of the disaggregated plan to float tolerance.
+    """
+    # one class, zero rate spread -> every volume is homogeneous
+    cat = million_file_catalog(
+        64, k_classes=(4,), file_mb=(100.0,), rate_sigma=0.0
+    )
+    mom = cl.moments(float(cat.chunk_mb[0]))
+
+    h1 = volume_catalog(cat, volume_mb=100.0)  # V=1: one file per volume
+    assert h1.n_clusters == cat.r, "V=1 packing must keep every file"
+    prob_vol = build_problem(h1, mom, cl.cost, 2.0)
+    # same dtypes as build_problem so the comparison can be bitwise
+    prob_file = JLCMProblem(
+        lam=jnp.asarray(cat.lam, jnp.float32),
+        k=jnp.asarray(cat.k, jnp.int32),
+        moments=mom, cost=cl.cost, theta=2.0,
+    )
+    sol_vol = solve(prob_vol, **SOLVE_KW)
+    sol_file = solve(prob_file, **SOLVE_KW)
+    np.testing.assert_array_equal(
+        np.asarray(sol_vol.pi), np.asarray(sol_file.pi),
+        err_msg="V=1 volume solve must equal the file solve bitwise",
+    )
+    assert float(sol_vol.objective) == float(sol_file.objective)
+
+    h4 = volume_catalog(cat, volume_mb=400.0)  # 4 files per volume
+    assert h4.n_clusters == cat.r // 4
+    plan, sol4 = solve_hierarchical(h4, mom, cl.cost, 2.0, **SOLVE_KW)
+    pi_files = np.asarray(materialize(plan))
+    cid = h4.cluster_of_file()
+    np.testing.assert_array_equal(
+        pi_files, np.asarray(plan.cluster_pi)[cid],
+        err_msg="disaggregation must be an exact gather",
+    )
+    # objective parity across granularities, component-wise: node loads
+    # are identical (the latency fold is linear in lam), so the latency
+    # agrees; the file-level STORAGE cost is exactly (files per volume)x
+    # the volume cost — that ratio is the packing saving the volume model
+    # exists to express, not an aggregation error.
+    ev = evaluate_pi(prob_file, jnp.asarray(pi_files))
+    rel_lat = abs(float(ev.latency) - float(sol4.latency)) / max(
+        1.0, abs(float(sol4.latency))
+    )
+    assert rel_lat < 1e-3, (
+        f"homogeneous-volume latency must match the file-level "
+        f"evaluation of its disaggregated plan: rel err {rel_lat}"
+    )
+    rel_cost = abs(float(ev.cost) - 4.0 * float(sol4.cost)) / max(
+        1.0, 4.0 * float(sol4.cost)
+    )
+    assert rel_cost < 1e-5, (
+        f"file-level storage cost must be exactly 4x the volume cost "
+        f"on 4-file homogeneous volumes: rel err {rel_cost}"
+    )
+
+
+def _hier_rows(cl, smoke: bool) -> list[dict]:
+    rows = []
+    _assert_volume_bitwise(cl)
+
+    # dense reference on the same catalog family at the paper's r=1000
+    cat1k = million_file_catalog(1000)
+    eff = float(np.average(cat1k.chunk_mb, weights=cat1k.lam))
+    mom = cl.moments(eff)
+    prob_dense = JLCMProblem(
+        lam=jnp.asarray(cat1k.lam, jnp.float32),
+        k=jnp.asarray(cat1k.k, jnp.float32),
+        moments=mom, cost=cl.cost, theta=2.0,
+    )
+    solve(prob_dense, **SOLVE_KW)  # warmup
+
+    def dense():
+        return jax.block_until_ready(solve(prob_dense, **SOLVE_KW))
+
+    def plan_catalog(cat, moments):
+        # the timed hierarchical region: aggregation (four vectorized
+        # O(r) passes) + the cluster-granularity solve
+        h = cluster_catalog(cat)
+        plan, sol = solve_hierarchical(h, moments, cl.cost, 2.0, **SOLVE_KW)
+        jax.block_until_ready(sol)
+        return plan, sol
+
+    # clustered-vs-dense parity at r=1000: disaggregate the clustered
+    # plan and score it on the DENSE problem it never directly solved
+    plan1k, _ = plan_catalog(cat1k, mom)
+    sol_dense = solve(prob_dense, **SOLVE_KW)
+    ev = evaluate_pi(prob_dense, materialize(plan1k))
+    obj_dense = float(sol_dense.objective)
+    obj_hier = float(ev.objective)
+    gap_pct = 100.0 * (obj_hier - obj_dense) / abs(obj_dense)
+    assert abs(gap_pct) < 5.0, (
+        f"clustered objective {obj_hier:.2f} is {gap_pct:.2f}% off the "
+        f"dense r=1000 objective {obj_dense:.2f} (budget: 5%)"
+    )
+    fw_gap = duality_gap(prob_dense, materialize(plan1k))
+
+    sizes = (10_000,) if smoke else (10_000, 100_000, 1_000_000)
+    catalogs = {r: million_file_catalog(r) for r in sizes}
+    moments = {
+        r: cl.moments(float(np.average(c.chunk_mb, weights=c.lam)))
+        for r, c in catalogs.items()
+    }
+    plan_catalog(catalogs[sizes[0]], moments[sizes[0]])  # warmup
+
+    # best-of interleaved timing: the dense r=1000 reference and every
+    # hierarchical size share the same noisy-machine window
+    fns = [dense] + [
+        (lambda r=r: plan_catalog(catalogs[r], moments[r])) for r in sizes
+    ]
+    walls = time_interleaved(fns, repeats=3)
+    wall_dense, hier_walls = walls[0], walls[1:]
+
+    rows.append(dict(r=1000, mode="dense", clusters="",
+                     wall_ms=round(1e3 * wall_dense, 2),
+                     iterations=int(sol_dense.iterations),
+                     objective=round(obj_dense, 2),
+                     obj_gap_pct="", fw_gap=""))
+    for r, wall in zip(sizes, hier_walls):
+        plan, sol = plan_catalog(catalogs[r], moments[r])
+        rows.append(dict(
+            r=r, mode="hierarchical",
+            clusters=plan.hierarchy.n_clusters,
+            wall_ms=round(1e3 * wall, 2),
+            iterations=int(sol.iterations),
+            objective=round(float(sol.objective), 2),
+            obj_gap_pct=round(gap_pct, 3) if r == sizes[0] else "",
+            fw_gap=round(fw_gap, 1) if r == sizes[0] else "",
+        ))
+
+    # the headline acceptance: planning the LARGEST catalog through the
+    # hierarchical path costs no more wall than the dense r=1000 solve
+    # measured in the same interleaved window (a same-run ratio, so it
+    # holds on any machine; measured ~0.7x on a 1-core container)
+    wall_big = hier_walls[-1]
+    assert wall_big <= wall_dense, (
+        f"hierarchical plan of r={sizes[-1]} took {1e3 * wall_big:.1f}ms "
+        f"vs {1e3 * wall_dense:.1f}ms for the dense r=1000 solve"
+    )
+    # absolute budget only where the hardware can speak to it
+    # (fleet_scale.py convention: never on the starved CI container)
+    if not smoke and (os.cpu_count() or 1) >= 4:
+        assert wall_big < 0.25, (
+            f"10^6-file hierarchical plan took {wall_big:.3f}s (>250ms)"
+        )
+    return rows
+
+
+def _scenario_rows() -> list[dict]:
+    """Closed-loop integration at catalog scale (full runs only)."""
+    from repro.scenarios import hotspot_drift_hierarchical, run_scenario
+
+    spec, h = hotspot_drift_hierarchical(r=100_000,
+                                         requests_per_segment=800)
+    rows = []
+    for policy in ("static", "adaptive"):
+        out = run_scenario(spec, policy, seed=0, hierarchy=h)
+        rows.append(dict(
+            policy=policy,
+            r=len(spec.lam),
+            clusters=h.n_clusters,
+            mean=round(out.mean, 3),
+            p99=round(out.p99, 2),
+            replans=out.replans,
+            solve_iters="|".join(str(v) for v in out.solve_iters),
+            solve_wall_ms="|".join(
+                f"{1e3 * v:.1f}" for v in out.solve_walls),
+            resolved_clusters="|".join(
+                str(v) for v in out.resolved_counts),
+        ))
+    return rows
+
+
+def run(smoke: bool = False):
+    cl = testbed()
+    rows = _dense_rows(cl, smoke)
+    emit(rows, "jlcm_scaling")
+    batch_rows = _batch_rows(cl)
+    emit(batch_rows, "jlcm_batch_sweep")
+    hier_rows = _hier_rows(cl, smoke)
+    emit(hier_rows, "jlcm_hierarchical")
+    out = rows + batch_rows + hier_rows
+    if not smoke:
+        scen_rows = _scenario_rows()
+        emit(scen_rows, "jlcm_hier_scenario")
+        out += scen_rows
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="CI mode: hierarchical sweep stops at r=10^4, dense at "
+        "r=1000, no closed-loop scenario section",
+    )
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

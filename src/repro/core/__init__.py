@@ -1,6 +1,23 @@
 """Core contribution of the paper: probabilistic scheduling, the latency
 upper bound (Lemmas 2-3), and Algorithm JLCM (joint latency-cost opt)."""
 
+from .aggregate import (
+    Catalog,
+    FactoredPlan,
+    Hierarchy,
+    IncrementalInfo,
+    build_problem,
+    cluster_catalog,
+    duality_gap,
+    effective_chunk_mb,
+    evaluate_pi,
+    kmeans1d,
+    materialize,
+    resolve_incremental,
+    solve_hierarchical,
+    synthetic_catalog,
+    volume_catalog,
+)
 from .baselines import split_merge_bound
 from .geo import (
     GeoSpec,

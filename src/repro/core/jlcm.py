@@ -100,6 +100,17 @@ class JLCMProblem(NamedTuple):
     # the reported objective. None = every read hits the warm tier,
     # op-for-op identical to the pre-cache solver
     cache: CacheSpec | None = None
+    # hierarchical planning (core/aggregate.py): a row may stand for many
+    # files (a cluster or volume); cost_weight (r,) multiplies that row's
+    # storage-cost contribution by its file multiplicity. None = every row
+    # is one stored object, bit-for-bit the dense objective
+    cost_weight: Array | None = None
+    # partial re-solves (aggregate.resolve_incremental): (m,) node arrival
+    # rates contributed by rows frozen outside this problem; added to the
+    # queue utilizations (P-K moments + stability) so the re-optimized rows
+    # see the congestion the frozen traffic causes. None = no frozen
+    # traffic, bit-for-bit the standalone solve
+    background: Array | None = None
 
     @property
     def r(self) -> int:
@@ -123,45 +134,73 @@ class JLCMSolution(NamedTuple):
     # per-class reporting, present iff the problem carried an ObjectiveSpec:
     class_latency: Array | None = None  # (C,) per-class tight mean bounds
     class_tail: Array | None = None  # (C,) per-class P[T_c > d_c] bounds
+    # solver iterations actually run (scalar for `solve`, (B,) for
+    # `solve_batch`); what the warm-start win is measured by
+    iterations: Array | None = None
 
 
-def _true_cost(pi: Array, cost: Array, tol: float = SUPPORT_TOL) -> Array:
-    return jnp.sum((pi > tol) * cost[..., None, :], axis=(-2, -1))
-
-
-def _smoothed_cost(pi: Array, cost: Array, beta: float) -> Array:
-    """Eq. (20): sum_ij V_j log(beta pi + 1) / log(beta)."""
-    body = cost[..., None, :] * jnp.log(beta * pi + 1.0) / jnp.log(beta)
+def _true_cost(
+    pi: Array, cost: Array, tol: float = SUPPORT_TOL, weight: Array | None = None
+) -> Array:
+    if weight is None:
+        return jnp.sum((pi > tol) * cost[..., None, :], axis=(-2, -1))
+    body = weight[..., :, None] * (pi > tol) * cost[..., None, :]
     return jnp.sum(body, axis=(-2, -1))
 
 
-def _linearized_cost(pi: Array, pi_ref: Array, cost: Array, beta: float) -> Array:
+def _smoothed_cost(
+    pi: Array, cost: Array, beta: float, weight: Array | None = None
+) -> Array:
+    """Eq. (20): sum_ij V_j log(beta pi + 1) / log(beta)."""
+    body = cost[..., None, :] * jnp.log(beta * pi + 1.0) / jnp.log(beta)
+    if weight is not None:
+        body = weight[..., :, None] * body
+    return jnp.sum(body, axis=(-2, -1))
+
+
+def _linearized_cost(
+    pi: Array,
+    pi_ref: Array,
+    cost: Array,
+    beta: float,
+    weight: Array | None = None,
+) -> Array:
     """Eq. (17): value at ref + gradient of the log surrogate at ref."""
-    base = jnp.sum((pi_ref > 0.0) * cost[..., None, :], axis=(-2, -1))
-    slope = cost[..., None, :] / ((pi_ref + 1.0 / beta) * jnp.log(beta))
+    if weight is None:
+        base = jnp.sum((pi_ref > 0.0) * cost[..., None, :], axis=(-2, -1))
+        slope = cost[..., None, :] / ((pi_ref + 1.0 / beta) * jnp.log(beta))
+        return base + jnp.sum(slope * (pi - pi_ref), axis=(-2, -1))
+    w = weight[..., :, None]
+    base = jnp.sum(w * (pi_ref > 0.0) * cost[..., None, :], axis=(-2, -1))
+    slope = w * cost[..., None, :] / ((pi_ref + 1.0 / beta) * jnp.log(beta))
     return base + jnp.sum(slope * (pi - pi_ref), axis=(-2, -1))
 
 
 def _latency_term(pi: Array, z: Array, prob: JLCMProblem) -> Array:
     lat = composed_latency(
-        pi, z, prob.lam, prob.moments, prob.objective, prob.geo, prob.cache
+        pi, z, prob.lam, prob.moments, prob.objective, prob.geo, prob.cache,
+        background=prob.background,
     )
     # stability is a property of the queues the warm tier actually serves:
     # node arrival rates are evaluated at the cache-thinned miss traffic
+    # (plus any frozen-row background load the subproblem doesn't control)
     rates = node_arrival_rates(pi, apply_cache_thinning(prob.lam, prob.cache))
+    if prob.background is not None:
+        rates = rates + prob.background
     return lat + stability_penalty(rates, prob.moments)
 
 
 def _refresh_z(pi: Array, prob: JLCMProblem) -> Array:
     return refresh_shared_z(
-        pi, prob.lam, prob.moments, prob.objective, prob.geo, prob.cache
+        pi, prob.lam, prob.moments, prob.objective, prob.geo, prob.cache,
+        background=prob.background,
     )
 
 
 def smoothed_objective(pi: Array, z: Array, prob: JLCMProblem, beta: float) -> Array:
     """Descent-monitored objective z + sum_j F(Lambda_j) + theta*C_hat (Thm 2)."""
     return _latency_term(pi, z, prob) + prob.theta * _smoothed_cost(
-        pi, prob.cost, beta
+        pi, prob.cost, beta, weight=prob.cost_weight
     )
 
 
@@ -170,7 +209,8 @@ def _merged_grad(pi: Array, z: Array, prob: JLCMProblem, beta) -> Array:
 
     def sub_obj(p):
         return _latency_term(p, z, prob) + prob.theta * _linearized_cost(
-            p, jax.lax.stop_gradient(p), prob.cost, beta
+            p, jax.lax.stop_gradient(p), prob.cost, beta,
+            weight=prob.cost_weight,
         )
 
     return jax.grad(sub_obj)(pi)
@@ -205,7 +245,8 @@ def _device_merged_loop(
     Per iteration: linearize the cost surrogate at the current pi, take one
     projected-gradient step, refresh z, and run a two-level backtracking
     line search (lr, lr/4, lr/16 via nested ``lax.cond``) with adaptive lr
-    re-growth on acceptance / halving on persistent failure. Stops on the
+    re-growth on acceptance / a 16x shrink on persistent failure (the
+    round probed down to lr/16 already). Stops on the
     paper's relative tolerance or when lr collapses, with `max_iters` as
     the trip-count bound of the ``lax.while_loop``.
 
@@ -259,7 +300,11 @@ def _device_merged_loop(
         pi_n = jnp.where(accepted, cand[0], s.pi)
         z_n = jnp.where(accepted, cand[1], s.z)
         obj = jnp.where(accepted, cand[2], s.prev)  # stalled step keeps prev
-        lr_n = jnp.where(accepted, jnp.minimum(s.lr * 1.1, lr_cap), s.lr * 0.5)
+        # a rejected round already probed {lr, lr/4, lr/16}, so shrinking
+        # 16x continues the geometric /4 probe grid with nothing skipped —
+        # and a warm start at a converged point collapses in ~4 rounds
+        # instead of ~40 halvings
+        lr_n = jnp.where(accepted, jnp.minimum(s.lr * 1.1, lr_cap), s.lr / 16.0)
         collapsed = jnp.logical_and(~accepted, lr_n <= lr_cap * 1e-6)
         # relative stopping rule (paper: tolerance on normalized objective);
         # a rejected step only stops once lr has collapsed — otherwise it
@@ -294,14 +339,17 @@ def _finalize(pi: Array, z: Array, prob: JLCMProblem, trace: Array) -> JLCMSolut
         eq_b, varq_b = geo_eq_varq(pi, lam_eff, prob.geo)
     else:
         rates = node_arrival_rates(pi, lam_eff)
+        if prob.background is not None:
+            rates = rates + prob.background
         eq, varq = pk_sojourn_moments(rates, prob.moments)
         eq_b, varq_b = eq[..., None, :], varq[..., None, :]
     t = file_latency_bounds(pi, eq_b, varq_b)
     tight = compose_file_bounds(t, pi, eq_b, varq_b, prob.lam, spec, prob.cache)
     latency = composed_latency(
-        pi, z, prob.lam, prob.moments, spec, prob.geo, prob.cache
+        pi, z, prob.lam, prob.moments, spec, prob.geo, prob.cache,
+        background=prob.background,
     )
-    cost = _true_cost(pi, prob.cost)
+    cost = _true_cost(pi, prob.cost, weight=prob.cost_weight)
     if prob.cache is not None:
         cost = cost + prob.cache.hot_cost
     class_latency = class_tail = None
@@ -377,7 +425,7 @@ def _inner_pgd(
 
     def sub_obj(p):
         return _latency_term(p, z, prob) + prob.theta * _linearized_cost(
-            p, pi_ref, prob.cost, beta
+            p, pi_ref, prob.cost, beta, weight=prob.cost_weight
         )
 
     grad = jax.grad(sub_obj)
@@ -443,7 +491,7 @@ def _solve_host_loop(
                     pi, z, prob, mask, jnp.asarray(lr0 / 16, jnp.float32), beta=beta
                 )
             if float(cand[2]) > float(prev) + BACKTRACK_SLACK:  # persistent
-                lr0 *= 0.5
+                lr0 /= 16.0  # mirrors the device loop's probe-grid shrink
                 obj = prev
                 if lr0 > lr_cap * 1e-6:
                     trace.append(float(obj))
@@ -467,7 +515,9 @@ def _solve_host_loop(
             break
         prev = obj
 
-    return _finalize(pi, z, prob, jnp.asarray(trace))
+    return _finalize(pi, z, prob, jnp.asarray(trace))._replace(
+        iterations=jnp.asarray(len(trace) - 1)
+    )
 
 
 def _resolve_mask(prob: JLCMProblem) -> Array:
@@ -495,8 +545,22 @@ def solve(
     control flow (use it to inspect iterates; ``verbose`` only prints
     there); ``mode="nested"`` is the paper's two-timescale structure.
     """
+    if prob.geo is not None and prob.background is not None:
+        raise ValueError(
+            "background node load is not supported on geo problems: the "
+            "per-site sojourn moments have no single node-rate axis to "
+            "add it to (solve the geo problem densely instead)"
+        )
     mask = _resolve_mask(prob)
-    pi = feasible_uniform(mask, prob.k) if pi0 is None else jnp.asarray(pi0)
+    if pi0 is None:
+        pi = feasible_uniform(mask, prob.k)
+    else:
+        pi = jnp.asarray(pi0)
+        if pi.shape != mask.shape:
+            raise ValueError(
+                f"pi0 shape {pi.shape} does not match the problem's "
+                f"(r, m) = {tuple(mask.shape)}"
+            )
     pi = project_capped_simplex(pi, prob.k, mask)
 
     if mode == "merged":
@@ -510,7 +574,10 @@ def solve(
             max_iters,
         )
         # single host sync at the end: trim the NaN-padded trace
-        return sol._replace(objective_trace=sol.objective_trace[: int(iters) + 1])
+        return sol._replace(
+            objective_trace=sol.objective_trace[: int(iters) + 1],
+            iterations=iters,
+        )
     if mode in ("debug", "nested"):
         return _solve_host_loop(
             prob,
@@ -597,6 +664,21 @@ def stack_problems(probs: Sequence[JLCMProblem]) -> JLCMProblem:
                     "hit vector length; values may vary, e.g. a capacity "
                     "sweep)"
                 )
+    for field in ("cost_weight", "background"):
+        vals = [getattr(p, field) for p in probs]
+        if any(v is None for v in vals) and not all(v is None for v in vals):
+            raise ValueError(
+                f"cannot stack problems mixing {field}=None with arrays; "
+                f"set it on every problem (values may vary) or none"
+            )
+        if vals[0] is not None:
+            shape0 = jnp.shape(vals[0])
+            for v in vals[1:]:
+                if jnp.shape(v) != shape0:
+                    raise ValueError(
+                        f"all problems must share the {field} shape: "
+                        f"got {jnp.shape(v)} vs {shape0}"
+                    )
     normalized = [
         p._replace(
             theta=jnp.asarray(p.theta, jnp.float32),
@@ -635,8 +717,16 @@ def solve_batch(
     mask = jnp.asarray(stacked.mask, bool)
     if pi0 is None:
         pi0 = feasible_uniform(mask, stacked.k)
+    else:
+        pi0 = jnp.asarray(pi0)
+        if pi0.shape not in (mask.shape, mask.shape[1:]):
+            raise ValueError(
+                f"pi0 shape {pi0.shape} matches neither the stacked batch "
+                f"{tuple(mask.shape)} nor a shared per-instance start "
+                f"{tuple(mask.shape[1:])}"
+            )
     pi0 = jnp.broadcast_to(jnp.asarray(pi0), mask.shape)
-    sol, _iters = _solve_merged_device_batch(
+    sol, iters = _solve_merged_device_batch(
         pi0,
         stacked._replace(mask=None),
         mask,
@@ -645,7 +735,7 @@ def solve_batch(
         jnp.asarray(eps, jnp.float32),
         max_iters,
     )
-    return sol
+    return sol._replace(iterations=iters)
 
 
 # ---------------------------------------------------------------------------
@@ -680,7 +770,10 @@ def max_ec_solution(prob: JLCMProblem, **kw) -> JLCMSolution:
     never prunes placements (cost is whatever full placement costs)."""
     full = prob._replace(theta=0.0, mask=jnp.ones((prob.r, prob.m), bool))
     sol = solve(full, **kw)
-    cost = jnp.sum(jnp.broadcast_to(prob.cost, (prob.r, prob.m)))
+    full_cost = jnp.broadcast_to(prob.cost, (prob.r, prob.m))
+    if prob.cost_weight is not None:
+        full_cost = prob.cost_weight[:, None] * full_cost
+    cost = jnp.sum(full_cost)
     return sol._replace(
         cost=cost,
         objective=sol.latency + prob.theta * cost,

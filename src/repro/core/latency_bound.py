@@ -173,6 +173,7 @@ def shared_z_latency(
     moments: ServiceMoments,
     *,
     weights: Array | None = None,
+    extra_rates: Array | None = None,
 ) -> Array:
     """JLCM relaxation, Eq. (9) latency part, with one z for all files:
 
@@ -188,11 +189,20 @@ def shared_z_latency(
     while the P-K sojourn moments keep using the TRUE arrival rates — the
     queues see every request regardless of how the objective weighs it.
     ``weights=None`` is exactly the paper's uniform objective.
+
+    ``extra_rates`` ((..., m)) adds background traffic (rows frozen outside
+    this problem, see ``JLCMProblem.background``) to the queue rates the
+    P-K moments are computed at, without joining the fold: the objective
+    averages this problem's rows only, but the queues serve everything.
+    ``extra_rates=None`` adds zero ops.
     """
     lam = jnp.asarray(lam)
     z = jnp.asarray(z)
     node_rates = node_arrival_rates(pi, lam)
-    eq, varq = pk_sojourn_moments(node_rates, moments)
+    queue_rates = (
+        node_rates if extra_rates is None else node_rates + extra_rates
+    )
+    eq, varq = pk_sojourn_moments(queue_rates, moments)
     if weights is None:
         wlam, fold = lam, node_rates
     else:
@@ -210,6 +220,7 @@ def optimal_shared_z(
     moments: ServiceMoments,
     *,
     weights: Array | None = None,
+    extra_rates: Array | None = None,
     iters: int = 80,
 ) -> Array:
     """Minimize Eq. (9) over the single auxiliary z (convex; bisection).
@@ -217,10 +228,15 @@ def optimal_shared_z(
     Batch-safe: pi (..., r, m), lam (..., r) -> z of shape (...,).
     ``weights`` matches :func:`shared_z_latency`: the minimized objective
     is the weighted fold, the queue moments stay on true rates.
+    ``extra_rates`` matches too: background load shifts the queue moments
+    only.
     """
     lam = jnp.asarray(lam)
     node_rates = node_arrival_rates(pi, lam)
-    eq, varq = pk_sojourn_moments(node_rates, moments)
+    queue_rates = (
+        node_rates if extra_rates is None else node_rates + extra_rates
+    )
+    eq, varq = pk_sojourn_moments(queue_rates, moments)
     if weights is None:
         wlam, fold = lam, node_rates
     else:

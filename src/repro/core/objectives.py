@@ -311,6 +311,8 @@ def composed_latency(
     spec: ObjectiveSpec | None,
     geo: GeoSpec | None = None,
     cache: CacheSpec | None = None,
+    *,
+    background: Array | None = None,
 ) -> Array:
     """The solver-facing latency objective at shared auxiliary z.
 
@@ -329,6 +331,12 @@ def composed_latency(
     thinned miss arrivals ``lam (1 - h)`` and blends hits back in at
     ``hit_latency`` (the Eq. 9 fold is over *requests*; only misses pay
     the warm-tier bound). ``cache=None`` adds zero ops.
+
+    ``background`` ((m,) node arrival rates) adds frozen-row traffic to
+    every queue-utilization computation (the P-K sojourn moments) without
+    entering the fold weights — an incremental re-solve optimizes its own
+    rows' latency under the congestion all rows cause. Unsupported with
+    ``geo`` (guarded in ``solve``). ``background=None`` adds zero ops.
     """
     wf = None if spec is None else spec.file_weights()
     lam_eff = apply_cache_thinning(lam, cache)
@@ -344,13 +352,17 @@ def composed_latency(
             lam_total=None if cache is None else lam,
         )
     if spec is None and cache is None:
-        return shared_z_latency(pi, z, lam, moments)
-    mean_term = shared_z_latency(pi, z, lam_eff, moments, weights=wf)
+        return shared_z_latency(pi, z, lam, moments, extra_rates=background)
+    mean_term = shared_z_latency(
+        pi, z, lam_eff, moments, weights=wf, extra_rates=background
+    )
     if cache is not None:
         mean_term = _cache_blend(lam, wf, cache, mean_term)
     if spec is None or spec.deadline is None:
         return mean_term
     rates = node_arrival_rates(pi, lam_eff)
+    if background is not None:
+        rates = rates + background
     eq, varq = pk_sojourn_moments(rates, moments)
     return mean_term + tail_penalty(
         pi, eq[..., None, :], varq[..., None, :], lam_eff, spec,
@@ -365,6 +377,8 @@ def refresh_shared_z(
     spec: ObjectiveSpec | None,
     geo: GeoSpec | None = None,
     cache: CacheSpec | None = None,
+    *,
+    background: Array | None = None,
 ) -> Array:
     """argmin_z of :func:`composed_latency` — the solver's z-refresh step.
 
@@ -372,15 +386,19 @@ def refresh_shared_z(
     (weighted) mean term alone is exact, not an approximation. With a
     cache the mean term is a positive multiple of the warm fold at the
     thinned rates plus a z-free hit term, so refreshing at ``lam_eff``
-    is exact too.
+    is exact too. ``background`` shifts the queue utilizations exactly as
+    in :func:`composed_latency`, so the refreshed z matches the objective
+    being minimized.
     """
     wf = None if spec is None else spec.file_weights()
     lam_eff = apply_cache_thinning(lam, cache)
     if geo is not None:
         return geo_optimal_shared_z(pi, lam_eff, geo, weights=wf)
     if spec is None:
-        return optimal_shared_z(pi, lam_eff, moments)
-    return optimal_shared_z(pi, lam_eff, moments, weights=wf)
+        return optimal_shared_z(pi, lam_eff, moments, extra_rates=background)
+    return optimal_shared_z(
+        pi, lam_eff, moments, weights=wf, extra_rates=background
+    )
 
 
 def compose_file_bounds(

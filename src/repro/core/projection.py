@@ -12,6 +12,8 @@ Algorithm JLCM).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax import Array
@@ -31,7 +33,25 @@ def project_capped_simplex(
     a scalar or (..., r) array; requires k <= #allowed per row. Batch-safe:
     all reductions are over the last axis only, so stacked problem batches
     (and `vmap`) work unchanged — `solve_batch` relies on this.
+
+    Eager callers (``solve``'s pi0 projection, the replanner, baselines) go
+    through a module-level ``jax.jit`` wrapper: an un-jitted call would
+    dispatch the bisection ``fori_loop`` as a fresh one-off XLA program on
+    every invocation (the eager control-flow cache keys on jaxpr identity),
+    recompiling ~150 ms per call — which used to dominate every ``solve``.
+    Traced callers (inside the merged loop) inline it as before.
     """
+    return _project_impl(v, k, mask, iters=iters)
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def _project_impl(
+    v: Array,
+    k: Array,
+    mask: Array | None,
+    *,
+    iters: int,
+) -> Array:
     v = jnp.asarray(v)
     k = jnp.broadcast_to(jnp.asarray(k, v.dtype), v.shape[:-1])
     if mask is None:

@@ -3,6 +3,7 @@ with the JLCM solver (failures, flash crowds, drift — see
 `docs/scenarios.md`)."""
 
 from . import library as _library  # registers the built-in scenarios
+from .library import hotspot_drift_hierarchical
 from .engine import (
     POLICIES,
     ScenarioOutcome,

@@ -80,12 +80,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import JLCMProblem, proportional_lb_pi, solve
+from repro.core import (
+    Hierarchy,
+    JLCMProblem,
+    materialize,
+    proportional_lb_pi,
+    solve,
+    solve_hierarchical,
+)
 from repro.serving import (
     AdaptiveReplanner,
     EwmaMomentEstimator,
     EwmaRateEstimator,
     GeoAdaptiveReplanner,
+    HierarchicalReplanner,
 )
 from repro.storage import (
     Cluster,
@@ -129,6 +137,14 @@ class ScenarioOutcome:
     # + the provisioned (constant) hot-tier cost
     hit_frac: float = 0.0
     storage_cost: float = float("nan")
+    # closed-loop solver telemetry: per-replan iteration count of the
+    # deployed candidate and wall seconds of the (batched) solve; empty
+    # for open-loop policies
+    solve_iters: tuple = ()
+    solve_walls: tuple = ()
+    # hierarchical loop only: clusters re-solved per replan (full replans
+    # report the whole cluster count, incremental ones just the movers)
+    resolved_counts: tuple = ()
 
     @property
     def p99_windowed(self) -> float:
@@ -155,7 +171,15 @@ class ScenarioOutcome:
             replans=self.replans,
             repair_frac=round(self.repair_frac, 4),
             seg_means="|".join(f"{v:.2f}" for v in self.seg_mean),
+            solve_iters="|".join(str(int(v)) for v in self.solve_iters),
+            solve_wall_ms="|".join(
+                f"{1e3 * v:.1f}" for v in self.solve_walls
+            ),
         )
+        if self.resolved_counts:
+            out["resolved_clusters"] = "|".join(
+                str(int(v)) for v in self.resolved_counts
+            )
         if self.class_mean is not None:
             out["class_means"] = "|".join(f"{v:.2f}" for v in self.class_mean)
             out["class_p99s"] = "|".join(f"{v:.2f}" for v in self.class_p99)
@@ -269,8 +293,19 @@ def run_scenario(
     placement0: np.ndarray | None = None,
     repair_aware: bool = True,
     cache_aware: bool = True,
+    hierarchy: Hierarchy | None = None,
 ) -> ScenarioOutcome:
     """Simulate ``spec`` under ``policy``; see module docstring.
+
+    ``hierarchy`` (``core.aggregate.Hierarchy`` built from the spec's
+    catalog) switches every solving policy onto the hierarchical path:
+    the initial plan is a cluster-granularity ``solve_hierarchical``
+    disaggregated by gather, and the adaptive policy runs
+    ``serving.HierarchicalReplanner`` (full re-solves on moment/mask
+    drift, ``resolve_incremental`` otherwise) instead of the dense
+    per-file loop — the only way a 10^5-file catalog re-plans inside a
+    segment budget. Composes only with plain scenarios (no geo fabric,
+    cache tier, repair traffic, or tenant mix).
 
     ``pi0`` lets callers reuse an already-solved initial plan (the suite
     shares one across the static and adaptive policies); ``placement0``
@@ -289,6 +324,17 @@ def run_scenario(
     """
     if policy not in POLICIES:
         raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
+    if hierarchy is not None and (
+        spec.is_geo
+        or spec.has_cache
+        or spec.repair_rate > 0
+        or spec.objective() is not None
+    ):
+        raise ValueError(
+            f"{spec.name}: hierarchical planning composes only with plain "
+            "scenarios (no geo fabric, cache tier, repair traffic, or "
+            "tenant mix)"
+        )
     if spec.is_geo:
         return run_geo_scenario(
             spec,
@@ -324,7 +370,20 @@ def run_scenario(
     )
 
     with_repair = spec.repair_rate > 0
-    if (pi0 is None and policy != "oblivious") or (
+    plan0 = None
+    if hierarchy is not None and pi0 is None and policy != "oblivious":
+        # cluster-granularity initial plan, disaggregated by gather — the
+        # dense per-file solve this replaces is exactly what a 10^5-file
+        # catalog cannot afford
+        plan0, _ = solve_hierarchical(
+            hierarchy,
+            cluster.moments(spec.chunk_mb),
+            cluster.cost,
+            spec.theta,
+            max_iters=300,
+        )
+        pi_init = np.asarray(materialize(plan0))
+    elif (pi0 is None and policy != "oblivious") or (
         with_repair and placement0 is None
     ):
         pi_init, _, sol0 = initial_plan(spec, cluster, cache_aware=cache_aware)
@@ -366,6 +425,7 @@ def run_scenario(
         return np.concatenate([np.asarray(client_pi), rep], axis=0)
 
     replans = 0
+    solve_iters = solve_walls = resolved_counts = ()
     hit = None
     pi_deployed = None  # (S, r, m) what actually dispatched, for cost
     if policy in ("static", "oblivious"):
@@ -419,14 +479,28 @@ def run_scenario(
             if has_cache and cache_aware
             else np.asarray(spec.lam)
         )
-        replanner = AdaptiveReplanner(
-            k=np.asarray(spec.k),
-            cost=np.asarray(cluster.cost),
-            theta=spec.theta,
-            estimator=moment_est,
-            objective=spec.objective(),
-            cache=cache_model if cache_aware else None,
-        )
+        if hierarchy is not None:
+            replanner = HierarchicalReplanner(
+                hierarchy=hierarchy,
+                cost=np.asarray(cluster.cost),
+                theta=spec.theta,
+                estimator=moment_est,
+            )
+            if plan0 is not None:
+                # seed the incumbent factored plan so the first boundary
+                # can go incremental instead of re-solving from scratch
+                replanner.plan = plan0
+                replanner._solved_mom = mom0
+                replanner._solved_avail = avail_tr[0].copy()
+        else:
+            replanner = AdaptiveReplanner(
+                k=np.asarray(spec.k),
+                cost=np.asarray(cluster.cost),
+                theta=spec.theta,
+                estimator=moment_est,
+                objective=spec.objective(),
+                cache=cache_model if cache_aware else None,
+            )
         if has_cache and cache_aware:
             # seed the inversion state with what is actually deployed
             replanner.last_ttl = ttl0.copy()
@@ -457,29 +531,32 @@ def run_scenario(
                 # exactly when head-room matters most
                 cadence = False
             if s > 0 and (cadence or cache_flip):
-                flow = (
-                    build_repair_flow(
-                        placement0,
-                        np.asarray(spec.k),
-                        avail_tr[s],
-                        spec.repair_rate,
+                if hierarchy is not None:
+                    pi = replanner.replan(rate_est.rates, avail_tr[s])
+                else:
+                    flow = (
+                        build_repair_flow(
+                            placement0,
+                            np.asarray(spec.k),
+                            avail_tr[s],
+                            spec.repair_rate,
+                        )
+                        if with_repair and repair_aware
+                        else None
                     )
-                    if with_repair and repair_aware
-                    else None
-                )
-                pi = replanner.replan(
-                    rate_est.rates,
-                    avail_tr[s],
-                    pi0=pi,
-                    carry=carry,
-                    key=rollout_keys[s],
-                    repair=flow,
-                    cache_up=bool(cache_up[s]),
-                )
-                repair_pi = replanner.repair_pi
-                repair_avail = avail_tr[s].copy()
-                if has_cache and cache_aware:
-                    ttl_cur = replanner.last_ttl
+                    pi = replanner.replan(
+                        rate_est.rates,
+                        avail_tr[s],
+                        pi0=pi,
+                        carry=carry,
+                        key=rollout_keys[s],
+                        repair=flow,
+                        cache_up=bool(cache_up[s]),
+                    )
+                    repair_pi = replanner.repair_pi
+                    repair_avail = avail_tr[s].copy()
+                    if has_cache and cache_aware:
+                        ttl_cur = replanner.last_ttl
             # the optimized reconstruction dispatch is only valid for the
             # health mask it was solved under; if availability moved
             # between replans (replan_every > 1, staggered failures) fall
@@ -533,6 +610,9 @@ def run_scenario(
             hit = np.stack(hits)
         pi_deployed = np.stack(pis)
         replans = replanner.replans
+        solve_iters = tuple(replanner.solve_iters)
+        solve_walls = tuple(replanner.solve_walls)
+        resolved_counts = tuple(getattr(replanner, "resolved_counts", ()))
 
     # All reported statistics cover CLIENT requests only; repair rows
     # (file_id >= r) are background load.
@@ -576,6 +656,9 @@ def run_scenario(
         class_p99=class_p99,
         hit_frac=hit_frac,
         storage_cost=storage_cost,
+        solve_iters=solve_iters,
+        solve_walls=solve_walls,
+        resolved_counts=resolved_counts,
     )
 
 
@@ -630,6 +713,7 @@ def run_geo_scenario(
         pi, _, _ = initial_plan(spec, fabric.cluster)  # geo-oblivious
 
     replans = 0
+    solve_iters = solve_walls = ()
     if policy in ("static", "oblivious"):
         res = simulate_geo_segments(
             key,
@@ -693,6 +777,8 @@ def run_geo_scenario(
         degraded = np.stack(degs)
         site = np.stack(sites)
         replans = replanner.replans
+        solve_iters = tuple(replanner.solve_iters)
+        solve_walls = tuple(replanner.solve_walls)
 
     site_mean = np.asarray(
         [
@@ -711,6 +797,8 @@ def run_geo_scenario(
         degraded_frac=float(degraded.mean()),
         replans=replans,
         site_mean=site_mean,
+        solve_iters=solve_iters,
+        solve_walls=solve_walls,
     )
 
 
@@ -722,6 +810,7 @@ def run_all_policies(
     requests_per_segment: int | None = None,
     repair_aware: bool = True,
     include_cacheblind: bool = False,
+    hierarchy: Hierarchy | None = None,
 ) -> list[ScenarioOutcome]:
     """All three policies on identical arrival/service randomness, sharing
     one initial JLCM solve between static and adaptive — and one physical
@@ -730,7 +819,24 @@ def run_all_policies(
     ``include_cacheblind=True`` (cache scenarios only) appends the
     cache-oblivious static baseline — planned for raw design rates with
     the hot tier invisible to the control plane — as a fourth outcome
-    (policy ``static-cacheblind``)."""
+    (policy ``static-cacheblind``).
+
+    ``hierarchy`` routes every policy through the hierarchical path (see
+    :func:`run_scenario`); the cluster-granularity initial solve is cheap
+    enough (O(100) rows) that each policy re-solves it rather than
+    sharing one dense plan."""
+    if hierarchy is not None:
+        return [
+            run_scenario(
+                spec,
+                policy,
+                seed=seed,
+                cluster=cluster,
+                requests_per_segment=requests_per_segment,
+                hierarchy=hierarchy,
+            )
+            for policy in POLICIES
+        ]
     if spec.is_geo:
         fabric = geo_testbed(cluster) if cluster is not None else geo_testbed()
         pi0, _, _ = initial_plan(spec, fabric.cluster)

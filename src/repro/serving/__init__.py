@@ -6,6 +6,7 @@ from .router import (
     EwmaMomentEstimator,
     EwmaRateEstimator,
     GeoAdaptiveReplanner,
+    HierarchicalReplanner,
     ReplicaPool,
     Router,
     simulate_serving,

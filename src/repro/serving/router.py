@@ -29,6 +29,7 @@ site, node) service family and the (C, r) traffic matrix, and re-solves
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax
@@ -36,14 +37,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
+    FactoredPlan,
+    Hierarchy,
     JLCMProblem,
     ObjectiveSpec,
     ServiceMoments,
+    build_problem,
     empirical_objective,
     feasible_uniform,
     fit_shifted_exponential,
     madow_sample,
+    materialize,
     project_capped_simplex,
+    resolve_incremental,
     solve,
     solve_batch,
 )
@@ -430,6 +436,11 @@ class AdaptiveReplanner:
     # by the caller at deploy time
     last_ttl: np.ndarray | None = None
     last_raw: np.ndarray | None = None
+    # per-replan solver telemetry: iteration count of the deployed
+    # candidate and wall time of the batched candidate solve (appended by
+    # every replan; the scenario engine surfaces them as CSV columns)
+    solve_iters: list = dataclasses.field(default_factory=list)
+    solve_walls: list = dataclasses.field(default_factory=list)
     # rate head-room multiplier for hot-tier-outage replans
     # (``cache_up=False``). The raw-rate estimate entering an outage plan
     # is an EWMA that lags the storm by construction (pre-outage miss
@@ -584,7 +595,10 @@ class AdaptiveReplanner:
                         start = np.asarray(pi0)
                     probs.append(prob)
                     starts.append(jnp.asarray(start, jnp.float32))
+        t0 = time.perf_counter()
         sols = solve_batch(probs, max_iters=self.max_iters, pi0=jnp.stack(starts))
+        jax.block_until_ready(sols.pi)
+        self.solve_walls.append(time.perf_counter() - t0)
         self.replans += 1
 
         cost_term = self.theta * np.asarray(sols.cost)
@@ -639,9 +653,155 @@ class AdaptiveReplanner:
         else:
             scores = (np.asarray(sols.latency_tight) + cost_term).tolist()
         best = int(np.argmin(scores))
+        if sols.iterations is not None:
+            it = np.asarray(sols.iterations)
+            self.solve_iters.append(int(it[best] if it.ndim else it))
         pi_best = np.asarray(sols.pi[best])
         self.repair_pi = pi_best[r:] if with_repair else None
         return pi_best[:r]
+
+
+@dataclasses.dataclass
+class HierarchicalReplanner:
+    """Cluster-granularity closed loop for very large catalogs.
+
+    The million-file variant of :class:`AdaptiveReplanner`: the catalog
+    is aggregated once into O(100) clusters (``core.aggregate``), every
+    replan solves at cluster granularity, and the per-file dispatch
+    matrix is the exact gather ``cluster_pi[cluster_of_file]`` — O(C m)
+    solver work and plan state no matter how many files the catalog
+    holds. Two replan tiers keep the steady state cheap:
+
+    * **incremental** (the default): ``resolve_incremental`` re-solves
+      only the clusters whose estimated rates moved by more than
+      ``rate_threshold`` (relative), freezing the rest as background
+      load at their *new* rates; a quiet segment costs near-zero solver
+      work.
+    * **full**: when the estimated service moments drift beyond
+      ``moment_threshold`` (relative, any node — a hotspot is a moment
+      shift no rate diff can see) or the availability mask changes, the
+      whole cluster problem is re-solved, warm-started from the
+      incumbent cluster plan when the mask allows it.
+
+    Telemetry mirrors :class:`AdaptiveReplanner` (``solve_iters``,
+    ``solve_walls``) plus the per-replan count of re-solved clusters
+    (``resolved_counts``) so scenario CSVs can show the incremental
+    path's work saving.
+    """
+
+    hierarchy: Hierarchy
+    cost: np.ndarray  # (m,) per-node cost V_j
+    theta: float
+    estimator: EwmaMomentEstimator
+    max_iters: int = 300
+    eps: float = 1e-4
+    rate_threshold: float = 0.2
+    moment_threshold: float = 0.05
+    plan: FactoredPlan | None = None
+    replans: int = 0
+    full_solves: int = 0
+    solve_iters: list = dataclasses.field(default_factory=list)
+    solve_walls: list = dataclasses.field(default_factory=list)
+    resolved_counts: list = dataclasses.field(default_factory=list)
+    # inputs of the last *full* solve (drift is measured against these,
+    # not the previous segment: slow creep must accumulate, not evade
+    # the threshold one small step at a time)
+    _solved_mom: ServiceMoments | None = None
+    _solved_avail: np.ndarray | None = None
+
+    def cluster_rates(self, file_rates: np.ndarray) -> np.ndarray:
+        """Exact (C,) cluster rates from per-file estimates (one bincount)."""
+        cid = self.hierarchy.cluster_of_file()
+        return np.bincount(
+            cid,
+            weights=np.asarray(file_rates, np.float64),
+            minlength=self.hierarchy.n_clusters,
+        )
+
+    def _moments_moved(self, mom: ServiceMoments) -> bool:
+        if self._solved_mom is None:
+            return True
+        for new, old in zip(mom, self._solved_mom):
+            new = np.asarray(new, np.float64)
+            old = np.asarray(old, np.float64)
+            tol = self.moment_threshold * np.maximum(np.abs(old), 1e-12)
+            if np.any(np.abs(new - old) > tol):
+                return True
+        return False
+
+    def replan(self, file_rates: np.ndarray, avail: np.ndarray) -> np.ndarray:
+        """New (r, m) dispatch matrix from estimated per-file rates + mask.
+
+        All inputs are measured/estimated, as in the plain loop. Returns
+        the materialized per-file matrix for the data plane; the factored
+        plan stays in :attr:`plan` for the next incremental step.
+        """
+        avail = np.asarray(avail, bool)
+        mom = self.estimator.moments()
+        lam_c = self.cluster_rates(file_rates)
+        cost = jnp.asarray(self.cost, jnp.float32)
+        t0 = time.perf_counter()
+        full = (
+            self.plan is None
+            or self._moments_moved(mom)
+            or self._solved_avail is None
+            or not np.array_equal(avail, self._solved_avail)
+        )
+        if full:
+            h = self.hierarchy._replace(lam=lam_c)
+            mask = jnp.asarray(
+                np.broadcast_to(avail, (h.n_clusters, avail.shape[-1]))
+            )
+            prob = build_problem(h, mom, cost, self.theta)._replace(
+                mask=mask
+            )
+            # warm AND cold candidates, arbitrated by solved objective
+            # (mirrors AdaptiveReplanner's candidate grid): a warm start
+            # from the incumbent can stall the relative stopping rule
+            # right at its starting point when the moments moved under
+            # it, while on mild drift it converges in a handful of
+            # iterations — solving both costs one extra batch lane and
+            # keeps whichever is actually better. The incumbent is only
+            # a valid candidate while every node it uses is up.
+            starts = [feasible_uniform(mask, prob.k)]
+            if self.plan is not None and bool(avail.all()):
+                starts.append(
+                    jnp.asarray(self.plan.cluster_pi, jnp.float32)
+                )
+            sols = solve_batch(
+                [prob] * len(starts),
+                max_iters=self.max_iters,
+                eps=self.eps,
+                pi0=jnp.stack(starts),
+            )
+            best = int(np.argmin(np.asarray(sols.objective)))
+            self.plan = FactoredPlan(
+                h, jnp.asarray(sols.pi[best]), lam_c.copy()
+            )
+            it = np.asarray(sols.iterations)
+            iters = int(it[best] if it.ndim else it)
+            self.resolved_counts.append(int(h.n_clusters))
+            self.full_solves += 1
+            self._solved_mom = mom
+            self._solved_avail = avail.copy()
+        else:
+            self.plan, info = resolve_incremental(
+                self.plan,
+                lam_c,
+                mom,
+                cost,
+                self.theta,
+                threshold=self.rate_threshold,
+                max_iters=self.max_iters,
+                eps=self.eps,
+            )
+            iters = int(info.iterations)
+            self.resolved_counts.append(int(info.n_resolved))
+        pi = np.asarray(jax.block_until_ready(materialize(self.plan)))
+        self.solve_walls.append(time.perf_counter() - t0)
+        self.solve_iters.append(iters)
+        self.replans += 1
+        return pi
 
 
 @dataclasses.dataclass
@@ -685,6 +845,9 @@ class GeoAdaptiveReplanner:
     max_iters: int = 400
     rollout_requests: int = 600
     replans: int = 0
+    # per-replan solver telemetry (mirrors AdaptiveReplanner)
+    solve_iters: list = dataclasses.field(default_factory=list)
+    solve_walls: list = dataclasses.field(default_factory=list)
 
     def replan(
         self,
@@ -738,7 +901,10 @@ class GeoAdaptiveReplanner:
                 if pi0 is not None:
                     probs.append(prob)
                     starts.append(jnp.asarray(np.asarray(pi0), jnp.float32))
+        t0 = time.perf_counter()
         sols = solve_batch(probs, max_iters=self.max_iters, pi0=jnp.stack(starts))
+        jax.block_until_ready(sols.pi)
+        self.solve_walls.append(time.perf_counter() - t0)
         self.replans += 1
 
         cost_term = self.theta * np.asarray(sols.cost)
@@ -765,6 +931,9 @@ class GeoAdaptiveReplanner:
         else:
             scores = (np.asarray(sols.latency_tight) + cost_term).tolist()
         best = int(np.argmin(scores))
+        if sols.iterations is not None:
+            it = np.asarray(sols.iterations)
+            self.solve_iters.append(int(it[best] if it.ndim else it))
         return np.asarray(sols.pi[best])
 
 

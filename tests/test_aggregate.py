@@ -1,0 +1,342 @@
+"""Hierarchical planning (`core/aggregate.py`): catalogs, clustering,
+volume packing, exact disaggregation, objective-parity bounds, and
+warm-started incremental re-solves.
+
+The bitwise story (see the module docstring): solving r duplicated file
+rows does NOT bit-reproduce the volume solve (gradients scale with lam_i,
+summation order differs), so the exact properties pinned here are the
+construction identity, the V=1 identity, and gather-exact disaggregation;
+objective parity across granularities is a tolerance assert.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    JLCMProblem,
+    build_problem,
+    check_feasible,
+    cluster_catalog,
+    duality_gap,
+    effective_chunk_mb,
+    evaluate_pi,
+    kmeans1d,
+    materialize,
+    resolve_incremental,
+    shifted_exponential_moments,
+    solve,
+    solve_hierarchical,
+    synthetic_catalog,
+    volume_catalog,
+)
+
+M = 8  # nodes
+SOLVE_KW = dict(max_iters=200, eps=1e-4)
+
+
+def _testbed(seed=0):
+    rng = np.random.default_rng(seed)
+    mom = shifted_exponential_moments(
+        jnp.asarray(rng.uniform(4.0, 8.0, M), jnp.float32),
+        jnp.asarray(rng.uniform(0.08, 0.15, M), jnp.float32),
+    )
+    cost = jnp.asarray(rng.uniform(0.5, 2.0, M), jnp.float32)
+    return mom, cost
+
+
+def _homogeneous_catalog(r=32, file_mb=100.0):
+    # one class, zero rate spread: every grouping is homogeneous
+    return synthetic_catalog(
+        r, k_classes=(4,), file_mb=(file_mb,), rate_sigma=0.0
+    )
+
+
+class TestCatalog:
+    def test_synthetic_catalog_shapes_and_rate(self):
+        cat = synthetic_catalog(5000, total_rate=0.125, seed=3)
+        assert cat.r == 5000
+        assert cat.lam.shape == (5000,)
+        np.testing.assert_allclose(cat.lam.sum(), 0.125, rtol=1e-12)
+        assert np.all(cat.lam > 0)
+        # class table consistency: per-file fields are gathers of it
+        np.testing.assert_array_equal(cat.k, cat.k_of_class[cat.class_id])
+        np.testing.assert_array_equal(
+            cat.chunk_mb, cat.chunk_of_class[cat.class_id]
+        )
+        np.testing.assert_array_equal(
+            cat.class_key, cat.class_id.astype(np.int64) << 14
+        )
+
+    def test_million_file_catalog_is_fast(self):
+        # the generator must be vectorized: 10^6 files in well under a
+        # second even on one starved core (a per-file loop takes minutes)
+        import time
+
+        t0 = time.perf_counter()
+        cat = synthetic_catalog(1_000_000)
+        wall = time.perf_counter() - t0
+        assert cat.r == 1_000_000
+        assert wall < 30.0, f"catalog generation took {wall:.1f}s"
+
+
+class TestKmeans1d:
+    def test_separates_two_clumps(self):
+        rng = np.random.default_rng(0)
+        v = np.concatenate([rng.normal(0, 0.1, 50), rng.normal(10, 0.1, 50)])
+        assign = kmeans1d(v, np.ones_like(v), 2)
+        assert len(np.unique(assign[:50])) == 1
+        assert len(np.unique(assign[50:])) == 1
+        assert assign[0] != assign[-1]
+
+    def test_caps_clusters_at_unique_values(self):
+        assign = kmeans1d(np.asarray([1.0, 1.0, 2.0]), np.ones(3), 10)
+        assert assign.max() <= 1
+
+
+class TestClusterCatalog:
+    def test_conserves_rate_and_counts(self):
+        cat = synthetic_catalog(20_000, seed=1)
+        h = cluster_catalog(cat)
+        # bincount sums every file's lam exactly once
+        np.testing.assert_allclose(h.lam.sum(), cat.lam.sum(), rtol=1e-12)
+        assert int(h.counts.sum()) == cat.r
+        cid = h.cluster_of_file()
+        assert cid.min() >= 0 and cid.max() < h.n_clusters
+        # per-cluster recount through the file map agrees
+        np.testing.assert_array_equal(
+            np.bincount(cid, minlength=h.n_clusters), h.counts
+        )
+        np.testing.assert_allclose(
+            np.bincount(cid, weights=cat.lam, minlength=h.n_clusters),
+            h.lam,
+            rtol=1e-12,
+        )
+
+    def test_o100_clusters_for_million_files(self):
+        cat = synthetic_catalog(1_000_000, seed=2)
+        h = cluster_catalog(cat)
+        assert h.n_clusters < 300, h.n_clusters
+        assert int(h.counts.sum()) == cat.r
+
+    def test_rate_cluster_refinement_reduces_clusters(self):
+        cat = synthetic_catalog(50_000, rate_sigma=2.0, seed=4)
+        coarse = cluster_catalog(cat, n_rate_clusters=4)
+        fine = cluster_catalog(cat)
+        assert coarse.n_clusters <= fine.n_clusters
+        np.testing.assert_allclose(
+            coarse.lam.sum(), cat.lam.sum(), rtol=1e-12
+        )
+
+    def test_rejects_nonpositive_rates(self):
+        cat = _homogeneous_catalog(8)
+        bad = cat._replace(lam=np.zeros_like(cat.lam))
+        with pytest.raises(ValueError, match="positive"):
+            cluster_catalog(bad)
+
+
+class TestVolumeCatalog:
+    def test_v1_volumes_are_the_files(self):
+        cat = _homogeneous_catalog(16, file_mb=100.0)
+        h = volume_catalog(cat, volume_mb=100.0)
+        assert h.n_clusters == cat.r
+        np.testing.assert_array_equal(h.counts, np.ones(cat.r, np.int64))
+        np.testing.assert_array_equal(h.lam, cat.lam)
+
+    def test_packing_and_unit_cost_weight(self):
+        cat = _homogeneous_catalog(16, file_mb=100.0)
+        h = volume_catalog(cat, volume_mb=400.0)
+        assert h.n_clusters == 4
+        np.testing.assert_array_equal(h.counts, np.full(4, 4))
+        # a volume is stored once no matter how many files pack into it
+        np.testing.assert_array_equal(h.cost_weight, np.ones(4))
+        np.testing.assert_allclose(h.lam.sum(), cat.lam.sum(), rtol=1e-12)
+
+    def test_construction_identity_v1(self):
+        # aggregating one-file volumes builds the file problem leaf for
+        # leaf — lam is a bincount of single elements (exact), k/chunk
+        # are gathers of the same class table
+        mom, cost = _testbed()
+        cat = _homogeneous_catalog(16, file_mb=100.0)
+        h = volume_catalog(cat, volume_mb=100.0)
+        prob_vol = build_problem(h, mom, cost, 2.0)
+        assert prob_vol.cost_weight is None  # all-ones weight stays dense
+        np.testing.assert_array_equal(
+            np.asarray(prob_vol.lam),
+            np.asarray(jnp.asarray(cat.lam, jnp.float32)),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(prob_vol.k), cat.k.astype(np.int32)
+        )
+
+    def test_v1_solve_bitwise_equals_file_solve(self):
+        mom, cost = _testbed()
+        cat = _homogeneous_catalog(16, file_mb=100.0)
+        h = volume_catalog(cat, volume_mb=100.0)
+        sol_vol = solve(build_problem(h, mom, cost, 2.0), **SOLVE_KW)
+        prob_file = JLCMProblem(
+            lam=jnp.asarray(cat.lam, jnp.float32),
+            k=jnp.asarray(cat.k, jnp.int32),
+            moments=mom,
+            cost=cost,
+            theta=2.0,
+        )
+        sol_file = solve(prob_file, **SOLVE_KW)
+        np.testing.assert_array_equal(
+            np.asarray(sol_vol.pi), np.asarray(sol_file.pi)
+        )
+        assert float(sol_vol.objective) == float(sol_file.objective)
+
+
+class TestDisaggregation:
+    def test_materialize_is_exact_gather(self):
+        mom, cost = _testbed()
+        cat = synthetic_catalog(500, seed=5)
+        h = cluster_catalog(cat)
+        plan, _ = solve_hierarchical(h, mom, cost, 2.0, **SOLVE_KW)
+        pi_files = np.asarray(materialize(plan))
+        assert pi_files.shape == (cat.r, M)
+        cid = h.cluster_of_file()
+        np.testing.assert_array_equal(
+            pi_files, np.asarray(plan.cluster_pi)[cid]
+        )
+
+    def test_disaggregated_plan_is_feasible(self):
+        mom, cost = _testbed()
+        cat = synthetic_catalog(500, seed=6)
+        h = cluster_catalog(cat)
+        plan, _ = solve_hierarchical(h, mom, cost, 2.0, **SOLVE_KW)
+        check_feasible(
+            materialize(plan), jnp.asarray(cat.k, jnp.float32)
+        )
+
+    def test_objective_parity_and_gap_bound(self):
+        # score the disaggregated plan on the dense problem it never
+        # solved: within 5% of the dense optimum, and the Frank-Wolfe
+        # certificate evaluated at the same point bounds the restriction
+        mom, cost = _testbed()
+        cat = synthetic_catalog(1000, seed=7)
+        h = cluster_catalog(cat)
+        plan, _ = solve_hierarchical(h, mom, cost, 2.0, **SOLVE_KW)
+        prob_dense = JLCMProblem(
+            lam=jnp.asarray(cat.lam, jnp.float32),
+            k=jnp.asarray(cat.k, jnp.int32),
+            moments=mom,
+            cost=cost,
+            theta=2.0,
+        )
+        sol_dense = solve(prob_dense, **SOLVE_KW)
+        pi_files = materialize(plan)
+        ev = evaluate_pi(prob_dense, pi_files)
+        obj_d, obj_h = float(sol_dense.objective), float(ev.objective)
+        assert abs(obj_h - obj_d) / abs(obj_d) < 0.05
+        gap = duality_gap(prob_dense, pi_files)
+        assert gap >= -1e-3
+        # the certificate: dense optimum >= clustered value - gap
+        assert obj_d >= obj_h - gap - 1e-3 * abs(obj_h)
+
+
+class TestResolveIncremental:
+    def _plan(self, seed=8, r=2000):
+        mom, cost = _testbed()
+        cat = synthetic_catalog(r, seed=seed)
+        h = cluster_catalog(cat)
+        plan, _ = solve_hierarchical(h, mom, cost, 2.0, **SOLVE_KW)
+        return plan, mom, cost
+
+    def test_no_movement_is_a_no_op(self):
+        plan, mom, cost = self._plan()
+        new_plan, info = resolve_incremental(
+            plan, plan.cluster_lam, mom, cost, 2.0, threshold=0.2
+        )
+        assert info.n_resolved == 0 and info.iterations == 0
+        np.testing.assert_array_equal(
+            np.asarray(new_plan.cluster_pi), np.asarray(plan.cluster_pi)
+        )
+
+    def test_huge_threshold_freezes_everything(self):
+        plan, mom, cost = self._plan()
+        shaken = plan.cluster_lam * np.linspace(
+            0.5, 1.5, plan.cluster_lam.size
+        )
+        _, info = resolve_incremental(
+            plan, shaken, mom, cost, 2.0, threshold=1e9
+        )
+        assert info.n_resolved == 0
+
+    def test_resolves_only_moved_clusters(self):
+        plan, mom, cost = self._plan()
+        new_lam = plan.cluster_lam.copy()
+        hot = np.argsort(plan.cluster_lam)[-2:]
+        new_lam[hot] *= 3.0  # two clusters surge, the rest hold
+        new_plan, info = resolve_incremental(
+            plan, new_lam, mom, cost, 2.0, threshold=0.2, **SOLVE_KW
+        )
+        assert info.n_resolved == 2
+        assert info.n_clusters == plan.hierarchy.n_clusters
+        assert info.padded_rows == 2  # next power of two
+        frozen = np.setdiff1d(
+            np.arange(plan.hierarchy.n_clusters), hot
+        )
+        # frozen rows keep their cached pi bit for bit
+        np.testing.assert_array_equal(
+            np.asarray(new_plan.cluster_pi)[frozen],
+            np.asarray(plan.cluster_pi)[frozen],
+        )
+        # the solved-at rates update only where re-solved
+        np.testing.assert_array_equal(
+            new_plan.cluster_lam[frozen], plan.cluster_lam[frozen]
+        )
+        np.testing.assert_array_equal(
+            new_plan.cluster_lam[hot], new_lam[hot]
+        )
+
+    def test_pads_to_power_of_two(self):
+        plan, mom, cost = self._plan()
+        new_lam = plan.cluster_lam.copy()
+        hot = np.argsort(plan.cluster_lam)[-3:]
+        new_lam[hot] *= 3.0
+        _, info = resolve_incremental(
+            plan, new_lam, mom, cost, 2.0, threshold=0.2, **SOLVE_KW
+        )
+        assert info.n_resolved == 3 and info.padded_rows == 4
+
+    def test_rejects_wrong_shape(self):
+        plan, mom, cost = self._plan()
+        with pytest.raises(ValueError, match="shape"):
+            resolve_incremental(
+                plan, plan.cluster_lam[:-1], mom, cost, 2.0
+            )
+
+    def test_incremental_objective_near_full_resolve(self):
+        # surge a third of the traffic; the incremental plan must land
+        # close to the full cold re-solve on the new problem
+        plan, mom, cost = self._plan()
+        rng = np.random.default_rng(0)
+        new_lam = plan.cluster_lam * rng.uniform(
+            0.9, 1.1, plan.cluster_lam.size
+        )
+        hot = np.argsort(plan.cluster_lam)[-4:]
+        new_lam[hot] = plan.cluster_lam[hot] * 2.5
+        h = plan.hierarchy._replace(lam=new_lam)
+        prob_new = build_problem(h, mom, cost, 2.0)
+        inc_plan, info = resolve_incremental(
+            plan, new_lam, mom, cost, 2.0, threshold=0.2, **SOLVE_KW
+        )
+        assert 0 < info.n_resolved < plan.hierarchy.n_clusters
+        cold = solve(prob_new, **SOLVE_KW)
+        ev = evaluate_pi(prob_new, inc_plan.cluster_pi)
+        rel = (float(ev.objective) - float(cold.objective)) / abs(
+            float(cold.objective)
+        )
+        assert rel < 0.05, f"incremental plan {rel:.3%} above cold re-solve"
+
+
+class TestEffectiveChunk:
+    def test_traffic_weighted_mean(self):
+        cat = synthetic_catalog(1000, seed=9)
+        h = cluster_catalog(cat)
+        eff = effective_chunk_mb(h)
+        lo, hi = cat.chunk_mb.min(), cat.chunk_mb.max()
+        assert lo <= eff <= hi

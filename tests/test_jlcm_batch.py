@@ -171,3 +171,81 @@ class TestBatchSafePrimitives:
         )
         got = stability_penalty(rates, prob.moments)
         assert got.shape == (5,)
+
+
+class TestWarmStart:
+    """`solve(pi0=...)` / `solve_batch(pi0=...)`: warm-starting from a
+    converged plan must terminate almost immediately and land on the
+    cold-start objective; malformed shapes must fail loudly, not
+    broadcast into a silently wrong solve."""
+
+    def _hard_problem(self, theta=2.0, seed=11, r=400):
+        # heterogeneous enough that a cold solve needs real iterations
+        # (tiny uniform problems converge in 1 step, which would make
+        # the warm-start assertion vacuous)
+        from repro.core import synthetic_catalog
+
+        rng = np.random.default_rng(seed)
+        cat = synthetic_catalog(r, rate_sigma=2.0, seed=seed)
+        mom = shifted_exponential_moments(
+            jnp.asarray(rng.uniform(4.0, 8.0, M), jnp.float32),
+            jnp.asarray(rng.uniform(0.08, 0.15, M), jnp.float32),
+        )
+        cost = jnp.asarray(rng.uniform(0.5, 2.0, M), jnp.float32)
+        return JLCMProblem(
+            lam=jnp.asarray(cat.lam, jnp.float32),
+            k=jnp.asarray(cat.k, jnp.int32),
+            moments=mom,
+            cost=cost,
+            theta=theta,
+        )
+
+    def test_warm_start_from_converged_terminates_fast(self):
+        prob = self._hard_problem()
+        cold = solve(prob, max_iters=500, eps=1e-5)
+        assert int(cold.iterations) >= 8, (
+            "problem too easy to exercise warm starting: "
+            f"{int(cold.iterations)} cold iterations"
+        )
+        warm = solve(prob, max_iters=500, eps=1e-5, pi0=cold.pi)
+        # a fresh lr calibration squeezes out a few more accepted steps,
+        # so "no-op" means a handful of iterations, not zero — and the
+        # warm objective may only ever IMPROVE on the cold one
+        assert int(warm.iterations) <= 8, int(warm.iterations)
+        assert int(warm.iterations) < int(cold.iterations) // 4
+        d_obj = float(warm.objective) - float(cold.objective)
+        assert d_obj <= 1e-6 * abs(float(cold.objective))
+        rel = abs(d_obj) / max(1.0, abs(float(cold.objective)))
+        assert rel < 1e-3, f"warm objective drifted {rel} from cold"
+
+    def test_warm_start_batch_terminates_fast(self):
+        probs = [self._hard_problem(theta=t) for t in (1.0, 2.0, 5.0)]
+        cold = solve_batch(probs, max_iters=500, eps=1e-5)
+        warm = solve_batch(probs, max_iters=500, eps=1e-5, pi0=cold.pi)
+        for b in range(3):
+            assert int(warm.iterations[b]) <= 10, (
+                f"instance {b}: {int(warm.iterations[b])} warm iterations"
+            )
+            d_obj = float(warm.objective[b]) - float(cold.objective[b])
+            assert d_obj <= 1e-6 * abs(float(cold.objective[b]))
+            assert abs(d_obj) / max(1.0, abs(float(cold.objective[b]))) < 1e-3
+
+    def test_batch_shared_start_broadcasts(self):
+        probs = [_problem(theta=t) for t in (1.0, 2.0)]
+        start = solve(probs[0], max_iters=100).pi
+        sol = solve_batch(probs, max_iters=100, pi0=start)  # (r, m) shared
+        assert sol.pi.shape == (2, R, M)
+
+    def test_solve_rejects_malformed_pi0(self):
+        prob = _problem()
+        with pytest.raises(ValueError, match="pi0 shape"):
+            solve(prob, pi0=jnp.ones((R + 1, M)))
+        with pytest.raises(ValueError, match="pi0 shape"):
+            solve(prob, pi0=jnp.ones((R, M - 1)))
+
+    def test_solve_batch_rejects_malformed_pi0(self):
+        probs = [_problem(theta=t) for t in (1.0, 2.0)]
+        with pytest.raises(ValueError, match="pi0 shape"):
+            solve_batch(probs, pi0=jnp.ones((3, R, M)))  # wrong batch
+        with pytest.raises(ValueError, match="pi0 shape"):
+            solve_batch(probs, pi0=jnp.ones((R, M + 1)))

@@ -306,3 +306,80 @@ class TestMultiTenant:
             burst_outcomes["adaptive"].class_mean[0]
             < burst_outcomes["oblivious"].class_mean[0]
         )
+
+
+class TestSolverTelemetry:
+    """Satellite: per-replan solver iteration counts / wall time land in
+    the outcome and its CSV row for the dense adaptive loop."""
+
+    def test_adaptive_records_iters_and_walls(self):
+        spec = get_scenario("hotspot-drift").scaled(0.4)
+        out = run_scenario(spec, "adaptive", seed=0)
+        assert out.replans > 0
+        assert len(out.solve_iters) == out.replans
+        assert len(out.solve_walls) == out.replans
+        assert all(int(v) >= 1 for v in out.solve_iters)
+        assert all(v > 0.0 for v in out.solve_walls)
+        row = out.row()
+        assert row["solve_iters"].count("|") == out.replans - 1
+        assert row["solve_wall_ms"].count("|") == out.replans - 1
+
+    def test_static_records_nothing(self):
+        spec = get_scenario("hotspot-drift").scaled(0.4)
+        out = run_scenario(spec, "static", seed=0)
+        assert out.replans == 0
+        assert out.solve_iters == () and out.solve_walls == ()
+        assert out.row()["solve_iters"] == ""
+
+
+class TestHierarchicalScenario:
+    """The 10^5-file closed loop, shrunk to r=2000 for test budgets: the
+    catalog flows through `cluster_catalog` -> `HierarchicalReplanner`
+    (full re-solves on moment drift, `resolve_incremental` otherwise)."""
+
+    @pytest.fixture(scope="class")
+    def hier(self):
+        from repro.scenarios import hotspot_drift_hierarchical
+
+        return hotspot_drift_hierarchical(r=2000, requests_per_segment=800)
+
+    @pytest.fixture(scope="class")
+    def outcomes(self, hier):
+        spec, h = hier
+        return {
+            p: run_scenario(spec, p, seed=0, hierarchy=h)
+            for p in ("static", "adaptive")
+        }
+
+    def test_spec_shape(self, hier):
+        spec, h = hier
+        assert len(spec.lam) == 2000
+        assert h.n_clusters < 200
+        assert int(h.counts.sum()) == 2000
+
+    def test_outcomes_finite(self, outcomes):
+        for o in outcomes.values():
+            assert np.isfinite(o.mean) and np.isfinite(o.p99)
+
+    def test_adaptive_beats_static(self, outcomes):
+        # the drifted hotspot rates reward re-planning even through the
+        # cluster restriction
+        assert outcomes["adaptive"].mean < outcomes["static"].mean
+
+    def test_hierarchical_telemetry(self, outcomes):
+        o = outcomes["adaptive"]
+        assert o.replans > 0
+        assert len(o.solve_iters) == o.replans
+        assert len(o.solve_walls) == o.replans
+        assert len(o.resolved_counts) == o.replans
+        row = o.row()
+        assert "resolved_clusters" in row
+        assert row["solve_iters"].count("|") == o.replans - 1
+
+    def test_rejects_unsupported_composition(self, hier):
+        spec, h = hier
+        bad = dataclasses.replace(
+            spec, failures=((0, 2, 3),), repair_rate=0.1
+        )
+        with pytest.raises(ValueError, match="hierarch"):
+            run_scenario(bad, "adaptive", seed=0, hierarchy=h)

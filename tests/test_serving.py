@@ -141,3 +141,74 @@ class TestEwmaRateEstimator:
         r2 = b.update(np.concatenate([ids, [7, 9]]), 5.0)
         np.testing.assert_allclose(r1, r2)
         assert a.dropped == 0 and b.dropped == 2
+
+
+class TestHierarchicalReplanner:
+    """Two-tier replan arbitration: full solves only on moment/mask
+    drift, `resolve_incremental` (freezing quiet clusters) otherwise."""
+
+    def _replanner(self, r=1500, seed=0):
+        from repro.core import cluster_catalog, synthetic_catalog
+        from repro.serving import EwmaMomentEstimator, HierarchicalReplanner
+
+        rng = np.random.default_rng(seed)
+        cat = synthetic_catalog(r, total_rate=0.04, seed=seed)
+        h = cluster_catalog(cat)
+        m = 8
+        mom = exponential_moments(
+            jnp.asarray(rng.uniform(4.0, 8.0, m), jnp.float32)
+        )
+        est = EwmaMomentEstimator(prior=mom)
+        rp = HierarchicalReplanner(
+            hierarchy=h,
+            cost=np.asarray(rng.uniform(0.5, 2.0, m)),
+            theta=2.0 * 4 / r,  # latency averages, cost sums: scale 1/r
+            estimator=est,
+            eps=1e-3,
+        )
+        return rp, cat, np.ones(m, bool)
+
+    def test_first_replan_is_full_and_materialized(self):
+        rp, cat, avail = self._replanner()
+        pi = rp.replan(cat.lam, avail)
+        assert pi.shape == (cat.r, avail.size)
+        assert rp.replans == 1 and rp.full_solves == 1
+        assert rp.plan is not None
+        np.testing.assert_allclose(pi.sum(-1), cat.k, rtol=1e-3)
+        assert len(rp.solve_iters) == len(rp.solve_walls) == 1
+        assert rp.resolved_counts == [rp.hierarchy.n_clusters]
+
+    def test_quiet_segment_is_incremental_noop(self):
+        rp, cat, avail = self._replanner()
+        pi1 = rp.replan(cat.lam, avail)
+        pi2 = rp.replan(cat.lam, avail)  # nothing moved
+        assert rp.replans == 2 and rp.full_solves == 1
+        assert rp.resolved_counts[-1] == 0
+        np.testing.assert_array_equal(pi1, pi2)
+
+    def test_rate_surge_resolves_few_clusters(self):
+        rp, cat, avail = self._replanner()
+        rp.replan(cat.lam, avail)
+        cid = rp.hierarchy.cluster_of_file()
+        hot_cluster = int(np.argmax(rp.hierarchy.lam))
+        rates = cat.lam.copy()
+        rates[cid == hot_cluster] *= 3.0  # one cluster surges
+        rp.replan(rates, avail)
+        assert rp.full_solves == 1  # moments/mask unchanged: incremental
+        assert 1 <= rp.resolved_counts[-1] < rp.hierarchy.n_clusters
+
+    def test_mask_change_forces_full_solve(self):
+        rp, cat, avail = self._replanner()
+        rp.replan(cat.lam, avail)
+        down = avail.copy()
+        down[0] = False
+        pi = rp.replan(cat.lam, down)
+        assert rp.full_solves == 2
+        np.testing.assert_allclose(pi[:, 0], 0.0, atol=1e-6)
+
+    def test_moment_drift_forces_full_solve(self):
+        rp, cat, avail = self._replanner()
+        rp.replan(cat.lam, avail)
+        rp.estimator.m1 *= 1.5  # a node slowed: no rate diff sees this
+        rp.replan(cat.lam, avail)
+        assert rp.full_solves == 2
