@@ -21,6 +21,7 @@ MODULES = [
     "scenario_suite",
     "tenant_tradeoff",
     "fleet_scale",
+    "replan_wall",
     "checkpoint_catalogs",
 ]
 

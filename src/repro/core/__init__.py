@@ -59,6 +59,7 @@ from .objectives import (
     compose_file_bounds,
     composed_latency,
     empirical_objective,
+    empirical_objective_device,
     make_cache_spec,
     make_objective,
     refresh_shared_z,

@@ -446,6 +446,49 @@ def class_mean_bounds(
     return num / jnp.maximum(den, 1e-12)
 
 
+def empirical_objective_device(
+    latency: Array,
+    file_id: Array,
+    spec: ObjectiveSpec | None,
+    valid: Array | None = None,
+) -> Array:
+    """Device (jit-/vmap-safe) twin of :func:`empirical_objective`.
+
+    Scores ONE simulated latency stream (N,) under the composed objective
+    without leaving the device — the scoring half of the replanner's
+    batched rollout arbitration (`serving/router.py`), where a host
+    round-trip per candidate is exactly what is being eliminated.
+    ``valid`` masks requests out of the statistic entirely (repair rows
+    during repair-aware replans); everything is weighted sums plus
+    one-hot segment sums, so the function vmaps cleanly over candidate
+    and seed axes. Per-class exceedance terms follow the host contract:
+    a class with no (valid) requests contributes 0, ``tw_c == 0`` or an
+    infinite deadline disables a class's term.
+    """
+    latency = jnp.asarray(latency, jnp.float32)
+    vf = (
+        jnp.ones(latency.shape, jnp.float32)
+        if valid is None
+        else jnp.asarray(valid, jnp.float32)
+    )
+    lat = jnp.where(vf > 0, latency, 0.0)  # keep masked ±inf out of sums
+    if spec is None:
+        return jnp.sum(lat * vf) / jnp.maximum(jnp.sum(vf), 1.0)
+    cid = jnp.asarray(spec.class_id)[file_id]
+    w = vf if spec.weight is None else jnp.asarray(spec.weight)[cid] * vf
+    score = jnp.sum(w * lat) / jnp.maximum(jnp.sum(w), 1e-30)
+    if spec.deadline is not None:
+        c = spec.n_classes
+        onehot = (cid[:, None] == jnp.arange(c)) * vf[:, None]  # (N, C)
+        count = jnp.sum(onehot, axis=0)
+        exceed = jnp.sum(
+            onehot * (lat[:, None] > jnp.asarray(spec.deadline)), axis=0
+        )
+        frac = jnp.where(count > 0, exceed / jnp.maximum(count, 1.0), 0.0)
+        score = score + jnp.sum(jnp.asarray(spec.tail_weight) * frac)
+    return score
+
+
 def empirical_objective(
     latency: np.ndarray,
     file_id: np.ndarray,

@@ -142,6 +142,11 @@ class ScenarioOutcome:
     # for open-loop policies
     solve_iters: tuple = ()
     solve_walls: tuple = ()
+    # per-replan wall seconds of the rollout arbitration (the fused
+    # batched candidate-scoring call, `serving.router.
+    # batched_rollout_scores`); empty for open-loop policies and for
+    # replanners that never roll out (hierarchical)
+    rollout_walls: tuple = ()
     # hierarchical loop only: clusters re-solved per replan (full replans
     # report the whole cluster count, incremental ones just the movers)
     resolved_counts: tuple = ()
@@ -174,6 +179,9 @@ class ScenarioOutcome:
             solve_iters="|".join(str(int(v)) for v in self.solve_iters),
             solve_wall_ms="|".join(
                 f"{1e3 * v:.1f}" for v in self.solve_walls
+            ),
+            rollout_wall_ms="|".join(
+                f"{1e3 * v:.1f}" for v in self.rollout_walls
             ),
         )
         if self.resolved_counts:
@@ -425,7 +433,7 @@ def run_scenario(
         return np.concatenate([np.asarray(client_pi), rep], axis=0)
 
     replans = 0
-    solve_iters = solve_walls = resolved_counts = ()
+    solve_iters = solve_walls = rollout_walls = resolved_counts = ()
     hit = None
     pi_deployed = None  # (S, r, m) what actually dispatched, for cost
     if policy in ("static", "oblivious"):
@@ -612,6 +620,7 @@ def run_scenario(
         replans = replanner.replans
         solve_iters = tuple(replanner.solve_iters)
         solve_walls = tuple(replanner.solve_walls)
+        rollout_walls = tuple(getattr(replanner, "rollout_walls", ()))
         resolved_counts = tuple(getattr(replanner, "resolved_counts", ()))
 
     # All reported statistics cover CLIENT requests only; repair rows
@@ -658,6 +667,7 @@ def run_scenario(
         storage_cost=storage_cost,
         solve_iters=solve_iters,
         solve_walls=solve_walls,
+        rollout_walls=rollout_walls,
         resolved_counts=resolved_counts,
     )
 
@@ -713,7 +723,7 @@ def run_geo_scenario(
         pi, _, _ = initial_plan(spec, fabric.cluster)  # geo-oblivious
 
     replans = 0
-    solve_iters = solve_walls = ()
+    solve_iters = solve_walls = rollout_walls = ()
     if policy in ("static", "oblivious"):
         res = simulate_geo_segments(
             key,
@@ -737,6 +747,7 @@ def run_geo_scenario(
             cost=np.asarray(fabric.cluster.cost),
             theta=spec.theta,
             estimator=moment_est,
+            objective=spec.objective(),
         )
         seg_keys = jax.random.split(key, n_seg)
         rollout_keys = jax.random.split(jax.random.key(seed + 0x5EED), n_seg)
@@ -779,6 +790,7 @@ def run_geo_scenario(
         replans = replanner.replans
         solve_iters = tuple(replanner.solve_iters)
         solve_walls = tuple(replanner.solve_walls)
+        rollout_walls = tuple(replanner.rollout_walls)
 
     site_mean = np.asarray(
         [
@@ -799,6 +811,7 @@ def run_geo_scenario(
         site_mean=site_mean,
         solve_iters=solve_iters,
         solve_walls=solve_walls,
+        rollout_walls=rollout_walls,
     )
 
 

@@ -9,5 +9,6 @@ from .router import (
     HierarchicalReplanner,
     ReplicaPool,
     Router,
+    batched_rollout_scores,
     simulate_serving,
 )

@@ -19,7 +19,13 @@ estimates of the Lemma-3 moments, :class:`EwmaRateEstimator` tracks the
 per-class arrival rates the same way, and :class:`AdaptiveReplanner`
 re-solves JLCM from those *estimated* inputs — batching all candidate
 (theta, availability-mask) re-plans into one ``solve_batch`` call — to
-produce the next segment's dispatch matrix. `src/repro/scenarios/` wires
+produce the next segment's dispatch matrix. Candidate *arbitration* is
+equally batched: :func:`batched_rollout_scores` fuses every candidate's
+exact-simulator rollout, its composed-objective scoring, the
+``+ theta * cost`` fold, and the winning ``argmin`` into ONE compiled
+device program (candidate axis padded to a power of two for program
+reuse, optional common-random-number seed axis, ``shard_map`` over the
+local mesh when >1 device) with a single host sync per replan. `src/repro/scenarios/` wires
 this loop against the segmented simulator. :class:`GeoAdaptiveReplanner`
 is the client-fabric variant: it estimates the full (C, m) per-(client-
 site, node) service family and the (C, r) traffic matrix, and re-solves
@@ -29,6 +35,7 @@ site, node) service family and the (C, r) traffic matrix, and re-solves
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any
 
@@ -44,6 +51,7 @@ from repro.core import (
     ServiceMoments,
     build_problem,
     empirical_objective,
+    empirical_objective_device,
     feasible_uniform,
     fit_shifted_exponential,
     madow_sample,
@@ -342,6 +350,197 @@ class EwmaRateEstimator:
         return self.update(ids[miss], duration)
 
 
+def _pow2(n: int) -> int:
+    """Smallest power of two >= n (candidate-lane padding)."""
+    return 1 << max(0, n - 1).bit_length()
+
+
+def _rollout_lane_score(
+    carry, key, pi, lam, overheads, rates, avail, ttl, hit_latency, spec,
+    *, n_requests: int, n_clients: int, geo: bool,
+):
+    """Simulate ONE (candidate, seed) rollout lane and score it on device.
+
+    The unit the batched arbitration parallelizes over: one exact-simulator
+    segment from the live queue state under the estimated service family,
+    folded straight into the composed empirical objective
+    (``core.objectives.empirical_objective_device``) with repair pseudo-file
+    rows (``file_id >= n_clients``) masked out of the statistic — the
+    latency stream never leaves the device.
+    """
+    from repro.storage.simulator import _run_geo_segment, _run_segment
+
+    if geo:
+        _, res = _run_geo_segment(
+            carry, key, pi, lam, overheads, rates, avail, n_requests
+        )
+    else:
+        _, res = _run_segment(
+            carry, key, pi, lam, overheads, rates, avail, n_requests,
+            ttl, hit_latency,
+        )
+    return empirical_objective_device(
+        res.latency, res.file_id, spec, valid=res.file_id < n_clients
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_requests", "n_clients", "geo", "shard")
+)
+def _arbitrate_device(
+    carry, keys, pi_stack, lam, overheads, rates, avail, cost_term,
+    lane_ok, spec, ttl, hit_latency,
+    *, n_requests: int, n_clients: int, geo: bool, shard: bool,
+):
+    """ONE compiled program scoring every candidate plan: vmapped (or
+    shard_mapped) rollouts -> device empirical objective -> ``+ cost`` ->
+    lane masking -> argmin. Returns ``(scores (B,), best ())`` as device
+    arrays; the caller's ``int(best)`` is the replan's single host sync.
+
+    ``keys`` (K,) is the common-random-number seed axis: every candidate
+    is rolled out under the SAME K keys, so per-candidate scores are
+    K-seed means over identical workload randomness. ``lane_ok`` masks
+    padded candidate lanes (scores forced to +inf), which is what lets
+    the candidate axis pad to a power of two and reuse this program
+    across replans with varying candidate counts. With ``shard`` the
+    flattened (candidate x seed) lane axis is split over the local device
+    mesh (`shard_map`), each lane entirely on one device — same math,
+    measured for parity by ``tests/test_replan_batch.py``.
+    """
+    score = functools.partial(
+        _rollout_lane_score,
+        n_requests=n_requests, n_clients=n_clients, geo=geo,
+    )
+    b = pi_stack.shape[0]
+    k = keys.shape[0]
+    if shard:
+        from repro.storage.simulator import _shard_map_compat
+
+        lanes_pi = jnp.repeat(pi_stack, k, axis=0)  # (B*K, r, m)
+        lanes_key = jnp.broadcast_to(keys[None], (b, k)).reshape(-1)
+        mesh = jax.sharding.Mesh(np.asarray(jax.devices()), ("cand",))
+        pspec = jax.sharding.PartitionSpec
+
+        def lanes_fn(kl, pl, carry, lam, ovh, rts, avail, ttl, hl, spec):
+            return jax.vmap(
+                lambda kk, pp: score(
+                    carry, kk, pp, lam, ovh, rts, avail, ttl, hl, spec
+                )
+            )(kl, pl)
+
+        lane_scores = _shard_map_compat()(
+            lanes_fn,
+            mesh=mesh,
+            in_specs=(pspec("cand"), pspec("cand")) + (pspec(),) * 8,
+            out_specs=pspec("cand"),
+        )(
+            lanes_key, lanes_pi, carry, lam, overheads, rates, avail,
+            ttl, hit_latency, spec,
+        )
+        scores = lane_scores.reshape(b, k).mean(axis=1)
+    else:
+        per_lane = jax.vmap(
+            lambda pi: jax.vmap(
+                lambda kk: score(
+                    carry, kk, pi, lam, overheads, rates, avail,
+                    ttl, hit_latency, spec,
+                )
+            )(keys)
+        )(pi_stack)  # (B, K)
+        scores = per_lane.mean(axis=1)
+    scores = scores + cost_term
+    scores = jnp.where(lane_ok, scores, jnp.inf)
+    return scores, jnp.argmin(scores)
+
+
+def batched_rollout_scores(
+    carry,
+    key,
+    pi_stack,
+    lam,
+    overheads,
+    rates,
+    avail,
+    cost_term,
+    objective: ObjectiveSpec | None = None,
+    *,
+    n_clients: int,
+    n_requests: int = 600,
+    rollout_seeds: int = 1,
+    ttl=None,
+    hit_latency=0.0,
+    devices: str = "auto",
+    geo: bool = False,
+):
+    """Score a (B, r, m) candidate-plan stack in ONE device program.
+
+    The replanners' arbitration hot path, public so benchmarks and parity
+    tests drive the exact production surface
+    (`benchmarks/replan_wall.py`, ``tests/test_replan_batch.py``). The
+    candidate axis is padded to a power of two (padded lanes replay
+    candidate 0 and score +inf via the dynamic ``lane_ok`` mask), so one
+    compiled program serves every replan whose padded width matches —
+    warm/cold and mask-count variation does not recompile. With
+    ``rollout_seeds == 1`` the key is used UNSPLIT (``key[None]``), which
+    makes each candidate's simulated latency stream bitwise identical to
+    a sequential ``run_segment_raw(carry, key, pi_i, ...)`` call — the
+    legacy loop's common-random-number contract; ``rollout_seeds > 1``
+    splits the key once and scores each candidate by its K-seed mean.
+    ``devices="auto"`` shards the (candidate x seed) lanes over all local
+    devices when >1 (growing the pad until the lane count divides the
+    mesh); ``"never"`` forces the single-program vmap.
+
+    Returns device arrays ``(scores (B_pad,), best ())`` — no host sync
+    happens here; callers take ``int(best)`` as the one transfer and may
+    keep ``scores[:B]`` for telemetry without forcing it.
+    """
+    pi_stack = jnp.asarray(pi_stack)
+    b = int(pi_stack.shape[0])
+    keys = (
+        key[None] if rollout_seeds == 1 else jax.random.split(key, rollout_seeds)
+    )
+    n_dev = len(jax.devices())
+    shard = devices == "auto" and n_dev > 1
+    b_pad = _pow2(b)
+    if shard:
+        grow = 0
+        while (b_pad * rollout_seeds) % n_dev and grow < 4:
+            b_pad *= 2
+            grow += 1
+        if (b_pad * rollout_seeds) % n_dev:
+            shard, b_pad = False, _pow2(b)  # odd mesh: vmap fallback
+    cost = jnp.asarray(cost_term, jnp.float32)
+    if b_pad > b:
+        pi_stack = jnp.concatenate(
+            [
+                pi_stack,
+                jnp.broadcast_to(
+                    pi_stack[:1], (b_pad - b,) + pi_stack.shape[1:]
+                ),
+            ]
+        )
+        cost = jnp.concatenate([cost, jnp.zeros((b_pad - b,), cost.dtype)])
+    lane_ok = jnp.arange(b_pad) < b  # dynamic: no recompile across counts
+    return _arbitrate_device(
+        carry,
+        keys,
+        pi_stack,
+        jnp.asarray(lam, jnp.float32),
+        jnp.asarray(overheads, jnp.float32),
+        jnp.asarray(rates, jnp.float32),
+        jnp.asarray(avail),
+        cost,
+        lane_ok,
+        objective,
+        ttl,
+        jnp.asarray(hit_latency, jnp.float32),
+        n_requests=n_requests,
+        n_clients=n_clients,
+        geo=geo,
+        shard=shard,
+    )
+
+
 @dataclasses.dataclass
 class AdaptiveReplanner:
     """Re-solve JLCM from estimated state, one batched solve per re-plan.
@@ -371,6 +570,17 @@ class AdaptiveReplanner:
     starts from the actual per-node departure state and so prefers plans
     that drain it. Without ``carry``/``key`` the scorer falls back to the
     analytic ``latency_tight + theta * cost``.
+
+    Rollout arbitration runs as ONE compiled device program
+    (:func:`batched_rollout_scores`): candidates vmap over the rollout,
+    scores fold the device empirical objective plus ``theta * cost``, and
+    only the winning index crosses to the host — at ``rollout_seeds=1``
+    (the default) bit-identical in its chosen plan to the sequential
+    per-candidate loop (``rollout_batched=False``) it replaced, and at
+    ``rollout_seeds=K`` averaging K common-random-number rollouts per
+    candidate for variance-reduced selection at near-flat wall.
+    Per-replan arbitration wall time lands in :attr:`rollout_walls`
+    (surfaced as the scenario CSVs' ``rollout_wall_ms`` column).
 
     Warm starts track slow drift with fewer iterations (DC programming
     keeps support); cold starts escape a stale support after abrupt
@@ -425,6 +635,17 @@ class AdaptiveReplanner:
     thetas: tuple[float, ...] | None = None
     max_iters: int = 400
     rollout_requests: int = 600
+    # common-random-number rollout seeds per candidate (K): 1 keeps the
+    # historical bitwise stream (unsplit key), >1 scores each candidate by
+    # its K-seed mean — variance-reduced arbitration at near-flat wall
+    rollout_seeds: int = 1
+    # False restores the legacy per-candidate Python loop (one device
+    # dispatch + host sync per candidate); kept as the parity/benchmark
+    # baseline the batched arbitration is asserted bit-identical against
+    rollout_batched: bool = True
+    # mesh policy for batched rollouts: "auto" shards (candidate x seed)
+    # lanes over all local devices when >1, "never" forces plain vmap
+    rollout_devices: str = "auto"
     replans: int = 0
     # optimized reconstruction-read dispatch from the last repair-aware
     # replan (None when the last replan saw no active repair flow)
@@ -441,6 +662,14 @@ class AdaptiveReplanner:
     # every replan; the scenario engine surfaces them as CSV columns)
     solve_iters: list = dataclasses.field(default_factory=list)
     solve_walls: list = dataclasses.field(default_factory=list)
+    # wall seconds of each replan's rollout arbitration (scoring only —
+    # candidate solves ride in solve_walls); empty entries never appear:
+    # analytic-fallback replans simply do not append
+    rollout_walls: list = dataclasses.field(default_factory=list)
+    # per-candidate arbitration scores of the last replan; a device array
+    # on the batched path (reading it does NOT add a host sync — callers
+    # that want numbers np.asarray it themselves)
+    last_scores: Any = None
     # rate head-room multiplier for hot-tier-outage replans
     # (``cache_up=False``). The raw-rate estimate entering an outage plan
     # is an EWMA that lags the storm by construction (pre-outage miss
@@ -601,10 +830,7 @@ class AdaptiveReplanner:
         self.solve_walls.append(time.perf_counter() - t0)
         self.replans += 1
 
-        cost_term = self.theta * np.asarray(sols.cost)
         if carry is not None and key is not None:
-            from repro.storage.simulator import run_segment_raw
-
             d, srv_rates = self.estimator.fitted_shifted_exp()
             ttl_roll = hit_lat = None
             if self.cache is not None:
@@ -623,36 +849,71 @@ class AdaptiveReplanner:
                     carry = carry._replace(
                         cache=jnp.full(ttl_roll.shape, -jnp.inf)
                     )
-            scores = []
-            for i in range(len(probs)):
-                _, res = run_segment_raw(
+            t0 = time.perf_counter()
+            if self.rollout_batched:
+                # every candidate rolled out + scored (the same composed
+                # empirical objective as the sequential loop, repair rows
+                # masked out) + cost-folded + argmin'd in ONE compiled
+                # device program; int(best) below is the replan's single
+                # host sync
+                scores, best_dev = batched_rollout_scores(
                     carry,
                     key,
-                    sols.pi[i],
+                    sols.pi,
                     lam,
                     jnp.asarray(d, jnp.float32),
                     jnp.asarray(srv_rates, jnp.float32),
                     jnp.asarray(avail),
-                    self.rollout_requests,
-                    ttl_roll,
-                    0.0 if hit_lat is None else hit_lat,
+                    self.theta * sols.cost,  # device-side cost fold
+                    self.objective,
+                    n_clients=r,
+                    n_requests=self.rollout_requests,
+                    rollout_seeds=self.rollout_seeds,
+                    ttl=ttl_roll,
+                    hit_latency=0.0 if hit_lat is None else hit_lat,
+                    devices=self.rollout_devices,
                 )
-                lat_np = np.asarray(res.latency)
-                fid_np = np.asarray(res.file_id)
-                if with_repair:  # score client traffic only
-                    client = fid_np < r
-                    lat_np, fid_np = lat_np[client], fid_np[client]
-                # same objective as the analytic fallback, with the
-                # empirical composed objective (weighted mean + per-class
-                # exceedance frequencies) replacing the loose, backlog-
-                # blind analytic bound
-                scores.append(
-                    empirical_objective(lat_np, fid_np, self.objective)
-                    + float(cost_term[i])
-                )
+                best = int(best_dev)
+                self.last_scores = scores[: len(probs)]
+            else:
+                from repro.storage.simulator import run_segment_raw
+
+                cost_term = self.theta * np.asarray(sols.cost)
+                scores = []
+                for i in range(len(probs)):
+                    _, res = run_segment_raw(
+                        carry,
+                        key,
+                        sols.pi[i],
+                        lam,
+                        jnp.asarray(d, jnp.float32),
+                        jnp.asarray(srv_rates, jnp.float32),
+                        jnp.asarray(avail),
+                        self.rollout_requests,
+                        ttl_roll,
+                        0.0 if hit_lat is None else hit_lat,
+                    )
+                    lat_np = np.asarray(res.latency)
+                    fid_np = np.asarray(res.file_id)
+                    if with_repair:  # score client traffic only
+                        client = fid_np < r
+                        lat_np, fid_np = lat_np[client], fid_np[client]
+                    # same objective as the analytic fallback, with the
+                    # empirical composed objective (weighted mean + per-
+                    # class exceedance frequencies) replacing the loose,
+                    # backlog-blind analytic bound
+                    scores.append(
+                        empirical_objective(lat_np, fid_np, self.objective)
+                        + float(cost_term[i])
+                    )
+                best = int(np.argmin(scores))
+                self.last_scores = np.asarray(scores)
+            self.rollout_walls.append(time.perf_counter() - t0)
         else:
+            cost_term = self.theta * np.asarray(sols.cost)
             scores = (np.asarray(sols.latency_tight) + cost_term).tolist()
-        best = int(np.argmin(scores))
+            best = int(np.argmin(scores))
+            self.last_scores = np.asarray(scores)
         if sols.iterations is not None:
             it = np.asarray(sols.iterations)
             self.solve_iters.append(int(it[best] if it.ndim else it))
@@ -774,7 +1035,10 @@ class HierarchicalReplanner:
                 eps=self.eps,
                 pi0=jnp.stack(starts),
             )
-            best = int(np.argmin(np.asarray(sols.objective)))
+            # device argmin: transfer the winning index, not the whole
+            # objective vector (the same one-sync contract the rollout
+            # replanners' batched arbitration keeps)
+            best = int(jnp.argmin(sols.objective))
             self.plan = FactoredPlan(
                 h, jnp.asarray(sols.pi[best]), lam_c.copy()
             )
@@ -832,22 +1096,36 @@ class GeoAdaptiveReplanner:
     in ONE ``solve_batch`` call
     (the ``GeoSpec`` is a pytree: a candidate sweep over client mixes is
     a single vmapped program). Candidates are arbitrated by geo rollouts
-    from the live queue state (``run_geo_segment_raw`` under the fitted
-    per-pair service family), falling back to the analytic composed bound
-    when no ``carry``/``key`` is given.
+    from the live queue state — batched like the plain loop
+    (:func:`batched_rollout_scores` with the geo segment kernel) and
+    scored under the composed empirical ``objective`` (tenant weights and
+    deadlines bind geo arbitration exactly as they bind solves), falling
+    back to the analytic composed bound when no ``carry``/``key`` is
+    given.
     """
 
     k: np.ndarray  # (r,) MDS k_i per file
     cost: np.ndarray  # (m,) per-node cost V_j
     theta: float
     estimator: EwmaMomentEstimator  # prior/updates carry (C, m) arrays
+    # tenant mix: candidate solves optimize the composed geo objective and
+    # rollout arbitration scores candidates under the SAME spec (shared
+    # device empirical objective) — geo replans honor per-class weights
+    # and deadlines exactly like the non-geo loop
+    objective: ObjectiveSpec | None = None
     thetas: tuple[float, ...] | None = None
     max_iters: int = 400
     rollout_requests: int = 600
+    # batched-arbitration knobs; see AdaptiveReplanner for semantics
+    rollout_seeds: int = 1
+    rollout_batched: bool = True
+    rollout_devices: str = "auto"
     replans: int = 0
     # per-replan solver telemetry (mirrors AdaptiveReplanner)
     solve_iters: list = dataclasses.field(default_factory=list)
     solve_walls: list = dataclasses.field(default_factory=list)
+    rollout_walls: list = dataclasses.field(default_factory=list)
+    last_scores: Any = None
 
     def replan(
         self,
@@ -895,6 +1173,7 @@ class GeoAdaptiveReplanner:
                     jnp.asarray(self.cost, jnp.float32),
                     float(t),
                     mask=mask,
+                    objective=self.objective,
                 )
                 probs.append(prob)
                 starts.append(feasible_uniform(mask, prob.k))
@@ -907,30 +1186,65 @@ class GeoAdaptiveReplanner:
         self.solve_walls.append(time.perf_counter() - t0)
         self.replans += 1
 
-        cost_term = self.theta * np.asarray(sols.cost)
         if carry is not None and key is not None:
-            from repro.storage.simulator import run_geo_segment_raw
-
             d, srv_rates = self.estimator.fitted_shifted_exp()  # (C, m) each
             lam_cs_j = jnp.asarray(lam_cs, jnp.float32)
-            scores = []
-            for i in range(len(probs)):
-                _, res = run_geo_segment_raw(
+            t0 = time.perf_counter()
+            if self.rollout_batched:
+                # geo twin of the fused arbitration: all candidates rolled
+                # out, scored under the composed empirical objective (NOT
+                # a bare latency mean — tenant weights/deadlines bind geo
+                # arbitration too), cost-folded, and argmin'd on device
+                scores, best_dev = batched_rollout_scores(
                     carry,
                     key,
-                    sols.pi[i],
+                    sols.pi,
                     lam_cs_j,
                     jnp.asarray(d, jnp.float32),
                     jnp.asarray(srv_rates, jnp.float32),
                     jnp.asarray(avail),
-                    self.rollout_requests,
+                    self.theta * sols.cost,  # device-side cost fold
+                    self.objective,
+                    n_clients=r,
+                    n_requests=self.rollout_requests,
+                    rollout_seeds=self.rollout_seeds,
+                    devices=self.rollout_devices,
+                    geo=True,
                 )
-                scores.append(
-                    float(np.asarray(res.latency).mean()) + float(cost_term[i])
-                )
+                best = int(best_dev)
+                self.last_scores = scores[: len(probs)]
+            else:
+                from repro.storage.simulator import run_geo_segment_raw
+
+                cost_term = self.theta * np.asarray(sols.cost)
+                scores = []
+                for i in range(len(probs)):
+                    _, res = run_geo_segment_raw(
+                        carry,
+                        key,
+                        sols.pi[i],
+                        lam_cs_j,
+                        jnp.asarray(d, jnp.float32),
+                        jnp.asarray(srv_rates, jnp.float32),
+                        jnp.asarray(avail),
+                        self.rollout_requests,
+                    )
+                    scores.append(
+                        empirical_objective(
+                            np.asarray(res.latency),
+                            np.asarray(res.file_id),
+                            self.objective,
+                        )
+                        + float(cost_term[i])
+                    )
+                best = int(np.argmin(scores))
+                self.last_scores = np.asarray(scores)
+            self.rollout_walls.append(time.perf_counter() - t0)
         else:
+            cost_term = self.theta * np.asarray(sols.cost)
             scores = (np.asarray(sols.latency_tight) + cost_term).tolist()
-        best = int(np.argmin(scores))
+            best = int(np.argmin(scores))
+            self.last_scores = np.asarray(scores)
         if sols.iterations is not None:
             it = np.asarray(sols.iterations)
             self.solve_iters.append(int(it[best] if it.ndim else it))

@@ -84,7 +84,9 @@ from .simulator import (
     generate_workload,
     init_carry,
     per_class_latency_stats,
+    run_geo_segment_batch,
     run_geo_segment_raw,
+    run_segment_batch,
     run_segment_raw,
     simulate,
     simulate_fleet,

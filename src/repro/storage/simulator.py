@@ -746,6 +746,88 @@ def _run_geo_segment(
 run_geo_segment_raw = jax.jit(_run_geo_segment, static_argnames=("n_requests",))
 
 
+# ---------------------------------------------------------------------------
+# Candidate-batched rollouts: every candidate plan (x every rollout seed)
+# simulated in ONE program — the replanner's arbitration surface.
+# ---------------------------------------------------------------------------
+
+
+def _run_segment_candidates(
+    carry: SimCarry,
+    keys: Array,
+    pi_stack: Array,
+    lam: Array,
+    overheads: Array,
+    rates: Array,
+    avail: Array,
+    n_requests: int,
+    ttl: Array | None = None,
+    hit_latency: Array | float = 0.0,
+) -> SegmentResult:
+    """Roll out a (B, r, m) stack of candidate plans from ONE queue state.
+
+    The candidate axis vmaps over :func:`_run_segment` with the carry,
+    segment parameters, and PRNG ``keys`` broadcast — *common random
+    numbers*: every candidate sees the identical arrival stream, service
+    draws, and Madow/spare randomness, so score differences are purely
+    plan differences (and at one seed the per-candidate latency stream is
+    bitwise the stream ``run_segment_raw`` produces for that plan alone).
+    ``keys`` is a (K,) key array — a seed axis nested inside the candidate
+    axis for variance-reduced arbitration; callers wanting the bitwise
+    K=1 contract pass ``key[None]`` (the unsplit key), mirroring the
+    fleet path's ``n_chunks == 1`` convention. Every field of the
+    returned :class:`SegmentResult` carries leading (B, K) axes; the
+    advanced carry is not returned — rollouts are hypothetical, the real
+    segment still advances the caller's carry.
+    """
+
+    def one(key: Array, pi: Array) -> SegmentResult:
+        return _run_segment(
+            carry, key, pi, lam, overheads, rates, avail, n_requests,
+            ttl, hit_latency,
+        )[1]
+
+    return jax.vmap(lambda pi: jax.vmap(lambda k: one(k, pi))(keys))(
+        jnp.asarray(pi_stack)
+    )
+
+
+def _run_geo_segment_candidates(
+    carry: SimCarry,
+    keys: Array,
+    pi_stack: Array,
+    lam_cs: Array,
+    overheads_cs: Array,
+    rates_cs: Array,
+    avail: Array,
+    n_requests: int,
+) -> GeoSegmentResult:
+    """Geo twin of :func:`_run_segment_candidates`: (B, K) batched
+    :func:`_run_geo_segment` rollouts under common random numbers."""
+
+    def one(key: Array, pi: Array) -> GeoSegmentResult:
+        return _run_geo_segment(
+            carry, key, pi, lam_cs, overheads_cs, rates_cs, avail, n_requests
+        )[1]
+
+    return jax.vmap(lambda pi: jax.vmap(lambda k: one(k, pi))(keys))(
+        jnp.asarray(pi_stack)
+    )
+
+
+# Jitted candidate-batched entry points. Positional signatures mirror the
+# single-plan `run_segment_raw` / `run_geo_segment_raw` with (keys (K,),
+# pi_stack (B, r, m)) replacing (key, pi); results gain leading (B, K)
+# axes. `serving.router.batched_rollout_scores` fuses these with device
+# scoring + argmin into the replanner's one-host-sync arbitration.
+run_segment_batch = jax.jit(
+    _run_segment_candidates, static_argnames=("n_requests",)
+)
+run_geo_segment_batch = jax.jit(
+    _run_geo_segment_candidates, static_argnames=("n_requests",)
+)
+
+
 def simulate_geo_segment(
     key: Array,
     pi: Array,
