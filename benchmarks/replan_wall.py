@@ -197,6 +197,55 @@ def run(*, seed: int = 0, smoke: bool = False) -> list[dict]:
                     )
                 )
 
+    # --- plan_sweep materialization hoist ------------------------------
+    # Router.plan_sweep used to read `float(sols.latency_tight[i])` and
+    # `np.asarray(sols.pi[i])` per sweep point — 2 blocking host syncs
+    # per theta. The hoisted form (the shipped code) materializes each
+    # stacked array ONCE and indexes numpy thereafter. Time both over the
+    # same solved batch, with a bit-identical parity rider.
+    n_thetas = 16 if smoke else 32
+    sweep_sols = _candidates(cluster, n_thetas)
+
+    def sweep_legacy():
+        out = [
+            (np.asarray(sweep_sols.pi[i]), float(sweep_sols.latency_tight[i]))
+            for i in range(n_thetas)
+        ]
+        return out
+
+    def sweep_hoisted():
+        pi_np = np.asarray(sweep_sols.pi)
+        lat_np = np.asarray(sweep_sols.latency_tight)
+        return [(pi_np[i], float(lat_np[i])) for i in range(n_thetas)]
+
+    legacy_out, hoisted_out = sweep_legacy(), sweep_hoisted()
+    for (p_l, b_l), (p_h, b_h) in zip(legacy_out, hoisted_out):
+        np.testing.assert_array_equal(p_l, p_h)  # bit-identical plans
+        assert b_l == b_h, (b_l, b_h)
+    t_hoist, t_legacy = time_interleaved([sweep_hoisted, sweep_legacy], repeats)
+    rows.append(
+        dict(
+            mode="sweep_hoisted",
+            n_candidates=n_thetas,
+            rollout_seeds=0,
+            n_requests=0,
+            host_syncs=2,  # one per stacked array, whole sweep
+            wall_ms=round(1e3 * t_hoist, 3),
+            speedup_vs_loop=round(t_legacy / t_hoist, 2),
+        )
+    )
+    rows.append(
+        dict(
+            mode="sweep_legacy",
+            n_candidates=n_thetas,
+            rollout_seeds=0,
+            n_requests=0,
+            host_syncs=2 * n_thetas,  # np.asarray(pi[i]) + float(lat[i]) each
+            wall_ms=round(1e3 * t_legacy, 3),
+            speedup_vs_loop=1.0,
+        )
+    )
+
     emit(rows, "replan_wall")
 
     assert speedup_at_16 is not None and speedup_at_16 >= SPEEDUP_FLOOR_ALWAYS, (

@@ -444,6 +444,7 @@ def duality_gap(
     prefix = jnp.cumsum(sorted_g, axis=-1)
     lin_min = jnp.take_along_axis(prefix, (k - 1)[..., None], axis=-1)[..., 0]
     gap = jnp.sum(g * pi, axis=(-2, -1)) - jnp.sum(lin_min, axis=-1)
+    # jaxcheck: JX001 ok diagnostic API contract returns a host float
     return float(gap)
 
 
@@ -530,10 +531,12 @@ def resolve_incremental(
     sol = solve(sub, pi0=jnp.asarray(pi0), **solve_kw)
 
     pi_new = pi_np.copy()
+    # jaxcheck: JX001 ok end-of-resolve scatter into the host plan, one sync
     pi_new[moved_idx] = np.asarray(sol.pi[:n_moved])
     lam_new = plan.cluster_lam.copy()
     lam_new[moved_idx] = new_lam[moved_idx]
     return (
         FactoredPlan(h, jnp.asarray(pi_new), lam_new),
+        # jaxcheck: JX001 ok iteration count crosses to host once per resolve
         IncrementalInfo(n_moved, C, int(sol.iterations), rows),
     )

@@ -53,6 +53,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import Array
 
+from repro import diag
+
 from .geo import GeoSpec, geo_eq_varq
 from .latency_bound import file_latency_bounds
 from .objectives import (
@@ -564,17 +566,21 @@ def solve(
     pi = project_capped_simplex(pi, prob.k, mask)
 
     if mode == "merged":
-        sol, iters = _solve_merged_device(
-            pi,
-            prob._replace(mask=None),
-            mask,
-            jnp.asarray(beta, jnp.float32),
-            jnp.asarray(lr, jnp.float32),
-            jnp.asarray(eps, jnp.float32),
-            max_iters,
-        )
+        with diag.hot_path(
+            "core.solve_merged", compiled=(_solve_merged_device,)
+        ):
+            sol, iters = _solve_merged_device(
+                pi,
+                prob._replace(mask=None),
+                mask,
+                jnp.asarray(beta, jnp.float32),
+                jnp.asarray(lr, jnp.float32),
+                jnp.asarray(eps, jnp.float32),
+                max_iters,
+            )
         # single host sync at the end: trim the NaN-padded trace
         return sol._replace(
+            # jaxcheck: JX001 ok deliberate end-of-solve trace trim, one sync
             objective_trace=sol.objective_trace[: int(iters) + 1],
             iterations=iters,
         )

@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import diag
 from repro.core import (
     FactoredPlan,
     Hierarchy,
@@ -109,8 +110,10 @@ class Router:
         sol = solve(prob, max_iters=max_iters)
         return cls(
             pool=pool,
+            # jaxcheck: JX001 ok end-of-plan materialization, single sync
             pi=np.asarray(sol.pi),
             hedge=hedge,
+            # jaxcheck: JX001 ok scalar leaves the solver exactly once
             latency_bound=float(sol.latency_tight),
         )
 
@@ -152,12 +155,18 @@ class Router:
             for theta in thetas
         ]
         sols = solve_batch(probs, max_iters=max_iters)
+        # ONE materialization for the whole sweep — indexing the device
+        # arrays per theta would cost a host sync per candidate
+        # jaxcheck: JX001 ok end-of-sweep materialization, single sync
+        pi_np = np.asarray(sols.pi)
+        # jaxcheck: JX001 ok end-of-sweep materialization, single sync
+        lat_np = np.asarray(sols.latency_tight)
         return [
             cls(
                 pool=pool,
-                pi=np.asarray(sols.pi[i]),
+                pi=pi_np[i],
                 hedge=hedge,
-                latency_bound=float(sols.latency_tight[i]),
+                latency_bound=float(lat_np[i]),
             )
             for i in range(len(probs))
         ]
@@ -185,8 +194,14 @@ class Router:
             for j in range(self.pool.m)
         ]
         sols = solve_batch(probs, max_iters=max_iters)
+        # ONE materialization for all m failure plans (was one device
+        # sync per replica: np.asarray(sols.pi[j]) inside the dict comp)
+        # jaxcheck: JX001 ok end-of-solve materialization, single sync
+        pi_np = np.asarray(sols.pi)
+        # jaxcheck: JX001 ok end-of-solve materialization, single sync
+        lat_np = np.asarray(sols.latency_tight)
         failover = {
-            j: (np.asarray(sols.pi[j]), float(sols.latency_tight[j]))
+            j: (pi_np[j], float(lat_np[j]))
             for j in range(self.pool.m)
         }
         return dataclasses.replace(
@@ -214,7 +229,9 @@ class Router:
         sol = solve(self._masked_problem([replica], class_rates, theta), max_iters=150)
         return dataclasses.replace(
             self,
+            # jaxcheck: JX001 ok end-of-solve materialization, single sync
             pi=np.asarray(sol.pi),
+            # jaxcheck: JX001 ok scalar leaves the solver exactly once
             latency_bound=float(sol.latency_tight),
             failover={},
             failover_inputs=None,
@@ -453,6 +470,7 @@ def _arbitrate_device(
     return scores, jnp.argmin(scores)
 
 
+@diag.hot_path("serving.batched_rollout_scores")
 def batched_rollout_scores(
     carry,
     key,
@@ -873,6 +891,7 @@ class AdaptiveReplanner:
                     hit_latency=0.0 if hit_lat is None else hit_lat,
                     devices=self.rollout_devices,
                 )
+                # jaxcheck: JX001 ok the ONE host sync per replan (arbitration argmin)
                 best = int(best_dev)
                 self.last_scores = scores[: len(probs)]
             else:
@@ -1211,6 +1230,7 @@ class GeoAdaptiveReplanner:
                     devices=self.rollout_devices,
                     geo=True,
                 )
+                # jaxcheck: JX001 ok the ONE host sync per replan (arbitration argmin)
                 best = int(best_dev)
                 self.last_scores = scores[: len(probs)]
             else:

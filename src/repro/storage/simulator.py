@@ -64,6 +64,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import Array
 
+from repro import diag
 from repro.core.scheduling import madow_sample
 from repro.kernels.fcfs_queue import fcfs_scan
 from .cache import ttl_cache_scan
@@ -1200,6 +1201,7 @@ def _shard_map_compat():
     return _sm
 
 
+@diag.hot_path("storage.simulate_fleet")
 def simulate_fleet(
     key: Array,
     pi: Array,

@@ -1,0 +1,51 @@
+"""JX001 fixture: host syncs in hot code (positives) vs host-side and
+hoisted idioms (negatives). Never imported — parsed by the analyzer only."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import diag
+
+
+@jax.jit
+def traced_scalar_sync(x):
+    return float(x.sum())  # POS: float() on a tracer
+
+
+@jax.jit
+def traced_ok_shape(x):
+    n = int(x.shape[0])  # NEG: .shape is host metadata
+    return x * n
+
+
+@diag.hot_path("fixture.hot")
+def hot_materialize_loop(pi: jax.Array, lam):
+    total = 0.0
+    for i in range(3):
+        total += float(pi[i])  # POS: per-iteration device sync
+    arr = np.asarray(pi)  # POS: materialization inside a hot path
+    return total, arr
+
+
+@diag.hot_path("fixture.hot2")
+def hot_truthiness(pi: jax.Array):
+    if pi.sum() > 0:  # POS: truthiness of a device comparison
+        return pi
+    return -pi
+
+
+@diag.hot_path("fixture.hot3")
+def hot_hoisted_ok(pi: jax.Array):
+    host = np.asarray(pi)  # POS: the single deliberate sync...
+    return [float(host[i]) for i in range(3)]  # NEG: numpy after hoist
+
+
+def cold_host_code(rows):
+    # NEG: not hot, not traced — plain numpy is fine anywhere here
+    vals = np.asarray(rows)
+    return float(vals.sum())
+
+
+@jax.jit
+def traced_item(x):
+    return x.mean().item()  # POS: .item() on a device value

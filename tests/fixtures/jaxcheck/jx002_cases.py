@@ -1,0 +1,55 @@
+"""JX002 fixture: recompile hazards vs the module-scope idiom."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _impl(x, n):
+    return x * n
+
+
+# NEG: module-scope jit of a plain def is THE idiom
+good_alias = jax.jit(_impl, static_argnames=("n",))
+
+
+@jax.jit
+def decorated(x):
+    return x + 1
+
+
+# POS: jit of an already-jit-decorated function
+double_wrapped = jax.jit(decorated)
+
+# POS: jit-of-jit inline
+inline_double = jax.jit(jax.jit(lambda x: x))
+
+
+def per_call_jit(x):
+    fn = jax.jit(lambda y: y * 2)  # POS: fresh cache every call
+    return fn(x)
+
+
+def looped_jit(xs):
+    out = []
+    for x in xs:
+        f = jax.jit(lambda y: y + 1)  # POS: fresh cache every iteration
+        out.append(f(x))
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def staticky(x, mode):
+    return x if mode == "a" else -x
+
+
+def bad_static_call(x):
+    return staticky(x, mode=[1, 2])  # POS: unhashable static argument
+
+
+def bad_static_positional(x):
+    return staticky(x, jnp.zeros(3))  # POS: array fed to a static param
+
+
+def good_static_call(x):
+    return staticky(x, mode="a")  # NEG: hashable, call-stable static

@@ -1,0 +1,47 @@
+"""JX003 fixture: tracer leaks (side effects from traced code)."""
+import jax
+import jax.numpy as jnp
+
+_trace_log = []
+
+
+class Model:
+    @jax.jit
+    def step(self, x):
+        self.last = x  # POS: write to self.* from jitted code
+        return x + 1
+
+    def host_step(self, x):
+        self.last = x  # NEG: plain host method
+        return x + 1
+
+
+@jax.jit
+def leaky(x):
+    _trace_log.append(x)  # POS: mutating a closed-over list
+    return x * 2
+
+
+@jax.jit
+def global_rebind(x):
+    global _state  # POS: global from traced code
+    _state = x
+    return x
+
+
+def scan_driver(xs):
+    acc = []
+
+    def body(carry, x):
+        acc.append(x)  # POS: scan body mutates the closure
+        return carry + x, x
+
+    return jax.lax.scan(body, 0.0, xs)
+
+
+def clean_scan(xs):
+    def body(carry, x):
+        y = carry + x  # NEG: locals only, state flows through the carry
+        return y, y
+
+    return jax.lax.scan(body, 0.0, xs)

@@ -1,0 +1,32 @@
+"""JX004 fixture: nondeterminism in traced code."""
+import random
+import time
+
+import jax
+import numpy as np
+from jax import random as jrandom
+
+
+@jax.jit
+def stamped(x):
+    return x + time.time()  # POS: trace-time constant wall clock
+
+
+@jax.jit
+def np_rng(x):
+    return x + np.random.normal()  # POS: host RNG baked in at trace
+
+@jax.jit
+def py_rng(x):
+    return x * random.random()  # POS: stdlib RNG baked in at trace
+
+
+@jax.jit
+def keyed(x, key):
+    return x + jrandom.normal(key, x.shape)  # NEG: jax.random is traced
+
+
+def host_timing(fn, x):
+    t0 = time.perf_counter()  # NEG: host code may read the clock
+    y = fn(x)
+    return y, time.perf_counter() - t0

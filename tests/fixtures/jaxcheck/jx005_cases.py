@@ -1,0 +1,63 @@
+"""JX005 fixture: pytree registration drift."""
+import dataclasses
+
+import jax
+
+
+@dataclasses.dataclass
+class Good:
+    a: int
+    b: int
+
+
+def _good_flatten(t):
+    return (t.a, t.b), None
+
+
+def _good_unflatten(aux, children):
+    return Good(*children)
+
+
+# NEG: children order matches field declaration order
+jax.tree_util.register_pytree_node(Good, _good_flatten, _good_unflatten)
+
+
+@dataclasses.dataclass
+class Swapped:
+    a: int
+    b: int
+
+
+def _swapped_flatten(t):
+    return (t.b, t.a), None
+
+
+def _swapped_unflatten(aux, children):
+    return Swapped(*children)
+
+
+# POS: flatten yields (b, a) against declaration order (a, b)
+jax.tree_util.register_pytree_node(
+    Swapped, _swapped_flatten, _swapped_unflatten
+)
+
+
+@dataclasses.dataclass
+class Dropping:
+    a: int
+    b: int
+    c: int
+
+
+def _dropping_flatten(t):
+    return (t.a, t.b), None
+
+
+def _dropping_unflatten(aux, children):
+    return Dropping(*children, c=0)
+
+
+# POS: field c silently vanishes at every tree boundary
+jax.tree_util.register_pytree_node(
+    Dropping, _dropping_flatten, _dropping_unflatten
+)

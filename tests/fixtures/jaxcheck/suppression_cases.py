@@ -1,0 +1,33 @@
+"""Suppression-directive fixture: valid, preceding-line, and malformed."""
+import jax
+
+
+@jax.jit
+def suppressed_same_line(x):
+    return float(x.sum())  # jaxcheck: JX001 ok fixture demonstrates inline suppression
+
+
+@jax.jit
+def suppressed_preceding_line(x):
+    # jaxcheck: JX001 ok the directive may sit on its own comment line
+    return float(x.sum())
+
+
+@jax.jit
+def wrong_code_suppression(x):
+    return float(x.sum())  # jaxcheck: JX002 ok wrong rule, finding survives
+
+
+@jax.jit
+def reasonless_suppression(x):
+    return float(x.sum())  # jaxcheck: JX001 ok
+
+
+@jax.jit
+def missing_ok_suppression(x):
+    return float(x.sum())  # jaxcheck: JX001 because reasons
+
+
+@jax.jit
+def typo_directive(x):
+    return float(x.sum())  # jaxcheck: JX1 ok mangled code

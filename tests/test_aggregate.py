@@ -14,6 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import diag
+from repro.core.jlcm import _solve_merged_device
 from repro.core import (
     JLCMProblem,
     build_problem,
@@ -308,6 +310,28 @@ class TestResolveIncremental:
             resolve_incremental(
                 plan, plan.cluster_lam[:-1], mom, cost, 2.0
             )
+
+    def test_warm_resolve_reuses_compiled_program(self):
+        """Successive incremental re-solves with the same padded row
+        count must hit the SAME compiled merged-solver program — the
+        warm-start fast path is only fast while it never retraces."""
+        plan, mom, cost = self._plan()
+        lam_a = plan.cluster_lam.copy()
+        hot_a = np.argsort(plan.cluster_lam)[-2:]
+        lam_a[hot_a] *= 3.0
+        # warmup: compiles the padded-rows program once
+        resolve_incremental(
+            plan, lam_a, mom, cost, 2.0, threshold=0.2, **SOLVE_KW
+        )
+        lam_b = plan.cluster_lam.copy()
+        hot_b = np.argsort(plan.cluster_lam)[-4:-2]  # different movers
+        lam_b[hot_b] *= 3.0
+        with diag.CompileWatcher(_solve_merged_device) as watch:
+            _, info = resolve_incremental(
+                plan, lam_b, mom, cost, 2.0, threshold=0.2, **SOLVE_KW
+            )
+        assert info.n_resolved == 2
+        watch.assert_no_recompiles(_solve_merged_device)
 
     def test_incremental_objective_near_full_resolve(self):
         # surge a third of the traffic; the incremental plan must land

@@ -1,0 +1,277 @@
+"""The analyzer analyzed: fixture positives/negatives per rule,
+suppression handling, baseline diffing, and the docs<->registry
+meta-test. Pure AST — no jax execution, so this module is fast even on
+the 1-core CI container."""
+import sys
+from collections import Counter
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+if str(ROOT) not in sys.path:  # tools/ lives at the repo root, not src/
+    sys.path.insert(0, str(ROOT))
+
+from tools.jaxcheck import baseline as baseline_mod  # noqa: E402
+from tools.jaxcheck.base import RULES, Finding  # noqa: E402
+from tools.jaxcheck.cli import analyze_paths, main  # noqa: E402
+
+FIXTURES = ROOT / "tests" / "fixtures" / "jaxcheck"
+
+
+def findings_for(name: str, rule: str | None = None):
+    out = analyze_paths([FIXTURES / name], repo_root=ROOT)
+    if rule is not None:
+        out = [f for f in out if f.rule == rule]
+    return out
+
+
+def tagged(findings):
+    return sorted((f.qualname, f.line) for f in findings)
+
+
+class TestJX001:
+    def test_positions(self):
+        found = findings_for("jx001_cases.py", "JX001")
+        quals = Counter(f.qualname for f in found)
+        assert quals == Counter(
+            {
+                "traced_scalar_sync": 1,
+                "hot_materialize_loop": 2,
+                "hot_truthiness": 1,
+                "hot_hoisted_ok": 1,
+                "traced_item": 1,
+            }
+        )
+
+    def test_negatives(self):
+        found = findings_for("jx001_cases.py", "JX001")
+        quals = {f.qualname for f in found}
+        # host code, .shape access, and numpy-after-hoist stay silent
+        assert "cold_host_code" not in quals
+        assert "traced_ok_shape" not in quals
+
+    def test_loop_findings_carry_the_loop_note(self):
+        found = findings_for("jx001_cases.py", "JX001")
+        loopy = [
+            f
+            for f in found
+            if f.qualname == "hot_materialize_loop" and "loop" in f.message
+        ]
+        assert len(loopy) == 1  # float(pi[i]) in the for body
+
+
+class TestJX002:
+    def test_positions(self):
+        found = findings_for("jx002_cases.py", "JX002")
+        quals = Counter(f.qualname for f in found)
+        assert quals["per_call_jit"] == 1
+        assert quals["looped_jit"] == 1
+        assert quals["bad_static_call"] == 1
+        assert quals["bad_static_positional"] == 1
+        # module-scope jit-of-jit sites carry no qualname
+        assert quals[""] == 2  # double_wrapped + inline_double
+
+    def test_negatives(self):
+        found = findings_for("jx002_cases.py", "JX002")
+        snippets = " ".join(f.snippet for f in found)
+        assert "good_alias" not in snippets  # module-scope idiom is clean
+        assert 'mode="a"' not in snippets  # hashable static is clean
+
+    def test_loop_message_differs(self):
+        found = findings_for("jx002_cases.py", "JX002")
+        by_qual = {f.qualname: f.message for f in found}
+        assert "loop" in by_qual["looped_jit"]
+        assert "function body" in by_qual["per_call_jit"]
+
+
+class TestJX003:
+    def test_positions_and_negatives(self):
+        found = findings_for("jx003_cases.py", "JX003")
+        assert sorted(f.qualname for f in found) == [
+            "Model.step",
+            "global_rebind",
+            "leaky",
+            "scan_driver.body",
+        ]
+
+    def test_self_write_message(self):
+        found = findings_for("jx003_cases.py", "JX003")
+        step = next(f for f in found if f.qualname == "Model.step")
+        assert "self" in step.message
+
+
+class TestJX004:
+    def test_positions_and_negatives(self):
+        found = findings_for("jx004_cases.py", "JX004")
+        assert sorted(f.qualname for f in found) == [
+            "np_rng",
+            "py_rng",
+            "stamped",
+        ]
+        # jax.random under a `from jax import random` style alias is NOT
+        # host RNG; host-side timing helpers are fine too
+        assert all(f.qualname not in ("keyed", "host_timing") for f in found)
+
+
+class TestJX005:
+    def test_positions_and_negatives(self):
+        found = findings_for("jx005_cases.py", "JX005")
+        msgs = sorted(f.message for f in found)
+        assert len(found) == 2
+        assert any("Swapped" in m and "order" in m for m in msgs)
+        assert any("Dropping" in m and "drops" in m for m in msgs)
+        assert not any("Good" in m for m in msgs)
+
+
+class TestSuppression:
+    def test_valid_directives_suppress(self):
+        found = findings_for("suppression_cases.py", "JX001")
+        quals = sorted(f.qualname for f in found)
+        # same-line and preceding-line directives suppress; wrong-code,
+        # reasonless, ok-less, and typo'd directives do not
+        assert quals == [
+            "missing_ok_suppression",
+            "reasonless_suppression",
+            "typo_directive",
+            "wrong_code_suppression",
+        ]
+
+    def test_malformed_directives_are_jx000(self):
+        found = findings_for("suppression_cases.py", "JX000")
+        assert len(found) == 3  # reasonless + ok-less + typo
+        assert all("jaxcheck" in f.snippet for f in found)
+
+
+class TestBaseline:
+    def _finding(self, snippet="x = float(y)", qual="f"):
+        return Finding(
+            rule="JX001",
+            path="src/repro/x.py",
+            line=10,
+            qualname=qual,
+            message="m",
+            snippet=snippet,
+        )
+
+    def test_reason_is_mandatory(self, tmp_path):
+        p = tmp_path / "b.txt"
+        p.write_text("JX001\tsrc/repro/x.py::f\tx = float(y)\t\n")
+        with pytest.raises(baseline_mod.BaselineError, match="reason"):
+            baseline_mod.parse_baseline(p)
+
+    def test_roundtrip_and_diff(self, tmp_path):
+        f = self._finding()
+        p = tmp_path / "b.txt"
+        p.write_text(baseline_mod.format_baseline_line(f, "why") + "\n")
+        accepted = baseline_mod.parse_baseline(p)
+        new, stale = baseline_mod.diff_against_baseline([f], accepted)
+        assert new == [] and stale == []
+
+    def test_multiset_semantics(self, tmp_path):
+        f = self._finding()
+        p = tmp_path / "b.txt"
+        p.write_text(baseline_mod.format_baseline_line(f, "why") + "\n")
+        accepted = baseline_mod.parse_baseline(p)
+        # two identical findings, one baseline line -> one is NEW
+        new, stale = baseline_mod.diff_against_baseline([f, f], accepted)
+        assert len(new) == 1 and stale == []
+
+    def test_stale_entries_reported(self, tmp_path):
+        f = self._finding()
+        p = tmp_path / "b.txt"
+        p.write_text(
+            baseline_mod.format_baseline_line(f, "why")
+            + "\n"
+            + baseline_mod.format_baseline_line(
+                self._finding(snippet="gone = int(z)"), "fixed since"
+            )
+            + "\n"
+        )
+        accepted = baseline_mod.parse_baseline(p)
+        new, stale = baseline_mod.diff_against_baseline([f], accepted)
+        assert new == [] and len(stale) == 1
+
+    def test_line_numbers_do_not_matter(self, tmp_path):
+        f = self._finding()
+        moved = Finding(
+            rule=f.rule,
+            path=f.path,
+            line=999,
+            qualname=f.qualname,
+            message=f.message,
+            snippet=f.snippet,
+        )
+        p = tmp_path / "b.txt"
+        p.write_text(baseline_mod.format_baseline_line(f, "why") + "\n")
+        accepted = baseline_mod.parse_baseline(p)
+        new, stale = baseline_mod.diff_against_baseline([moved], accepted)
+        assert new == [] and stale == []
+
+
+class TestRepoIsClean:
+    def test_src_repro_has_no_unbaselined_findings(self):
+        """The tree the CI lint job checks, checked the same way."""
+        findings = analyze_paths([ROOT / "src" / "repro"], repo_root=ROOT)
+        accepted = baseline_mod.parse_baseline(
+            ROOT / "tools" / "jaxcheck_baseline.txt"
+        )
+        new, _ = baseline_mod.diff_against_baseline(findings, accepted)
+        assert new == [], "\n".join(f.format() for f in new)
+
+    def test_checked_in_baseline_reasons_are_real(self):
+        accepted = baseline_mod.parse_baseline(
+            ROOT / "tools" / "jaxcheck_baseline.txt"
+        )
+        assert len(accepted) > 0
+        # parse_baseline enforces nonempty; also reject placeholder text
+        text = (ROOT / "tools" / "jaxcheck_baseline.txt").read_text()
+        assert "TODO" not in text
+
+
+class TestCli:
+    def test_exit_codes(self, tmp_path, capsys):
+        bad = tmp_path / "bad.py"
+        bad.write_text(
+            "import jax\n\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    return float(x.sum())\n"
+        )
+        assert main([str(bad)]) == 1
+        out = capsys.readouterr().out
+        assert "JX001" in out and "hint:" in out
+        clean = tmp_path / "clean.py"
+        clean.write_text("def f(x):\n    return x\n")
+        assert main([str(clean)]) == 0
+        assert main([str(tmp_path / "missing.py")]) == 2
+
+    def test_baseline_flow(self, tmp_path, capsys):
+        bad = tmp_path / "bad.py"
+        bad.write_text(
+            "import jax\n\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    return float(x.sum())\n"
+        )
+        skel = tmp_path / "baseline.txt"
+        assert main([str(bad), "--write-baseline", str(skel)]) == 0
+        assert "TODO" in skel.read_text()
+        # skeleton reasons parse (nonempty), so the run goes green
+        assert main([str(bad), "--baseline", str(skel)]) == 0
+        # empty baseline -> the finding is NEW again
+        empty = tmp_path / "empty.txt"
+        empty.write_text("")
+        assert main([str(bad), "--baseline", str(empty)]) == 1
+
+
+class TestDocsRegistryParity:
+    def test_every_documented_rule_exists_and_vice_versa(self):
+        import re
+
+        doc = (ROOT / "docs" / "diagnostics.md").read_text()
+        documented = set(re.findall(r"###\s*(JX\d{3})", doc))
+        assert documented == set(RULES), (
+            "docs/diagnostics.md rule catalog and tools.jaxcheck.base."
+            "RULES must list the same rules"
+        )

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import diag
 from repro.core import (
     JLCMProblem,
     empirical_objective,
@@ -310,17 +311,18 @@ class TestBatchedScores:
         key = jax.random.key(8)
         carry = init_carry(cluster.m)
         _arbitrate_device._clear_cache()
-        for n_cand in (3, 4, 2):
-            sols = _pi_stack(cluster, n_cand)
-            # devices="never" pins the pad to _pow2(n) so the expected
-            # program count is device-count independent
-            batched_rollout_scores(
-                carry, key, sols.pi, lam, d, rates, avail,
-                jnp.zeros((n_cand,), jnp.float32), None,
-                n_clients=LAM.size, n_requests=N_REQ, devices="never",
-            )
+        with diag.CompileWatcher(_arbitrate_device) as watch:
+            for n_cand in (3, 4, 2):
+                sols = _pi_stack(cluster, n_cand)
+                # devices="never" pins the pad to _pow2(n) so the
+                # expected program count is device-count independent
+                batched_rollout_scores(
+                    carry, key, sols.pi, lam, d, rates, avail,
+                    jnp.zeros((n_cand,), jnp.float32), None,
+                    n_clients=LAM.size, n_requests=N_REQ, devices="never",
+                )
         # 3 and 4 cands share the 4-lane program; 2 pads to 2 lanes
-        assert _arbitrate_device._cache_size() == 2
+        watch.assert_compiles(_arbitrate_device, exactly=2)
 
     def test_pow2(self):
         assert [_pow2(n) for n in (1, 2, 3, 4, 5, 9)] == [1, 2, 4, 4, 8, 16]

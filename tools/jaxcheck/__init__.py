@@ -1,0 +1,8 @@
+"""jaxcheck: repo-specific static analysis for the device-boundary
+contracts this codebase depends on (see docs/diagnostics.md).
+
+Rules live in :mod:`tools.jaxcheck.rules`, the registry in
+:mod:`tools.jaxcheck.base`, repo knobs in :mod:`tools.jaxcheck.config`.
+Pure stdlib — importable (and runnable) with no third-party packages.
+"""
+from tools.jaxcheck.base import RULES, Finding, Rule  # noqa: F401

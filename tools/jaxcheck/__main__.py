@@ -1,0 +1,5 @@
+import sys
+
+from tools.jaxcheck.cli import main
+
+sys.exit(main())

@@ -1,0 +1,558 @@
+"""AST machinery: file contexts, import resolution, traced-function
+discovery, and the device-taint engine rule JX001 is built on.
+
+Pure stdlib (``ast`` + ``re``): the CI container is 1-core and installs
+nothing — parsing ~90k tokens of source takes well under a second.
+
+The central idea is a per-function **device taint** pass: names bound
+from ``jax.*`` / ``jax.numpy.*`` calls, from the repo's known
+device-producing functions (``config.DEVICE_PRODUCERS``), or from the
+parameters of traced code are device values; attribute/subscript/
+arithmetic propagate taint; ``numpy.*``, ``float()``, ``.tolist()`` and
+friends kill it (the result lives on the host). A host-sync *check*
+(``float(x)``, ``np.asarray(x)``, ``x.item()``, truthiness, iteration)
+only fires on a tainted expression — which is what keeps JX001 usable
+on a codebase with ~500 textual ``float(``/``np.asarray`` sites, almost
+all of them host-side and silent.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import re
+from pathlib import Path
+
+from tools.jaxcheck import config
+from tools.jaxcheck.base import Finding, normalize_snippet
+
+SUPPRESS_RE = re.compile(
+    r"#\s*jaxcheck:\s*(?P<codes>JX\d{3}(?:\s*,\s*JX\d{3})*)\s*"
+    r"(?P<ok>ok\b)?\s*(?P<reason>.*)$"
+)
+
+# numpy entry points that materialize their argument on the host
+NUMPY_MATERIALIZERS = frozenset(
+    {"asarray", "array", "asanyarray", "ascontiguousarray"}
+)
+SCALAR_COERCIONS = frozenset({"float", "int", "bool", "complex"})
+# jax.* callables whose RESULT lives on the host (everything else under
+# the jax namespace is assumed to produce device values)
+JAX_HOST_FNS = frozenset(
+    {
+        "device_get",
+        "devices",
+        "local_devices",
+        "device_count",
+        "local_device_count",
+        "default_backend",
+        "make_mesh",
+        "clear_caches",
+        "tree_structure",
+    }
+)
+# builtins that pass their operand's device-ness through to iteration
+TAINT_PROPAGATORS = frozenset(
+    {"enumerate", "zip", "reversed", "sorted", "iter", "list", "tuple"}
+)
+
+
+# ---------------------------------------------------------------------------
+# Dotted-name utilities.
+# ---------------------------------------------------------------------------
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``jax.lax.scan`` for nested Attribute/Name chains, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def last_segment(dotted: str) -> str:
+    return dotted.rsplit(".", 1)[-1]
+
+
+# ---------------------------------------------------------------------------
+# Per-function metadata.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    node: ast.AST  # FunctionDef | AsyncFunctionDef | Lambda
+    qualname: str
+    parent: "FunctionInfo | None"
+    params: tuple[str, ...]
+    jitted: bool = False  # jax.jit decorator or name = jax.jit(fn, ...)
+    jit_decorated: bool = False  # @jax.jit on the def itself
+    hot_decorated: bool = False  # @hot_path(...) from repro.diag
+    traced: bool = False  # jitted, a scan/vmap body, or nested in one
+    hot_listed: bool = False  # matches config.HOT_PATHS for this module
+    static_params: frozenset[str] = frozenset()
+
+    @property
+    def is_hot(self) -> bool:
+        return (
+            self.hot_listed or self.hot_decorated or self.traced or self.jitted
+        )
+
+
+def _param_names(node: ast.AST) -> tuple[str, ...]:
+    a = node.args
+    params = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        params.append(a.vararg.arg)
+    if a.kwarg:
+        params.append(a.kwarg.arg)
+    return tuple(params)
+
+
+# ---------------------------------------------------------------------------
+# File context.
+# ---------------------------------------------------------------------------
+
+
+class FileContext:
+    """Everything the rules need to know about one parsed source file."""
+
+    def __init__(self, path: Path, rel: str, source: str):
+        self.path = path
+        self.rel = rel
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=str(path))
+        # import alias -> absolute module path ("np" -> "numpy",
+        # "jnp" -> "jax.numpy", "random" -> "jax.random" when the file
+        # does `from jax import random`)
+        self.aliases: dict[str, str] = {}
+        # suppression directives: line -> (codes, has_ok, reason)
+        self.suppress: dict[int, tuple[frozenset[str], bool, str]] = {}
+        # function registry (definition order; parents precede children)
+        self.functions: list[FunctionInfo] = []
+        self._by_node: dict[int, FunctionInfo] = {}
+        # module-level `name = jax.jit(fn, static_argnames=...)` aliases:
+        # alias -> (target def name, static argnames)
+        self.jit_aliases: dict[str, tuple[str, frozenset[str]]] = {}
+        self._collect_imports()
+        self._collect_suppressions()
+        self._collect_functions()
+        self._mark_traced()
+
+    # -- collection ---------------------------------------------------
+
+    def _collect_imports(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.aliases[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0]
+                    )
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.aliases[a.asname or a.name] = (
+                        f"{node.module}.{a.name}"
+                    )
+
+    def _collect_suppressions(self) -> None:
+        for i, line in enumerate(self.lines, start=1):
+            if "jaxcheck" not in line:
+                continue
+            hash_pos = line.find("#")
+            if hash_pos < 0:
+                continue
+            m = SUPPRESS_RE.search(line, hash_pos)
+            if not m:
+                continue
+            codes = frozenset(
+                c.strip() for c in m.group("codes").split(",")
+            )
+            ok = bool(m.group("ok"))
+            reason = m.group("reason").strip()
+            self.suppress[i] = (codes, ok, reason)
+
+    def resolve(self, dotted: str | None) -> str | None:
+        """Rewrite the root of a dotted name through the import table:
+        ``np.asarray`` -> ``numpy.asarray``, ``jnp.sum`` ->
+        ``jax.numpy.sum``. Unknown roots pass through unchanged."""
+        if dotted is None:
+            return None
+        root, _, rest = dotted.partition(".")
+        base = self.aliases.get(root, root)
+        return f"{base}.{rest}" if rest else base
+
+    def _decorator_info(self, node) -> tuple[bool, bool, frozenset[str]]:
+        """(jitted, hot_decorated, static_params) from a def's decorators."""
+        jitted = hot = False
+        static: set[str] = set()
+        for dec in node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            name = self.resolve(dotted_name(target)) or ""
+            if last_segment(name) == "hot_path" or name.endswith(
+                "diag.hot_path"
+            ):
+                hot = True
+            if name in ("jax.jit", "jit"):
+                jitted = True
+                if isinstance(dec, ast.Call):
+                    static |= self._static_names(dec)
+            # functools.partial(jax.jit, static_argnames=...)
+            if (
+                isinstance(dec, ast.Call)
+                and last_segment(name) == "partial"
+                and dec.args
+            ):
+                inner = self.resolve(dotted_name(dec.args[0])) or ""
+                if inner in ("jax.jit", "jit"):
+                    jitted = True
+                    static |= self._static_names(dec)
+        return jitted, hot, frozenset(static)
+
+    @staticmethod
+    def _static_names(call: ast.Call) -> set[str]:
+        names: set[str] = set()
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                for el in ast.walk(kw.value):
+                    if isinstance(el, ast.Constant) and isinstance(
+                        el.value, str
+                    ):
+                        names.add(el.value)
+        return names
+
+    def _hot_patterns(self) -> tuple[str, ...]:
+        for mod_pat, fn_pats in config.HOT_PATHS.items():
+            if fnmatch.fnmatch(self.rel, mod_pat):
+                return fn_pats
+        return ()
+
+    def _collect_functions(self) -> None:
+        hot_pats = self._hot_patterns()
+
+        def visit(node: ast.AST, parent: FunctionInfo | None, prefix: str):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(
+                    child, (ast.FunctionDef, ast.AsyncFunctionDef)
+                ):
+                    qual = f"{prefix}{child.name}" if prefix else child.name
+                    jitted, hot, static = self._decorator_info(child)
+                    info = FunctionInfo(
+                        node=child,
+                        qualname=qual,
+                        parent=parent,
+                        params=_param_names(child),
+                        jitted=jitted,
+                        jit_decorated=jitted,
+                        hot_decorated=hot,
+                        static_params=static,
+                        hot_listed=any(
+                            fnmatch.fnmatch(qual, p) for p in hot_pats
+                        ),
+                    )
+                    self.functions.append(info)
+                    self._by_node[id(child)] = info
+                    visit(child, info, f"{qual}.")
+                elif isinstance(child, ast.Lambda):
+                    qual = f"{prefix}<lambda>"
+                    info = FunctionInfo(
+                        node=child,
+                        qualname=qual,
+                        parent=parent,
+                        params=_param_names(child),
+                    )
+                    self.functions.append(info)
+                    self._by_node[id(child)] = info
+                    visit(child, info, f"{qual}.")
+                elif isinstance(child, ast.ClassDef):
+                    visit(child, parent, f"{prefix}{child.name}.")
+                else:
+                    visit(child, parent, prefix)
+
+        visit(self.tree, None, "")
+        # module-level `name = jax.jit(fn, ...)` marks fn jitted and
+        # registers the alias for the static-argument rule
+        by_name = {
+            f.node.name: f
+            for f in self.functions
+            if isinstance(f.node, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and f.parent is None
+        }
+        for stmt in self.tree.body:
+            if not (
+                isinstance(stmt, ast.Assign)
+                and len(stmt.targets) == 1
+                and isinstance(stmt.targets[0], ast.Name)
+                and isinstance(stmt.value, ast.Call)
+            ):
+                continue
+            fn_name = self.resolve(dotted_name(stmt.value.func)) or ""
+            if fn_name not in ("jax.jit", "jit"):
+                continue
+            static = frozenset(self._static_names(stmt.value))
+            target_def = (
+                stmt.value.args[0].id
+                if stmt.value.args
+                and isinstance(stmt.value.args[0], ast.Name)
+                else None
+            )
+            self.jit_aliases[stmt.targets[0].id] = (
+                target_def or "",
+                static,
+            )
+            if target_def and target_def in by_name:
+                info = by_name[target_def]
+                info.jitted = True
+                info.static_params = info.static_params | static
+
+    def _mark_traced(self) -> None:
+        # seed: jit-decorated defs trace their bodies
+        for f in self.functions:
+            if f.jitted:
+                f.traced = True
+        # defs / lambdas passed to scan/vmap/while_loop/... are traced
+        by_name_scope: dict[tuple[int, str], FunctionInfo] = {}
+        for f in self.functions:
+            if isinstance(f.node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scope = id(f.parent.node) if f.parent else 0
+                by_name_scope[(scope, f.node.name)] = f
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = self.resolve(dotted_name(node.func)) or ""
+            if last_segment(name) not in config.TRACE_CONSUMERS:
+                continue
+            enclosing = self._enclosing(node)
+            scope = id(enclosing.node) if enclosing else 0
+            for arg in list(node.args) + [k.value for k in node.keywords]:
+                if isinstance(arg, ast.Lambda):
+                    info = self._by_node.get(id(arg))
+                    if info:
+                        info.traced = True
+                elif isinstance(arg, ast.Name):
+                    info = by_name_scope.get((scope, arg.id))
+                    if info:
+                        info.traced = True
+        # nested defs inside traced functions are traced; iterate to a
+        # fixpoint (definition order puts parents first, so one extra
+        # sweep suffices in practice)
+        changed = True
+        while changed:
+            changed = False
+            for f in self.functions:
+                if not f.traced and f.parent is not None and f.parent.traced:
+                    f.traced = True
+                    changed = True
+
+    def _enclosing(self, node: ast.AST) -> FunctionInfo | None:
+        """Innermost function containing ``node`` (by position)."""
+        best: FunctionInfo | None = None
+        for f in self.functions:
+            fn = f.node
+            if (
+                hasattr(node, "lineno")
+                and fn.body[0].lineno
+                <= node.lineno
+                <= (fn.end_lineno or fn.body[-1].end_lineno)
+                if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))
+                else False
+            ):
+                if best is None or (
+                    fn.lineno >= best.node.lineno
+                ):
+                    best = f
+        return best
+
+    # -- finding helpers ---------------------------------------------
+
+    def finding(
+        self, rule: str, node: ast.AST, qualname: str, message: str
+    ) -> Finding:
+        line = getattr(node, "lineno", 1)
+        snippet = (
+            self.lines[line - 1] if 0 < line <= len(self.lines) else ""
+        )
+        return Finding(
+            rule=rule,
+            path=self.rel,
+            line=line,
+            qualname=qualname,
+            message=message,
+            snippet=normalize_snippet(snippet),
+        )
+
+    def is_suppressed(self, f: Finding) -> bool:
+        """Same-line directive, or one on an immediately preceding
+        comment-only line. Malformed directives never suppress (rule
+        JX000 reports them separately)."""
+        for line in (f.line, f.line - 1):
+            entry = self.suppress.get(line)
+            if entry is None:
+                continue
+            if line == f.line - 1:
+                stripped = self.lines[line - 1].lstrip()
+                if not stripped.startswith("#"):
+                    continue
+            codes, ok, reason = entry
+            if f.rule in codes and ok and reason:
+                return True
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Device-taint engine (rule JX001's core).
+# ---------------------------------------------------------------------------
+
+
+class TaintEnv:
+    """Flow-sensitive-enough name taint for one function body."""
+
+    def __init__(self, ctx: FileContext, info: FunctionInfo):
+        self.ctx = ctx
+        self.info = info
+        self.tainted: set[str] = set()
+        if info.traced:
+            # every traced param is a tracer — syncing one raises at
+            # trace time anyway; flag it statically
+            self.tainted |= set(info.params) - set(info.static_params)
+            self.tainted.discard("self")
+        elif info.hot_decorated and not isinstance(info.node, ast.Lambda):
+            # hot-path functions take mixed host/device params; only
+            # Array-annotated ones are declared device values
+            a = info.node.args
+            for arg in a.posonlyargs + a.args + a.kwonlyargs:
+                if arg.annotation is not None and self._is_array_ann(
+                    arg.annotation
+                ):
+                    self.tainted.add(arg.arg)
+
+    def _is_array_ann(self, ann: ast.AST) -> bool:
+        for n in ast.walk(ann):
+            name = self.ctx.resolve(dotted_name(n))
+            if name in (
+                "jax.Array",
+                "jax.numpy.ndarray",
+                "jaxtyping.Array",
+            ):
+                return True
+        return False
+
+    # -- expression taint ---------------------------------------------
+
+    def taint(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in config.HOST_ATTRS:
+                return False
+            return self.taint(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.taint(node.value)
+        if isinstance(node, ast.Call):
+            return self._call_taint(node)
+        if isinstance(node, ast.BinOp):
+            return self.taint(node.left) or self.taint(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.taint(node.operand)
+        if isinstance(node, ast.Compare):
+            # `x is None` yields a python bool even for tracers
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False
+            return self.taint(node.left) or any(
+                self.taint(c) for c in node.comparators
+            )
+        if isinstance(node, ast.BoolOp):
+            return any(self.taint(v) for v in node.values)
+        if isinstance(node, ast.IfExp):
+            return self.taint(node.body) or self.taint(node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.taint(e) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.taint(node.value)
+        if isinstance(node, ast.NamedExpr):
+            return self.taint(node.value)
+        return False
+
+    def _call_taint(self, node: ast.Call) -> bool:
+        name = self.ctx.resolve(dotted_name(node.func))
+        if name is not None:
+            seg = last_segment(name)
+            if name.startswith("jax.") or name == "jax":
+                return seg not in JAX_HOST_FNS
+            if name.startswith("numpy.") or name.startswith("builtins."):
+                return False
+            if seg in config.HOST_SINKS or seg in SCALAR_COERCIONS:
+                return False
+            if seg in TAINT_PROPAGATORS:
+                return any(self.taint(a) for a in node.args)
+            if any(
+                fnmatch.fnmatch(seg, p) for p in config.DEVICE_PRODUCERS
+            ):
+                return True
+        # method call on a tainted receiver stays on device (x.mean(),
+        # sols.pi.sum(), carry._replace(...))
+        if isinstance(node.func, ast.Attribute):
+            if node.func.attr in ("tolist", "item"):
+                return False
+            return self.taint(node.func.value)
+        return False
+
+    # -- assignment updates -------------------------------------------
+
+    def assign(self, target: ast.AST, value_tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            if value_tainted:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self.assign(el, value_tainted)
+        elif isinstance(target, ast.Starred):
+            self.assign(target.value, value_tainted)
+        # Attribute / Subscript targets: no name to (un)taint
+
+
+def iter_source_files(paths: list[Path], repo_root: Path) -> list[Path]:
+    files: list[Path] = []
+    for p in paths:
+        if p.is_file() and p.suffix == ".py":
+            files.append(p)
+        elif p.is_dir():
+            files.extend(
+                f
+                for f in sorted(p.rglob("*.py"))
+                if not any(part.startswith(".") for part in f.parts)
+            )
+    return files
+
+
+def build_contexts(
+    paths: list[Path], repo_root: Path
+) -> tuple[list[FileContext], list[Finding]]:
+    """Parse every file; unparsable files become findings, not crashes."""
+    contexts: list[FileContext] = []
+    errors: list[Finding] = []
+    for f in iter_source_files(paths, repo_root):
+        try:
+            rel = f.resolve().relative_to(repo_root.resolve()).as_posix()
+        except ValueError:
+            rel = f.as_posix()
+        try:
+            contexts.append(FileContext(f, rel, f.read_text()))
+        except SyntaxError as e:
+            errors.append(
+                Finding(
+                    rule="JX000",
+                    path=rel,
+                    line=e.lineno or 1,
+                    qualname="",
+                    message=f"file does not parse: {e.msg}",
+                    snippet="",
+                )
+            )
+    return contexts, errors

@@ -1,0 +1,107 @@
+"""Finding/rule primitives shared by every jaxcheck module (pure stdlib)."""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_WS = re.compile(r"\s+")
+
+
+def normalize_snippet(line: str) -> str:
+    """Whitespace-collapsed source line: the line-number-proof part of a
+    finding's identity (baseline keys survive unrelated edits above)."""
+    return _WS.sub(" ", line.strip())
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str  # "JX001"
+    path: str  # repo-relative, forward slashes
+    line: int  # 1-indexed (for display; NOT part of the baseline key)
+    qualname: str  # dotted function path within the module ("" = module)
+    message: str
+    snippet: str  # normalized source line
+
+    @property
+    def key(self) -> tuple[str, str, str, str]:
+        """Baseline identity: stable across line-number churn."""
+        return (self.rule, self.path, self.qualname, self.snippet)
+
+    def format(self) -> str:
+        where = f"{self.path}:{self.line}"
+        if self.qualname:
+            where += f" [{self.qualname}]"
+        return f"{self.rule} {where}: {self.message}\n    {self.snippet}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    code: str
+    title: str
+    hint: str  # one-line fix hint printed with every new finding
+
+
+RULES: dict[str, Rule] = {}
+
+
+def register(rule: Rule) -> Rule:
+    if rule.code in RULES:
+        raise ValueError(f"duplicate rule {rule.code}")
+    RULES[rule.code] = rule
+    return rule
+
+
+# JX000 is the analyzer's own hygiene rule: malformed suppression
+# directives must fail the run (a typo'd `# jaxcheck:` comment would
+# otherwise silently stop suppressing).
+register(
+    Rule(
+        "JX000",
+        "malformed jaxcheck suppression directive",
+        "write `# jaxcheck: JX00N ok <reason>` — the reason is mandatory",
+    )
+)
+register(
+    Rule(
+        "JX001",
+        "host sync in a device hot path",
+        "keep device values on device: batch the loop, score with the "
+        "device objective, and materialize ONCE outside the hot path "
+        "(np.asarray the whole stack, then index the numpy array)",
+    )
+)
+register(
+    Rule(
+        "JX002",
+        "recompile hazard",
+        "construct jax.jit once at module scope; feed static_argnames "
+        "only hashable, call-stable values (pad dynamic sizes to a "
+        "power of two instead of making them static)",
+    )
+)
+register(
+    Rule(
+        "JX003",
+        "tracer leak out of traced code",
+        "return the value through the traced function's outputs (carry "
+        "/ scan ys) instead of writing to self/globals/closures — the "
+        "write happens at trace time, once, with a tracer",
+    )
+)
+register(
+    Rule(
+        "JX004",
+        "nondeterminism in traced code",
+        "thread a jax.random key (split per step) instead of host RNG / "
+        "clocks; pass wall-clock inputs in as arguments",
+    )
+)
+register(
+    Rule(
+        "JX005",
+        "pytree registration drift",
+        "make flatten children follow the dataclass field order and "
+        "unflatten consume them in the same order (or use a NamedTuple "
+        "/ register_dataclass and delete the hand-written pair)",
+    )
+)

@@ -1,0 +1,82 @@
+"""Baseline file: the set of findings the repo has accepted, each with
+a mandatory human-written reason.
+
+Format (one finding per line, tab-separated)::
+
+    JX001<TAB>src/repro/serving/router.py::AdaptiveReplanner.replan<TAB>best = int(best_dev)<TAB>the ONE deliberate sync per replan
+
+Keys are ``(rule, path, qualname, normalized snippet)`` — no line
+numbers, so unrelated edits above a finding never invalidate the
+baseline. Semantics are a **multiset**: two identical snippets in the
+same function need two baseline lines. A reasonless line is a parse
+error (exit 2), not a warning — the baseline is documentation, not a
+mute button.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from pathlib import Path
+
+from tools.jaxcheck.base import Finding
+
+_SEP = "\t"
+
+
+class BaselineError(ValueError):
+    """Malformed baseline file (wrong arity, unknown rule, no reason)."""
+
+
+def parse_baseline(path: Path) -> Counter:
+    """-> Counter of finding keys accepted by the baseline."""
+    accepted: Counter = Counter()
+    for i, raw in enumerate(path.read_text().splitlines(), start=1):
+        line = raw.rstrip("\n")
+        if not line.strip() or line.lstrip().startswith("#"):
+            continue
+        parts = line.split(_SEP)
+        if len(parts) != 4:
+            raise BaselineError(
+                f"{path}:{i}: expected 4 tab-separated fields "
+                f"(rule, path::qualname, snippet, reason), got "
+                f"{len(parts)}"
+            )
+        rule, where, snippet, reason = (p.strip() for p in parts)
+        if not (rule.startswith("JX") and len(rule) == 5):
+            raise BaselineError(f"{path}:{i}: bad rule code {rule!r}")
+        if "::" not in where:
+            raise BaselineError(
+                f"{path}:{i}: location must be `path::qualname` "
+                f"(qualname may be empty), got {where!r}"
+            )
+        if not reason:
+            raise BaselineError(
+                f"{path}:{i}: baseline entries require a reason — "
+                f"explain why this finding is accepted"
+            )
+        fpath, qualname = where.split("::", 1)
+        accepted[(rule, fpath, qualname, snippet)] += 1
+    return accepted
+
+
+def diff_against_baseline(
+    findings: list[Finding], accepted: Counter
+) -> tuple[list[Finding], list[tuple]]:
+    """-> (new findings not covered by the baseline, stale baseline
+    keys with no matching finding). Multiset semantics throughout."""
+    budget = Counter(accepted)
+    new: list[Finding] = []
+    for f in findings:
+        if budget[f.key] > 0:
+            budget[f.key] -= 1
+        else:
+            new.append(f)
+    stale = sorted(
+        key for key, count in budget.items() for _ in range(count)
+    )
+    return new, stale
+
+
+def format_baseline_line(f: Finding, reason: str) -> str:
+    return _SEP.join(
+        (f.rule, f"{f.path}::{f.qualname}", f.snippet, reason)
+    )

@@ -1,0 +1,135 @@
+"""Command line: ``python -m tools.jaxcheck src/repro [--baseline F]``.
+
+Exit codes: 0 clean (or fully baselined), 1 new findings, 2 usage /
+baseline-format errors. Each new finding prints with its rule's fix
+hint; stale baseline entries warn but do not fail (they indicate the
+baseline can shrink — shrink it in the same PR that fixed the code).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from tools.jaxcheck import baseline as baseline_mod
+from tools.jaxcheck.analyzer import build_contexts
+from tools.jaxcheck.base import RULES, Finding
+from tools.jaxcheck.rules import ALL_CHECKS, build_jit_registry
+
+
+def analyze_paths(
+    paths: list[Path], repo_root: Path | None = None
+) -> list[Finding]:
+    """Run every rule over ``paths``; suppressed findings are dropped,
+    sorted by (path, line, rule)."""
+    root = repo_root or Path.cwd()
+    contexts, errors = build_contexts(paths, root)
+    registry = build_jit_registry(contexts)
+    by_rel = {ctx.rel: ctx for ctx in contexts}
+    findings: list[Finding] = list(errors)
+    for check in ALL_CHECKS:
+        findings.extend(check(contexts, registry))
+    kept = [
+        f
+        for f in findings
+        if f.rule == "JX000"
+        or f.path not in by_rel
+        or not by_rel[f.path].is_suppressed(f)
+    ]
+    kept.sort(key=lambda f: (f.path, f.line, f.rule))
+    return kept
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.jaxcheck",
+        description="repo-specific JAX static analysis (JX001-JX005)",
+    )
+    parser.add_argument("paths", nargs="+", type=Path)
+    parser.add_argument(
+        "--baseline",
+        type=Path,
+        default=None,
+        help="accepted-findings file (tab-separated, reasons mandatory)",
+    )
+    parser.add_argument(
+        "--write-baseline",
+        type=Path,
+        default=None,
+        help="write current findings as a baseline skeleton (reasons "
+        "filled with TODO; edit before committing) and exit 0",
+    )
+    args = parser.parse_args(argv)
+
+    for p in args.paths:
+        if not p.exists():
+            print(f"jaxcheck: no such path: {p}", file=sys.stderr)
+            return 2
+
+    findings = analyze_paths(args.paths)
+
+    if args.write_baseline is not None:
+        lines = [
+            "# jaxcheck baseline: rule<TAB>path::qualname<TAB>snippet"
+            "<TAB>reason",
+            "# Reasons are mandatory. Shrink this file whenever you fix "
+            "a finding.",
+        ]
+        lines += [
+            baseline_mod.format_baseline_line(
+                f, "TODO: justify or fix"
+            )
+            for f in findings
+        ]
+        args.write_baseline.write_text("\n".join(lines) + "\n")
+        print(
+            f"jaxcheck: wrote {len(findings)} finding(s) to "
+            f"{args.write_baseline}"
+        )
+        return 0
+
+    accepted = None
+    if args.baseline is not None:
+        try:
+            accepted = baseline_mod.parse_baseline(args.baseline)
+        except (OSError, baseline_mod.BaselineError) as e:
+            print(f"jaxcheck: baseline error: {e}", file=sys.stderr)
+            return 2
+
+    if accepted is not None:
+        new, stale = baseline_mod.diff_against_baseline(
+            findings, accepted
+        )
+    else:
+        new, stale = findings, []
+
+    for key in stale:
+        rule, path, qualname, snippet = key
+        print(
+            f"jaxcheck: stale baseline entry (fixed? shrink the "
+            f"baseline): {rule} {path}::{qualname} | {snippet}"
+        )
+
+    if not new:
+        n = len(findings)
+        suffix = (
+            f" ({n} baselined finding(s))" if accepted is not None and n
+            else ""
+        )
+        print(f"jaxcheck: clean{suffix}")
+        return 0
+
+    hinted: set[str] = set()
+    for f in new:
+        print(f.format())
+        if f.rule not in hinted:
+            rule = RULES.get(f.rule)
+            if rule is not None:
+                print(f"    hint: {rule.hint}")
+            hinted.add(f.rule)
+    print(
+        f"jaxcheck: {len(new)} new finding(s). Fix them, suppress "
+        f"inline (`# jaxcheck: JX00N ok <reason>`), or add a "
+        f"reasoned baseline entry."
+    )
+    return 1

@@ -1,0 +1,143 @@
+"""Repo-specific knobs: which functions are device hot paths, which
+calls produce device arrays, and which callables trace their arguments.
+
+`jaxcheck` is deliberately NOT a generic linter — its precision comes
+from knowing this repo's device boundary. Three sources mark a function
+"hot" for rule JX001 (host sync in a device hot path):
+
+1. the ``@hot_path`` decorator registry (``src/repro/diag.py``) — any
+   function carrying that decorator, anywhere;
+2. the per-module lists below (``HOT_PATHS``): the solver, simulator,
+   kernel, and replan/arbitration surfaces whose latency contracts the
+   closed loop depends on;
+3. traced code: jit-decorated functions and scan/vmap/while bodies are
+   implicitly hot (a host sync there is a trace-time bug, not just a
+   slowdown).
+
+``fnmatch`` patterns match the function's dotted qualname within the
+module (``AdaptiveReplanner.replan``), so ``*`` covers whole modules and
+``*.replan`` covers a method on any class.
+"""
+from __future__ import annotations
+
+# module path (repo-relative, fnmatch) -> function qualname patterns
+HOT_PATHS: dict[str, tuple[str, ...]] = {
+    # solver: the merged mode IS the product; debug/nested host loops are
+    # deliberately host-driven and stay out of hot scope
+    "src/repro/core/jlcm.py": (
+        "solve",
+        "solve_batch",
+        "_solve_merged_device*",
+        "_merged_step",
+        "_device_merged_loop",
+        "_finalize",
+    ),
+    "src/repro/core/aggregate.py": (
+        "solve_hierarchical",
+        "resolve_incremental",
+        "materialize",
+        "evaluate_pi",
+        "duality_gap",
+    ),
+    # simulator: every segment/fleet kernel and its vmapped/sharded wrappers
+    "src/repro/storage/simulator.py": (
+        "simulate",
+        "simulate_segment*",
+        "_run_*",
+        "run_segment*",
+        "run_geo_segment*",
+        "simulate_fleet",
+        "fleet_one*",
+        "_fleet_*",
+        "simulate_geo_segment*",
+        "generate_*",
+        "ttl_cache_scan",
+    ),
+    # kernels are hot wall to wall
+    "src/repro/kernels/*.py": ("*",),
+    # router: the replan/arbitration paths (NOT the estimators — EWMA
+    # updates are host-side numpy by design)
+    "src/repro/serving/router.py": (
+        "batched_rollout_scores",
+        "_arbitrate_device",
+        "_rollout_lane_score",
+        "*.replan",
+        "*.plan",
+        "*.plan_sweep",
+        "*.precompute_failover",
+        "*.drop_replica",
+    ),
+}
+
+# Call targets whose RESULT is a device value. Matched against the last
+# dotted segment of the called name (``solve_batch`` matches both
+# ``solve_batch(...)`` and ``jlcm.solve_batch(...)``); fnmatch patterns.
+DEVICE_PRODUCERS: tuple[str, ...] = (
+    "solve",
+    "solve_batch",
+    "solve_hierarchical",
+    "resolve_incremental",
+    "materialize",
+    "evaluate_pi",
+    "batched_rollout_scores",
+    "run_segment_raw",
+    "run_geo_segment_raw",
+    "run_segment_batch",
+    "run_geo_segment_batch",
+    "simulate",
+    "simulate_fleet",
+    "simulate_segment",
+    "simulate_segments",
+    "fleet_one_raw",
+    "feasible_uniform",
+    "project_capped_simplex",
+    "madow_sample",
+    "madow_sample_batch",
+    "moments",
+    "gf256_matmul*",
+    "encode_batch",
+    "decode_batch",
+    "decode_requests",
+    "fcfs_*",
+    "empirical_objective_device",
+    "_solve_merged_device*",
+    "_device_merged_loop",
+    "_run_segment",
+    "_run_geo_segment",
+)
+
+# Callables that TRACE a function argument (their bodies are traced code
+# for rules JX001/JX003/JX004). Matched on the last dotted segment.
+TRACE_CONSUMERS: tuple[str, ...] = (
+    "scan",
+    "while_loop",
+    "fori_loop",
+    "cond",
+    "switch",
+    "vmap",
+    "pmap",
+    "grad",
+    "value_and_grad",
+    "checkpoint",
+    "remat",
+    "shard_map",
+    "custom_vjp",
+    "custom_jvp",
+    "associative_scan",
+)
+
+# Attribute names whose access yields HOST metadata even on device
+# arrays (kills taint — `x.shape[0]` is a python int inside jit).
+HOST_ATTRS: frozenset[str] = frozenset(
+    {"shape", "ndim", "dtype", "size", "sharding", "device", "devices"}
+)
+
+# Calls whose result is a HOST value regardless of argument taint.
+HOST_SINKS: tuple[str, ...] = (
+    "len",
+    "range",
+    "device_get",
+    "tolist",
+    "cpu_count",
+    "perf_counter",
+)

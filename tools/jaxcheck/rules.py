@@ -1,0 +1,846 @@
+"""Rule implementations JX000–JX005.
+
+Each rule is a function ``(contexts, registry) -> list[Finding]`` over
+the parsed :class:`~tools.jaxcheck.analyzer.FileContext` set plus the
+cross-file jit registry (rule JX002 needs call sites in one file to see
+``static_argnames`` declared in another). Suppression filtering happens
+in the orchestrator, not here.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+
+from tools.jaxcheck import config
+from tools.jaxcheck.analyzer import (
+    JAX_HOST_FNS,
+    NUMPY_MATERIALIZERS,
+    SCALAR_COERCIONS,
+    FileContext,
+    FunctionInfo,
+    TaintEnv,
+    dotted_name,
+    last_segment,
+)
+from tools.jaxcheck.base import Finding
+
+DIRECTIVE_ATTEMPT_RE = re.compile(r"#\s*jaxcheck\s*:")
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+# mutating methods that leak state when called on a closed-over object
+# from traced code
+_MUTATORS = frozenset(
+    {
+        "append",
+        "extend",
+        "insert",
+        "add",
+        "update",
+        "setdefault",
+        "pop",
+        "popitem",
+        "remove",
+        "discard",
+        "clear",
+        "sort",
+    }
+)
+
+_NONDET_EXACT = frozenset(
+    {
+        "time.time",
+        "time.time_ns",
+        "time.perf_counter",
+        "time.perf_counter_ns",
+        "time.monotonic",
+        "time.monotonic_ns",
+        "datetime.datetime.now",
+        "datetime.datetime.utcnow",
+        "datetime.date.today",
+        "uuid.uuid4",
+        "uuid.uuid1",
+        "os.urandom",
+    }
+)
+_NONDET_PREFIXES = ("random.", "numpy.random.", "secrets.")
+
+_UNHASHABLE_BUILTINS = frozenset({"list", "dict", "set", "bytearray"})
+
+
+def _own_nodes(fn_node: ast.AST):
+    """Walk a function's body without descending into nested functions
+    (those are analyzed in their own right)."""
+    if isinstance(fn_node, ast.Lambda):
+        roots = [fn_node.body]
+    else:
+        roots = list(fn_node.body)
+    stack = list(roots)
+    while stack:
+        n = stack.pop()
+        yield n
+        for c in ast.iter_child_nodes(n):
+            if isinstance(c, _FUNC_NODES):
+                continue
+            stack.append(c)
+
+
+def _parent_map(tree: ast.AST) -> dict[int, ast.AST]:
+    return {
+        id(child): node
+        for node in ast.walk(tree)
+        for child in ast.iter_child_nodes(node)
+    }
+
+
+# ---------------------------------------------------------------------------
+# JX000 — malformed suppression directives.
+# ---------------------------------------------------------------------------
+
+
+def check_jx000(
+    contexts: list[FileContext], registry: dict
+) -> list[Finding]:
+    out: list[Finding] = []
+    for ctx in contexts:
+        for line_no, (codes, ok, reason) in sorted(ctx.suppress.items()):
+            if ok and reason:
+                continue
+            missing = "an `ok`" if not ok else "a reason"
+            out.append(
+                Finding(
+                    rule="JX000",
+                    path=ctx.rel,
+                    line=line_no,
+                    qualname="",
+                    message=(
+                        f"suppression for {', '.join(sorted(codes))} is "
+                        f"missing {missing} — reasons are mandatory"
+                    ),
+                    snippet=ctx.lines[line_no - 1].strip(),
+                )
+            )
+        # directive attempts the grammar did not recognize at all
+        for i, line in enumerate(ctx.lines, start=1):
+            if i in ctx.suppress or "jaxcheck" not in line:
+                continue
+            hash_pos = line.find("#")
+            if hash_pos < 0:
+                continue
+            if DIRECTIVE_ATTEMPT_RE.search(line, hash_pos):
+                out.append(
+                    Finding(
+                        rule="JX000",
+                        path=ctx.rel,
+                        line=i,
+                        qualname="",
+                        message=(
+                            "unparseable jaxcheck directive (expected "
+                            "`# jaxcheck: JX00N ok <reason>`)"
+                        ),
+                        snippet=line.strip(),
+                    )
+                )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# JX001 — host sync in a device hot path.
+# ---------------------------------------------------------------------------
+
+
+class _SyncChecker:
+    def __init__(self, ctx: FileContext, info: FunctionInfo):
+        self.ctx = ctx
+        self.info = info
+        self.env = TaintEnv(ctx, info)
+        self.findings: list[Finding] = []
+        self.loop_depth = 0
+
+    def run(self) -> list[Finding]:
+        node = self.info.node
+        if isinstance(node, ast.Lambda):
+            self._check_expr(node.body)
+        else:
+            self._block(node.body)
+        return self.findings
+
+    # -- statements ---------------------------------------------------
+
+    def _block(self, stmts) -> None:
+        for st in stmts:
+            self._stmt(st)
+
+    def _stmt(self, st: ast.stmt) -> None:
+        if isinstance(st, _FUNC_NODES[:2]):
+            # nested defs get their own pass when hot; record the name
+            # as a host-bound local
+            self.env.tainted.discard(st.name)
+            return
+        if isinstance(st, ast.ClassDef):
+            return
+        if isinstance(st, ast.Assign):
+            self._check_expr(st.value)
+            t = self.env.taint(st.value)
+            for tgt in st.targets:
+                self.env.assign(tgt, t)
+        elif isinstance(st, ast.AnnAssign):
+            if st.value is not None:
+                self._check_expr(st.value)
+                self.env.assign(st.target, self.env.taint(st.value))
+        elif isinstance(st, ast.AugAssign):
+            self._check_expr(st.value)
+            if self.env.taint(st.value):
+                self.env.assign(st.target, True)
+        elif isinstance(st, (ast.Expr, ast.Return)):
+            if st.value is not None:
+                self._check_expr(st.value)
+        elif isinstance(st, ast.If):
+            self._truthiness(st.test)
+            self._check_expr(st.test)
+            self._block(st.body)
+            self._block(st.orelse)
+        elif isinstance(st, ast.While):
+            self._truthiness(st.test)
+            self._check_expr(st.test)
+            self.loop_depth += 1
+            self._block(st.body)
+            self.loop_depth -= 1
+            self._block(st.orelse)
+        elif isinstance(st, ast.For):
+            self._check_expr(st.iter)
+            if self.env.taint(st.iter):
+                self._emit(
+                    st.iter,
+                    "iterating a device array — one implicit host sync "
+                    "per element",
+                )
+                self.env.assign(st.target, True)
+            else:
+                self.env.assign(st.target, False)
+            self.loop_depth += 1
+            self._block(st.body)
+            self.loop_depth -= 1
+            self._block(st.orelse)
+        elif isinstance(st, ast.With):
+            for item in st.items:
+                self._check_expr(item.context_expr)
+                if item.optional_vars is not None:
+                    self.env.assign(
+                        item.optional_vars,
+                        self.env.taint(item.context_expr),
+                    )
+            self._block(st.body)
+        elif isinstance(st, ast.Try):
+            self._block(st.body)
+            for h in st.handlers:
+                self._block(h.body)
+            self._block(st.orelse)
+            self._block(st.finalbody)
+        elif isinstance(st, ast.Assert):
+            self._truthiness(st.test)
+            self._check_expr(st.test)
+        elif isinstance(st, ast.Raise):
+            if st.exc is not None:
+                self._check_expr(st.exc)
+
+    # -- expressions --------------------------------------------------
+
+    def _truthiness(self, test: ast.expr) -> None:
+        if self.env.taint(test):
+            self._emit(
+                test,
+                "truthiness of a device value blocks on the device "
+                "(`bool()` forces a host sync)",
+            )
+
+    def _check_expr(self, node: ast.expr) -> None:
+        if isinstance(node, ast.Lambda):
+            return
+        if isinstance(node, ast.Call):
+            self._check_call(node)
+        elif isinstance(node, ast.IfExp):
+            self._truthiness(node.test)
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                self._check_expr(child)
+            elif isinstance(child, ast.keyword):
+                self._check_expr(child.value)
+            elif isinstance(child, ast.comprehension):
+                self._check_expr(child.iter)
+                if self.env.taint(child.iter):
+                    self._emit(
+                        child.iter,
+                        "comprehension over a device array — one "
+                        "implicit host sync per element",
+                    )
+                for cond in child.ifs:
+                    self._truthiness(cond)
+                    self._check_expr(cond)
+
+    def _check_call(self, node: ast.Call) -> None:
+        name = self.ctx.resolve(dotted_name(node.func))
+        if name is not None:
+            seg = last_segment(name)
+            if (
+                seg in SCALAR_COERCIONS
+                and name == seg  # the builtin, not a method
+                and node.args
+                and self.env.taint(node.args[0])
+            ):
+                self._emit(
+                    node,
+                    f"`{seg}()` on a device value forces a host sync",
+                )
+                return
+            if (
+                name.startswith("numpy.")
+                and seg in NUMPY_MATERIALIZERS
+                and node.args
+                and self.env.taint(node.args[0])
+            ):
+                self._emit(
+                    node,
+                    f"`np.{seg}()` materializes a device array on the host",
+                )
+                return
+        if isinstance(node.func, ast.Attribute):
+            if node.func.attr in ("item", "tolist") and self.env.taint(
+                node.func.value
+            ):
+                self._emit(
+                    node,
+                    f"`.{node.func.attr}()` on a device value forces a "
+                    f"host sync",
+                )
+
+    def _emit(self, node: ast.AST, message: str) -> None:
+        if self.loop_depth > 0:
+            message += " (inside a loop: one device round-trip per iteration)"
+        self.findings.append(
+            self.ctx.finding("JX001", node, self.info.qualname, message)
+        )
+
+
+def check_jx001(
+    contexts: list[FileContext], registry: dict
+) -> list[Finding]:
+    out: list[Finding] = []
+    for ctx in contexts:
+        for info in ctx.functions:
+            if info.is_hot:
+                out.extend(_SyncChecker(ctx, info).run())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# JX002 — recompile hazards.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class JitEntry:
+    """Signature facts for one jitted callable, for call-site checks."""
+
+    name: str
+    params: tuple[str, ...]
+    static: frozenset[str]
+
+
+def build_jit_registry(contexts: list[FileContext]) -> dict[str, JitEntry]:
+    registry: dict[str, JitEntry] = {}
+    for ctx in contexts:
+        defs = {
+            f.node.name: f
+            for f in ctx.functions
+            if isinstance(f.node, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        for f in ctx.functions:
+            if f.jitted and f.static_params:
+                registry[f.node.name] = JitEntry(
+                    f.node.name, f.params, f.static_params
+                )
+        for alias, (target, static) in ctx.jit_aliases.items():
+            if not static:
+                continue
+            params = defs[target].params if target in defs else ()
+            registry[alias] = JitEntry(alias, params, static)
+    return registry
+
+
+def _is_unhashable_expr(ctx: FileContext, node: ast.expr) -> str | None:
+    """A human description of why ``node`` is unhashable, or None."""
+    if isinstance(node, (ast.List, ast.ListComp)):
+        return "a list"
+    if isinstance(node, (ast.Dict, ast.DictComp)):
+        return "a dict"
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return "a set"
+    if isinstance(node, ast.GeneratorExp):
+        return "a generator"
+    if isinstance(node, ast.Call):
+        name = ctx.resolve(dotted_name(node.func)) or ""
+        seg = last_segment(name)
+        if name == seg and seg in _UNHASHABLE_BUILTINS:
+            return f"a {seg}"
+        if name.startswith(("numpy.", "jax.numpy.")) and seg in (
+            "asarray",
+            "array",
+            "zeros",
+            "ones",
+            "arange",
+            "empty",
+        ):
+            return "an array"
+    return None
+
+
+def check_jx002(
+    contexts: list[FileContext], registry: dict[str, JitEntry]
+) -> list[Finding]:
+    out: list[Finding] = []
+    for ctx in contexts:
+        parents = _parent_map(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = ctx.resolve(dotted_name(node.func)) or ""
+            if name in ("jax.jit", "jit"):
+                out.extend(_jit_call_site(ctx, node, parents))
+            elif last_segment(name) in registry and not name.startswith(
+                ("jax.", "numpy.")
+            ):
+                out.extend(
+                    _static_args(ctx, node, registry[last_segment(name)])
+                )
+        # double-jit decorators on one def
+        for f in ctx.functions:
+            if isinstance(f.node, ast.Lambda):
+                continue
+            jit_decos = 0
+            for dec in f.node.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                dname = ctx.resolve(dotted_name(target)) or ""
+                if dname in ("jax.jit", "jit"):
+                    jit_decos += 1
+            if jit_decos > 1:
+                out.append(
+                    ctx.finding(
+                        "JX002",
+                        f.node,
+                        f.qualname,
+                        "stacked jax.jit decorators — the outer jit "
+                        "retraces the inner one's dispatch wrapper",
+                    )
+                )
+    return out
+
+
+def _jit_call_site(
+    ctx: FileContext, node: ast.Call, parents: dict[int, ast.AST]
+) -> list[Finding]:
+    out: list[Finding] = []
+    qual = ""
+    in_function = in_loop = False
+    cur: ast.AST = node
+    while True:
+        parent = parents.get(id(cur))
+        if parent is None:
+            break
+        if isinstance(parent, (ast.For, ast.While)) and cur in (
+            list(parent.body) + list(parent.orelse)
+        ):
+            in_loop = True
+        if isinstance(parent, ast.Lambda):
+            in_function = True
+        elif isinstance(parent, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # decorators evaluate at module scope — only the body (and
+            # anything nested under it) counts as "inside" the function
+            if cur not in parent.decorator_list:
+                in_function = True
+        if in_function:
+            info = ctx._enclosing(node)
+            qual = info.qualname if info else ""
+            break
+        cur = parent
+    if in_loop:
+        out.append(
+            ctx.finding(
+                "JX002",
+                node,
+                qual,
+                "jax.jit constructed inside a loop — a fresh compilation "
+                "cache is created (and thrown away) every iteration",
+            )
+        )
+    elif in_function:
+        out.append(
+            ctx.finding(
+                "JX002",
+                node,
+                qual,
+                "jax.jit constructed inside a function body — the "
+                "compiled-program cache dies with each call; hoist the "
+                "jit to module scope",
+            )
+        )
+    # jit-of-jit
+    inner = node.args[0] if node.args else None
+    if isinstance(inner, ast.Call):
+        inner_name = ctx.resolve(dotted_name(inner.func)) or ""
+        if inner_name in ("jax.jit", "jit"):
+            out.append(
+                ctx.finding(
+                    "JX002",
+                    node,
+                    qual,
+                    "jit-of-jit: the outer jit traces the inner jit's "
+                    "dispatch machinery",
+                )
+            )
+    elif isinstance(inner, ast.Name):
+        # `alias = jax.jit(plain_def)` is the normal module-scope idiom
+        # (the assignment is what MAKES the def jitted) — only flag when
+        # the target is jit-DECORATED or is itself a jit alias
+        target = inner.id
+        already = (
+            target in ctx.jit_aliases
+            and ctx.jit_aliases[target][0] != target
+        ) or any(
+            f.jit_decorated
+            and isinstance(f.node, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and f.node.name == target
+            for f in ctx.functions
+        )
+        if already:
+            out.append(
+                ctx.finding(
+                    "JX002",
+                    node,
+                    qual,
+                    f"jit-of-jit: `{target}` is already jit-compiled",
+                )
+            )
+    return out
+
+
+def _static_args(
+    ctx: FileContext, node: ast.Call, entry: JitEntry
+) -> list[Finding]:
+    out: list[Finding] = []
+    info = ctx._enclosing(node)
+    qual = info.qualname if info else ""
+    bound: list[tuple[str, ast.expr]] = []
+    for i, arg in enumerate(node.args):
+        if i < len(entry.params):
+            bound.append((entry.params[i], arg))
+    for kw in node.keywords:
+        if kw.arg is not None:
+            bound.append((kw.arg, kw.value))
+    for pname, expr in bound:
+        if pname not in entry.static:
+            continue
+        why = _is_unhashable_expr(ctx, expr)
+        if why:
+            out.append(
+                ctx.finding(
+                    "JX002",
+                    expr,
+                    qual,
+                    f"static argument `{pname}` of `{entry.name}` fed "
+                    f"{why} — unhashable statics raise at dispatch, and "
+                    f"per-call-varying ones recompile every call",
+                )
+            )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# JX003 — tracer leaks out of traced code.
+# ---------------------------------------------------------------------------
+
+
+def _local_names(fn_node: ast.AST, params: tuple[str, ...]) -> set[str]:
+    local = set(params)
+    for n in _own_nodes(fn_node):
+        if isinstance(n, ast.Assign):
+            for t in n.targets:
+                local |= _target_names(t)
+        elif isinstance(n, (ast.AnnAssign, ast.AugAssign)):
+            local |= _target_names(n.target)
+        elif isinstance(n, ast.For):
+            local |= _target_names(n.target)
+        elif isinstance(n, ast.With):
+            for item in n.items:
+                if item.optional_vars is not None:
+                    local |= _target_names(item.optional_vars)
+        elif isinstance(n, ast.comprehension):
+            local |= _target_names(n.target)
+        elif isinstance(n, ast.NamedExpr):
+            local |= _target_names(n.target)
+        elif isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            local.add(n.name)
+    return local
+
+
+def _target_names(t: ast.AST) -> set[str]:
+    names: set[str] = set()
+    if isinstance(t, ast.Name):
+        names.add(t.id)
+    elif isinstance(t, (ast.Tuple, ast.List)):
+        for el in t.elts:
+            names |= _target_names(el)
+    elif isinstance(t, ast.Starred):
+        names |= _target_names(t.value)
+    return names
+
+
+def _attr_base(node: ast.AST) -> str | None:
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def check_jx003(
+    contexts: list[FileContext], registry: dict
+) -> list[Finding]:
+    out: list[Finding] = []
+    for ctx in contexts:
+        for info in ctx.functions:
+            if not info.traced:
+                continue
+            local = _local_names(info.node, info.params)
+            for n in _own_nodes(info.node):
+                out.extend(_leak_sites(ctx, info, n, local))
+    return out
+
+
+def _leak_sites(
+    ctx: FileContext,
+    info: FunctionInfo,
+    n: ast.AST,
+    local: set[str],
+) -> list[Finding]:
+    out: list[Finding] = []
+
+    def leak(node, what: str):
+        out.append(
+            ctx.finding(
+                "JX003",
+                node,
+                info.qualname,
+                f"{what} from traced code — this runs ONCE at trace "
+                f"time with a tracer, not per call",
+            )
+        )
+
+    if isinstance(n, (ast.Global, ast.Nonlocal)):
+        leak(n, f"`{'global' if isinstance(n, ast.Global) else 'nonlocal'}` "
+                f"rebind of {', '.join(n.names)}")
+        return out
+    targets: list[ast.AST] = []
+    if isinstance(n, ast.Assign):
+        targets = list(n.targets)
+    elif isinstance(n, (ast.AugAssign, ast.AnnAssign)):
+        targets = [n.target]
+    for t in targets:
+        if isinstance(t, (ast.Attribute, ast.Subscript)):
+            base = _attr_base(t)
+            if base == "self":
+                leak(t, "write to `self.*`")
+            elif base is not None and base not in local:
+                leak(t, f"write into closed-over/global `{base}`")
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for el in t.elts:
+                if isinstance(el, (ast.Attribute, ast.Subscript)):
+                    base = _attr_base(el)
+                    if base == "self" or (
+                        base is not None and base not in local
+                    ):
+                        leak(el, f"write into `{base}`")
+    if (
+        isinstance(n, ast.Expr)
+        and isinstance(n.value, ast.Call)
+        and isinstance(n.value.func, ast.Attribute)
+        and n.value.func.attr in _MUTATORS
+    ):
+        base = _attr_base(n.value.func.value)
+        if base == "self" or (base is not None and base not in local):
+            leak(
+                n.value,
+                f"mutating call `.{n.value.func.attr}()` on "
+                f"closed-over `{base}`",
+            )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# JX004 — nondeterminism in traced code.
+# ---------------------------------------------------------------------------
+
+
+def check_jx004(
+    contexts: list[FileContext], registry: dict
+) -> list[Finding]:
+    out: list[Finding] = []
+    for ctx in contexts:
+        for info in ctx.functions:
+            if not info.traced:
+                continue
+            for n in _own_nodes(info.node):
+                if not isinstance(n, ast.Call):
+                    continue
+                raw = dotted_name(n.func)
+                if raw is None:
+                    continue
+                root = raw.split(".", 1)[0]
+                if root not in ctx.aliases:
+                    continue  # not an imported module — local name
+                name = ctx.resolve(raw) or ""
+                hit = name in _NONDET_EXACT or any(
+                    name.startswith(p) for p in _NONDET_PREFIXES
+                )
+                if hit:
+                    out.append(
+                        ctx.finding(
+                            "JX004",
+                            n,
+                            info.qualname,
+                            f"`{raw}()` inside traced code is evaluated "
+                            f"once at trace time and baked into the "
+                            f"compiled program as a constant",
+                        )
+                    )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# JX005 — pytree registration drift.
+# ---------------------------------------------------------------------------
+
+
+def _class_field_order(cls: ast.ClassDef) -> list[str]:
+    fields = []
+    for st in cls.body:
+        if isinstance(st, ast.AnnAssign) and isinstance(
+            st.target, ast.Name
+        ):
+            fields.append(st.target.id)
+    return fields
+
+
+def _flatten_child_order(fn: ast.AST) -> list[str] | None:
+    """Field names in the children tuple of a flatten fn's return, or
+    None when the shape is not statically recognizable."""
+    if isinstance(fn, ast.Lambda):
+        ret = fn.body
+        param = fn.args.args[0].arg if fn.args.args else None
+    else:
+        rets = [
+            n
+            for n in _own_nodes(fn)
+            if isinstance(n, ast.Return) and n.value is not None
+        ]
+        if len(rets) != 1:
+            return None
+        ret = rets[0].value
+        param = fn.args.args[0].arg if fn.args.args else None
+    if not (isinstance(ret, ast.Tuple) and len(ret.elts) == 2):
+        return None
+    children = ret.elts[0]
+    if not isinstance(children, (ast.Tuple, ast.List)):
+        return None
+    order = []
+    for el in children.elts:
+        if (
+            isinstance(el, ast.Attribute)
+            and isinstance(el.value, ast.Name)
+            and el.value.id == param
+        ):
+            order.append(el.attr)
+        else:
+            return None
+    return order
+
+
+def check_jx005(
+    contexts: list[FileContext], registry: dict
+) -> list[Finding]:
+    out: list[Finding] = []
+    for ctx in contexts:
+        classes = {
+            n.name: n
+            for n in ast.walk(ctx.tree)
+            if isinstance(n, ast.ClassDef)
+        }
+        defs = {
+            f.node.name: f.node
+            for f in ctx.functions
+            if isinstance(f.node, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = ctx.resolve(dotted_name(node.func)) or ""
+            if last_segment(name) != "register_pytree_node":
+                continue
+            if len(node.args) < 3:
+                continue
+            cls_arg, flat_arg, _ = node.args[:3]
+            cls = (
+                classes.get(cls_arg.id)
+                if isinstance(cls_arg, ast.Name)
+                else None
+            )
+            if cls is None:
+                continue
+            fields = _class_field_order(cls)
+            if not fields:
+                continue
+            flat_fn: ast.AST | None = None
+            if isinstance(flat_arg, ast.Lambda):
+                flat_fn = flat_arg
+            elif isinstance(flat_arg, ast.Name):
+                flat_fn = defs.get(flat_arg.id)
+            if flat_fn is None:
+                continue
+            order = _flatten_child_order(flat_fn)
+            if order is None:
+                continue
+            missing = [f for f in fields if f not in order]
+            declared_order = [f for f in fields if f in order]
+            if missing:
+                out.append(
+                    ctx.finding(
+                        "JX005",
+                        node,
+                        "",
+                        f"flatten for `{cls.name}` drops field(s) "
+                        f"{missing} — they silently vanish from every "
+                        f"tree_map/jit boundary",
+                    )
+                )
+            elif order != declared_order:
+                out.append(
+                    ctx.finding(
+                        "JX005",
+                        node,
+                        "",
+                        f"flatten children order {order} does not match "
+                        f"`{cls.name}` field declaration order "
+                        f"{declared_order} — unflatten will scramble "
+                        f"fields",
+                    )
+                )
+    return out
+
+
+ALL_CHECKS = (
+    check_jx000,
+    check_jx001,
+    check_jx002,
+    check_jx003,
+    check_jx004,
+    check_jx005,
+)
